@@ -1,0 +1,70 @@
+"""Pallas kernel benchmarks (interpret mode on CPU — numbers are for
+relative comparison and CI tracking, not TPU projections; the roofline
+section of EXPERIMENTS.md carries the TPU-side analysis)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantized as Q
+from repro.kernels import ops
+from repro.kernels.dsbp_matmul import dsbp_matmul_kernel_call
+
+from .common import llama_like_activations, llama_like_weights, timed
+
+
+def bench_dsbp_matmul_kernel():
+    """Grouped-scale int GEMM kernel vs jnp reference (exactness + time)."""
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 1024, 128
+    ax = jnp.asarray(rng.integers(-2047, 2048, (m, k)), jnp.int32)
+    aw = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int32)
+    sx = jnp.asarray(np.exp2(rng.integers(-4, 4, (m, k // 64))), jnp.float32)
+    sw = jnp.asarray(np.exp2(rng.integers(-4, 4, (k // 64, n))), jnp.float32)
+    _, us_g = timed(lambda: dsbp_matmul_kernel_call(ax, sx, aw, sw, folded=False))
+    _, us_f = timed(lambda: dsbp_matmul_kernel_call(ax, sx, aw, sw, folded=True))
+    from repro.kernels.ref import grouped_scaled_matmul_ref
+    _, us_r = timed(lambda: grouped_scaled_matmul_ref(ax, sx, aw, sw))
+    return us_f, (f"grouped_us={us_g:.0f};folded_us={us_f:.0f};"
+                  f"jnp_ref_us={us_r:.0f};folded_speedup={us_g/us_f:.2f}x")
+
+
+def bench_fp8_quant_align_kernel():
+    from repro.core.dsbp import DSBPConfig
+    from repro.core.formats import per_tensor_scale
+    from repro.kernels.fp8_quant_align import fp8_quant_align_kernel_call
+    x = jnp.asarray(llama_like_activations((256, 1024)))
+    cfg = DSBPConfig(fmt="e4m3", side="input", k=2.0, b_fix=4)
+    ts = per_tensor_scale(x, "e4m3")
+    _, us = timed(lambda: fp8_quant_align_kernel_call(x * ts, cfg))
+    from repro.kernels.ref import quant_align_ref
+    _, us_r = timed(lambda: quant_align_ref(x * ts, cfg))
+    return us, f"kernel_us={us:.0f};jnp_ref_us={us_r:.0f}"
+
+
+def bench_flash_attention_kernel():
+    from repro.kernels.flash_attention import flash_attention_kernel_call
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((256, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
+    _, us = timed(lambda: flash_attention_kernel_call(q, k, v, causal=True))
+    from repro.kernels.ref import flash_attention_ref
+    _, us_r = timed(lambda: flash_attention_ref(q[None, None], k[None, None],
+                                                v[None, None]))
+    return us, f"kernel_us={us:.0f};naive_ref_us={us_r:.0f}"
+
+
+def bench_e2e_quantized_layer():
+    """Full DSBP layer through both kernels vs the f32 einsum GEMM."""
+    x = jnp.asarray(llama_like_activations((128, 2048), 3))
+    w = jnp.asarray(llama_like_weights((2048, 128), 4))
+    cfg = Q.PRESETS["efficient"]
+    _, us_k = timed(lambda: ops.dsbp_matmul(x, w, cfg))
+    _, us_f = timed(lambda: jnp.einsum("mk,kn->mn", x, w))
+    y_k = np.asarray(ops.dsbp_matmul(x, w, cfg))
+    y_r = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
+    exact = float(np.abs(y_k - y_r).max() / (np.abs(y_r).max() + 1e-9))
+    return us_k, (f"kernel_us={us_k:.0f};f32_gemm_us={us_f:.0f};"
+                  f"vs_core_ref_relerr={exact:.1e}")

@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import bench_kernels, bench_paper
+
+BENCHES = [
+    ("fig6_bitwidth_accuracy", bench_paper.bench_fig6_bitwidth_accuracy),
+    ("fig7_pareto", bench_paper.bench_fig7_pareto),
+    ("table1_throughput_efficiency", bench_paper.bench_table1_throughput_efficiency),
+    ("table2_sota_comparison", bench_paper.bench_table2_sota_comparison),
+    ("fig8_breakdown", bench_paper.bench_fig8_breakdown),
+    ("fiau_vs_barrel", bench_paper.bench_fiau_vs_barrel),
+    ("kernel_dsbp_matmul", bench_kernels.bench_dsbp_matmul_kernel),
+    ("kernel_fp8_quant_align", bench_kernels.bench_fp8_quant_align_kernel),
+    ("kernel_flash_attention", bench_kernels.bench_flash_attention_kernel),
+    ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,{traceback.format_exc(limit=2)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

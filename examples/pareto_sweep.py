@@ -1,0 +1,68 @@
+"""(k, B_fix) hyperparameter exploration — the paper's Fig. 7 sweep as CSV.
+
+Sweeps the DSBP knobs over Llama-like layer data and emits
+(k, b_fix_in, b_fix_w, avg_I, avg_W, sqnr_db, tflops_per_w) rows, marking
+the Pareto frontier.  This is the offline exploration loop the paper
+describes for choosing Precise/Efficient configurations.
+
+  PYTHONPATH=src python examples/pareto_sweep.py > pareto.csv
+"""
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy as E
+from repro.core import quantized as Q
+from repro.core.dsbp import DSBPConfig
+
+
+def llama_like(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x * rng.lognormal(0, 1.2, shape[-1]).astype(np.float32)
+
+
+def main():
+    x = jnp.asarray(llama_like((128, 2048), 0))
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((2048, 128))
+                    .astype(np.float32) * 0.03)
+    exact = np.asarray(x) @ np.asarray(w)
+
+    rows = []
+    for k in (0.0, 0.5, 1.0, 1.5, 2.0):
+        for b_in in (3, 4, 5, 6, 7):
+            for b_w in (3, 4, 5):
+                cfg = Q.QuantizedMatmulConfig(
+                    input_cfg=DSBPConfig(fmt="e4m3", side="input",
+                                         mode="dsbp", k=k, b_fix=b_in),
+                    weight_cfg=DSBPConfig(fmt="e2m5", side="weight", mode="dsbp",
+                                          k=k, b_fix=b_w,
+                                          scale_granularity="row"),
+                )
+                y = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
+                st = jax.tree.map(float, Q.matmul_stats(x, w, cfg))
+                err = np.abs(y - exact)
+                sqnr = 10 * np.log10((exact**2).mean() / (err**2).mean())
+                eff = E.efficiency_tops_per_w(st["avg_i_bits"],
+                                              st["avg_w_bits"], "fp_dsbp")
+                rows.append((k, b_in, b_w, st["avg_i_bits"], st["avg_w_bits"],
+                             sqnr, eff))
+
+    pareto = set()
+    for i, r in enumerate(rows):
+        if not any(o[5] >= r[5] and o[6] > r[6] or o[5] > r[5] and o[6] >= r[6]
+                   for o in rows):
+            pareto.add(i)
+
+    print("k,b_fix_in,b_fix_w,avg_I,avg_W,sqnr_db,tflops_per_w,pareto")
+    for i, r in enumerate(rows):
+        print(f"{r[0]},{r[1]},{r[2]},{r[3]:.2f},{r[4]:.2f},{r[5]:.2f},"
+              f"{r[6]:.1f},{int(i in pareto)}")
+    print(f"# {len(pareto)} Pareto-optimal of {len(rows)} configs",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end training driver: train an LM with checkpoint/restart and
+(optionally) DSBP-QAT projections, on the synthetic pipeline.
+
+Defaults fit this CPU container (a ~6M-param llama-family model, 300 steps,
+loss drops from ~ln(V)≈6.2 to <3.5).  ``--preset 100m`` selects a ~100M
+configuration for real hardware.
+
+  PYTHONPATH=src python examples/train_e2e.py --steps 300
+  PYTHONPATH=src python examples/train_e2e.py --quant precise --steps 100
+  PYTHONPATH=src python examples/train_e2e.py --preset 100m --steps 500
+"""
+import argparse
+
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+PRESETS = {
+    "tiny": dict(d_model=256, n_layers=4, n_heads=4, n_kv_heads=2, d_head=64,
+                 d_ff=512, vocab_size=2048),
+    "100m": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4, d_head=64,
+                 d_ff=2048, vocab_size=32000),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "precise", "efficient"])
+    ap.add_argument("--ckpt", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+
+    cfg = get_config("llama-7b-paper").replace(
+        **PRESETS[args.preset], quant=args.quant, remat=False,
+        pattern=("attn_full",),
+    )
+    n = cfg.param_count()
+    print(f"model: {n/1e6:.1f}M params, quant={args.quant}")
+
+    trainer = Trainer(
+        cfg,
+        TrainConfig(steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=100,
+                    log_every=10),
+        adamw.AdamWConfig(lr_peak=args.lr, warmup_steps=30,
+                          total_steps=args.steps),
+        DataConfig(seed=0, batch_size=args.batch, seq_len=args.seq),
+    )
+    params, _, hist = trainer.run(
+        on_metrics=lambda s, m: print(
+            f"step {s:5d}  loss {m['loss']:.4f}  {m['step_time_s']*1e3:.0f} ms"
+            + (f"  [stragglers: {m['stragglers']}]" if m["stragglers"] else "")
+        )
+    )
+    print(f"\nfinal loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
+          f"checkpoints in {args.ckpt}")
+    assert hist[-1] < hist[0] - 0.5, "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — Variable-Mantissa FP8 (DSBP) training/inference framework in JAX.
+
+Paper: "Balancing FP8 Computation Accuracy and Efficiency on Digital CIM via
+Shift-Aware On-the-fly Aligned-Mantissa Bitwidth Prediction".
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""DeepSeek-Coder-33B: llama-architecture dense decoder.
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256. [arXiv:2401.14196; hf]
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=19200,
+    vocab_size=32_256,
+    pattern=("attn_full",),
+    source="arXiv:2401.14196; hf",
+)

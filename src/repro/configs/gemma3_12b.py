@@ -1,0 +1,24 @@
+"""Gemma3-12B: dense decoder, 5:1 local:global attention, 128k context.
+
+48L d_model=3840 16H (GQA kv=8, head_dim=256) d_ff=15360 vocab=262144.
+[hf:google/gemma-3-12b-pt; unverified]  Local layers use a 1024-token
+sliding window; every 6th layer is global.  Embeddings tied (Gemma family).
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=256,
+    d_ff=15360,
+    vocab_size=262_144,
+    pattern=("attn_local",) * 5 + ("attn_full",),
+    window=1024,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    source="hf:google/gemma-3-12b-pt; unverified",
+)

@@ -1,0 +1,22 @@
+"""Grok-1 (314B): sparse MoE decoder, 8 experts top-2.
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072.
+[hf:xai-org/grok-1; unverified]
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=32768,
+    vocab_size=131_072,
+    pattern=("attn_full",),
+    n_experts=8,
+    top_k=2,
+    source="hf:xai-org/grok-1; unverified",
+)

@@ -1,0 +1,22 @@
+"""Llama-7b: the paper's own evaluation model (§III-A, Fig. 6/7, Table I).
+
+32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000. [arXiv:2302.13971]
+Quantized per [10] (LLM-FP4 recipe): inputs E4M3/E5M2, weights E2M5 —
+this config carries the paper's "Precise" DSBP preset by default.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-7b-paper",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=128,
+    d_ff=11008,
+    vocab_size=32_000,
+    pattern=("attn_full",),
+    quant="precise",
+    source="arXiv:2302.13971; paper §III",
+)

@@ -1,0 +1,24 @@
+"""LLaVA-NeXT-34B: VLM; the 34B LM backbone with anyres patch tokens.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+[hf:llava-hf/llava-v1.6-34b-hf; unverified]  The vision tower + anyres
+tiling is a STUB: input_specs provide precomputed patch embeddings
+(B, n_image_tokens=2880, d_model) prepended to the text sequence.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=20480,
+    vocab_size=64_000,
+    pattern=("attn_full",),
+    frontend="vlm_patches",
+    n_image_tokens=2880,
+    source="hf:llava-hf/llava-v1.6-34b-hf; unverified",
+)

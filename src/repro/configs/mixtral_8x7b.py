@@ -1,0 +1,23 @@
+"""Mixtral-8x7B: sparse MoE decoder, 8 experts top-2, sliding-window attn.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+[arXiv:2401.04088; hf]  SWA window 4096 on every layer.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab_size=32_000,
+    pattern=("attn_local",),
+    window=4096,
+    n_experts=8,
+    top_k=2,
+    source="arXiv:2401.04088; hf",
+)

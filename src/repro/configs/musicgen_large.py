@@ -1,0 +1,25 @@
+"""MusicGen-large: decoder-only transformer over EnCodec tokens.
+
+48L d_model=2048 32H (MHA: kv=32) d_ff=8192 vocab=2048 per codebook.
+[arXiv:2306.05284; hf:facebook/musicgen-large]  The EnCodec frontend is a
+STUB: input_specs provide the (B, S, K=4) codebook token ids; the model sums
+K codebook embeddings and predicts K heads per step (delay pattern handled
+by the data pipeline, not the backbone).
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=64,
+    d_ff=8192,
+    vocab_size=2048,
+    pattern=("attn_full",),
+    frontend="audio_codebooks",
+    n_codebooks=4,
+    source="arXiv:2306.05284; hf",
+)

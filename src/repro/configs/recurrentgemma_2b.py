@@ -1,0 +1,24 @@
+"""RecurrentGemma-2B (Griffin): RG-LRU + local attention, 2:1 pattern.
+
+26L d_model=2560 10H (GQA kv=1, head_dim=256) d_ff=7680 vocab=256000.
+[arXiv:2402.19427; hf]  Pattern: (recurrent, recurrent, local-attn) x 8 + 2
+recurrent tail; window 2048; embeddings tied.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    pattern=("rglru", "rglru", "attn_local"),
+    window=2048,
+    rnn_width=2560,
+    tie_embeddings=True,
+    source="arXiv:2402.19427; hf",
+)

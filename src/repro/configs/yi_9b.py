@@ -1,0 +1,19 @@
+"""Yi-9B: llama-architecture dense decoder with GQA.
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000. [arXiv:2403.04652; hf]
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=11008,
+    vocab_size=64_000,
+    pattern=("attn_full",),
+    source="arXiv:2403.04652; hf",
+)

@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — FP8 codecs, DSBP, and the macro models."""
+from . import dsbp, energy, fiau, formats, mac_array, mpu, quantized  # noqa: F401
+from .dsbp import DSBPConfig, dsbp_quantize  # noqa: F401
+from .formats import FP8_FORMATS, FPFormat, decompose, get_format, quantize  # noqa: F401
+from .quantized import (  # noqa: F401
+    PRESETS,
+    QuantizedMatmulConfig,
+    dsbp_matmul,
+    dsbp_matmul_ref,
+    dsbp_matmul_ste,
+    matmul_stats,
+)

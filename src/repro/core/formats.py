@@ -1,0 +1,171 @@
+"""Bit-exact minifloat (FP8-family) codecs in pure JAX.
+
+The paper's DSBP algorithm consumes the (sign, exponent, mantissa) fields of
+FP8-quantized tensors in any of the four FP8 formats (E2M5/E3M4/E4M3/E5M2).
+This module provides a generic EeMm codec with
+
+  * round-to-nearest-even quantization (saturating, "fn"-style: no inf),
+  * subnormal support,
+  * exact field extraction (unbiased exponent + integer significand),
+
+implemented with vectorized float/int ops only (no Python loops), so it can
+run inside jit and inside Pallas kernels.  E4M3/E5M2 are cross-validated
+against ``ml_dtypes`` in tests/test_formats.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FPFormat",
+    "FP8_FORMATS",
+    "get_format",
+    "quantize",
+    "decompose",
+    "fields_to_value",
+    "per_tensor_scale",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """A saturating minifloat format: 1 sign bit + ``ebits`` + ``mbits``."""
+
+    name: str
+    ebits: int
+    mbits: int
+    # max finite value; formats that reserve encodings (e4m3fn) override it.
+    max_value: float
+    bias: int
+
+    @property
+    def emin(self) -> int:
+        """Unbiased exponent of the smallest *normal* binade."""
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        """Unbiased exponent of the largest binade."""
+        return (1 << self.ebits) - 1 - self.bias
+
+    @property
+    def tiny(self) -> float:
+        """Smallest positive subnormal."""
+        return 2.0 ** (self.emin - self.mbits)
+
+    def __str__(self) -> str:  # pragma: no cover
+        return self.name
+
+
+def _mk(name: str, ebits: int, mbits: int, max_value: float | None = None) -> FPFormat:
+    bias = (1 << (ebits - 1)) - 1
+    if max_value is None:
+        emax = (1 << ebits) - 1 - bias
+        max_value = (2.0 - 2.0 ** (-mbits)) * (2.0 ** emax)
+    return FPFormat(name, ebits, mbits, float(max_value), bias)
+
+
+# The four FP8 formats used by the paper (Fig. 1) plus the two fixed
+# alignment-target formats from Table I (E5M3/E5M7).  E4M3 follows the OCP
+# "fn" convention (max 448, no inf); E5M2 is saturated at its max normal.
+FP8_FORMATS: dict[str, FPFormat] = {
+    "e2m5": _mk("e2m5", 2, 5),
+    "e3m4": _mk("e3m4", 3, 4),
+    "e4m3": _mk("e4m3", 4, 3, max_value=448.0),
+    "e5m2": _mk("e5m2", 5, 2, max_value=57344.0),
+    "e5m3": _mk("e5m3", 5, 3),
+    "e5m7": _mk("e5m7", 5, 7),
+}
+
+
+def get_format(fmt: str | FPFormat) -> FPFormat:
+    if isinstance(fmt, FPFormat):
+        return fmt
+    try:
+        return FP8_FORMATS[fmt.lower()]
+    except KeyError as e:  # pragma: no cover
+        raise ValueError(f"unknown FP8 format {fmt!r}; have {list(FP8_FORMATS)}") from e
+
+
+def _floor_log2(ax: jax.Array) -> jax.Array:
+    """floor(log2(|x|)) for positive finite x, exact via frexp."""
+    _, e = jnp.frexp(ax)  # ax = m * 2**e with m in [0.5, 1)
+    return e - 1
+
+
+def exp2i(n: jax.Array) -> jax.Array:
+    """Exact 2**n (f32) for integer n in [-126, 127].
+
+    XLA:CPU lowers ``exp2`` to a polynomial approximation that is *not* exact
+    even at integer points, which breaks bit-exact codecs — so we build the
+    float from its bit pattern instead.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    bits = (n + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def quantize(x: jax.Array, fmt: str | FPFormat = "e4m3") -> jax.Array:
+    """Round ``x`` (f32) to the nearest representable value of ``fmt``.
+
+    Round-to-nearest-even; saturating at ±max_value; subnormals flush
+    gradually (true subnormal representation, not flush-to-zero).
+    """
+    f = get_format(fmt)
+    x = x.astype(jnp.float32)
+    ax = jnp.abs(x)
+    e = _floor_log2(jnp.where(ax > 0, ax, 1.0))
+    e = jnp.maximum(e, f.emin)  # subnormal binades share emin's step
+    step = exp2i(e - f.mbits)
+    q = jnp.round(x / step) * step  # jnp.round == round-half-even
+    q = jnp.clip(q, -f.max_value, f.max_value)
+    return jnp.where(ax > 0, q, x * 0.0)  # preserves signed zero
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def decompose(x: jax.Array, fmt: str | FPFormat = "e4m3"):
+    """Quantize to ``fmt`` and return the hardware-visible fields.
+
+    Returns a dict of arrays (same shape as x):
+      sign   : int32, +1 / -1
+      e_unb  : int32, unbiased exponent of the stored binade.  For
+               subnormals (and zero) this is ``fmt.emin``.
+      m_int  : int32, integer significand *including* the implicit bit:
+               value = sign * m_int * 2**(e_unb - mbits).
+               Normals have m_int in [2**mbits, 2**(mbits+1)); subnormals in
+               [0, 2**mbits).
+      value  : float32, the decoded (quantized) value.
+    """
+    f = get_format(fmt)
+    q = quantize(x, f)
+    aq = jnp.abs(q)
+    e = _floor_log2(jnp.where(aq > 0, aq, 1.0))
+    e = jnp.clip(e, f.emin, f.emax)
+    m = jnp.round(aq * exp2i(f.mbits - e)).astype(jnp.int32)
+    m = jnp.where(aq > 0, m, 0)
+    e = jnp.where(aq > 0, e, f.emin).astype(jnp.int32)
+    sign = jnp.where(q < 0, -1, 1).astype(jnp.int32)
+    return {"sign": sign, "e_unb": e, "m_int": m, "value": q}
+
+
+def fields_to_value(sign: jax.Array, e_unb: jax.Array, m_int: jax.Array, mbits: int) -> jax.Array:
+    """Inverse of :func:`decompose` (exact)."""
+    return sign.astype(jnp.float32) * m_int.astype(jnp.float32) * exp2i(e_unb - mbits)
+
+
+def per_tensor_scale(x: jax.Array, fmt: str | FPFormat, margin: float = 1.0) -> jax.Array:
+    """Power-of-two per-tensor scale mapping amax(x) into the format's range.
+
+    Power-of-two scales keep the DSBP exponent statistics exact (a scale is
+    just an exponent offset, exactly as the macro's INT-to-FP frontend does).
+    """
+    f = get_format(fmt)
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.where(amax > 0, amax, 1.0)
+    _, e = jnp.frexp(f.max_value * margin / amax)
+    return exp2i(e - 1)

@@ -1,0 +1,125 @@
+"""Precision-scalable INT MAC array — behavioural model (§II-D, Fig. 5).
+
+The macro is a 64×96 SRAM-based array of 64×2b MAC columns.  A W-bit weight
+(W ∈ {2,4,6,8}, 2's complement) is decomposed into W/2 two-bit slices stored
+in adjacent columns; per-column dot products with the (bit-serial) input are
+fused by shift-and-add:
+
+    w = Σ_j slice_j · 4**j,   slice_{top} signed (SNF=1), others unsigned,
+    acc(x·w) = Σ_j (x · slice_j) · 4**j.
+
+The 2/4/8b modes use the regular power-of-4 fusion path; the 6b mode fuses
+*three* columns (the paper's dedicated low-overhead red path).  A 4-2
+compressor + full-adder tree per column performs the 64-row reduction; here
+the tree is modeled as an exact integer sum (its structure only affects
+area/power, tracked in :mod:`repro.core.energy`).
+
+Everything is exact int32 math and verified against a plain integer matmul
+in tests/test_mac_array.py for all widths and input precisions 2–12b.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ArrayGeometry",
+    "GEOMETRY",
+    "slice_weights",
+    "fuse_columns",
+    "column_mac",
+    "mac_array_matmul",
+    "effective_output_columns",
+    "macro_cycles",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayGeometry:
+    rows: int = 64  # group size G: elements per MAC column
+    cols: int = 96  # physical 2b columns
+    ops_per_mac: int = 2  # multiply + accumulate
+
+
+GEOMETRY = ArrayGeometry()
+
+
+def slice_weights(w_int: jax.Array, width: int) -> tuple[jax.Array, jax.Array]:
+    """Decompose W-bit 2's-complement weights into 2b column slices.
+
+    Returns (slices, snf): ``slices[..., j]`` holds slice j (LSB-first),
+    values in [0,3] for unsigned slices and [-2,1] for the top (signed)
+    slice; ``snf[j]`` is the signed-number flag per slice position.
+    """
+    if width not in (2, 4, 6, 8):
+        raise ValueError(f"weight width must be 2/4/6/8, got {width}")
+    n = width // 2
+    lim = 1 << (width - 1)
+    w = jnp.asarray(w_int, jnp.int32)
+    u = jnp.where(w < 0, w + (1 << width), w)  # 2's-complement bits
+    slices = []
+    for j in range(n):
+        s = (u >> (2 * j)) & 3
+        if j == n - 1:  # top slice: signed 2-bit (SNF=1)
+            s = jnp.where(s >= 2, s - 4, s)
+        slices.append(s)
+    snf = jnp.asarray([j == n - 1 for j in range(n)])
+    del lim
+    return jnp.stack(slices, axis=-1), snf
+
+
+def fuse_columns(col_results: jax.Array, width: int) -> jax.Array:
+    """Shift-and-add fusion of per-slice column MACs (incl. the 6b path).
+
+    ``col_results[..., j]`` = dot(x, slice_j) over the 64 rows.  The fusion
+    weight of slice j is 4**j; for width=6 this fuses three columns
+    (1, 4, 16) — the paper's dedicated path — which is numerically the same
+    power-of-4 ladder, just an odd column count for the reuse mux.
+    """
+    n = width // 2
+    w4 = jnp.asarray([4**j for j in range(n)], jnp.int32)
+    return jnp.sum(col_results * w4, axis=-1)
+
+
+def column_mac(x_int: jax.Array, w_slices: jax.Array) -> jax.Array:
+    """Per-column 64-row dot products: (..., G) x (G, n_slices) -> (..., n_slices).
+
+    Inputs are bit-serial in hardware (I cycles/bit); numerically that is an
+    exact integer dot, computed here in one shot.
+    """
+    return jnp.einsum(
+        "...g,gs->...s", x_int.astype(jnp.int32), w_slices.astype(jnp.int32)
+    )
+
+
+@partial(jax.jit, static_argnames=("width",))
+def mac_array_matmul(x_int: jax.Array, w_int: jax.Array, width: int) -> jax.Array:
+    """Full-array GEMM through the slice/fuse datapath.
+
+    x_int: (..., G) aligned input mantissas (any 2-12b signed range)
+    w_int: (G, N) aligned weight mantissas in W-bit 2's complement
+    Returns (..., N) int32, bit-identical to ``x_int @ w_int``.
+    """
+    slices, _ = slice_weights(w_int, width)  # (G, N, n)
+    cols = jnp.einsum("...g,gns->...ns", x_int.astype(jnp.int32), slices)
+    return fuse_columns(cols, width)
+
+
+def effective_output_columns(width: int, geo: ArrayGeometry = GEOMETRY) -> int:
+    """Physical columns each hold one 2b slice -> outputs per array pass."""
+    return geo.cols // (width // 2)
+
+
+def macro_cycles(m: int, k: int, n: int, i_bits: int, w_bits: int,
+                 geo: ArrayGeometry = GEOMETRY) -> int:
+    """Cycles for an (m,k,n) GEMM on the macro.
+
+    Inputs stream bit-serially (i_bits cycles per activation vector); each
+    pass covers 64 reduction rows × (96/(W/2)) outputs.
+    """
+    passes_k = -(-k // geo.rows)
+    passes_n = -(-n // effective_output_columns(w_bits, geo))
+    return m * passes_k * passes_n * i_bits

@@ -1,0 +1,115 @@
+"""Bit-exact model of the Mantissa Prediction Unit (MPU), Fig. 3.
+
+The MPU evaluates Eq. (1) of the paper on 64 shift values per group with a
+3-stage pipeline:
+
+  Stage 1 — 64 parallel shift units:  shift_i >> shift_i  and  1 >> shift_i
+            (fixed-point: operands carry F fractional bits).
+  Stage 2 — two 64-input adder trees.
+  Stage 3 — division via an 8-bit reciprocal LUT (no divider), multiply by
+            k, add B_fix, saturate to 5 bits.
+
+This model is integer-exact: every intermediate is an int32 with a defined
+width, so it is a faithful behavioural model of the synthesized circuit.
+``repro.core.dsbp.predict_bdyn`` is its floating-point oracle; tests assert
+the LUT division error never moves the predicted bitwidth by more than one
+level and matches the oracle's ceil in ≥99% of random groups.
+
+Fixed-point conventions (documented per DESIGN.md §3):
+  F        = 12 fractional bits for the 2**-shift operands (shifts > 12
+             underflow to 0, exactly like the truncated hardware register).
+  LUT      = round(2**15 / d) for the 8-bit normalized divisor d∈[128,255].
+  k        = unsigned fixed point with KF=4 fractional bits.
+  ratio    carries Q=6 fractional bits into the k-multiplier.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dsbp import MAX_SHIFT
+
+__all__ = ["MPU_F", "MPU_KF", "MPU_Q", "reciprocal_lut", "mpu_ratio", "mpu_predict"]
+
+MPU_F = 12  # stage-1 fractional bits
+MPU_KF = 4  # k fractional bits
+MPU_Q = 6  # ratio fractional bits fed to the k multiplier
+_LUT_BITS = 15
+
+# 256-entry LUT; only indices 128..255 are reachable after normalization.
+_RECIP = np.zeros(256, np.int32)
+_RECIP[1:] = np.round((1 << _LUT_BITS) / np.arange(1, 256)).astype(np.int32)
+reciprocal_lut = jnp.asarray(_RECIP)
+
+
+def _stage1(shift: jax.Array, nz: jax.Array):
+    """shift_i >> shift_i and 1 >> shift_i at F fractional bits."""
+    s = jnp.clip(shift, 0, MAX_SHIFT).astype(jnp.int32)
+    num = jnp.where(nz, (s << MPU_F) >> s, 0)
+    den = jnp.where(nz, (1 << MPU_F) >> s, 0)
+    return num, den
+
+
+def _stage2(num: jax.Array, den: jax.Array):
+    """64-input adder trees (sums are exact in int32: < 2**23 / 2**19)."""
+    return jnp.sum(num, axis=-1), jnp.sum(den, axis=-1)
+
+
+def _normalize_u8(den_sum: jax.Array):
+    """den_sum = d * 2**t with d in [128, 255] (d=0 iff den_sum=0).
+
+    den_sum <= 64 * 2**F = 2**18: exactly representable in f32, so frexp
+    gives the exact MSB position (hardware: a priority encoder).
+    """
+    _, e = jnp.frexp(den_sum.astype(jnp.float32))  # den = m*2**e, m in [.5,1)
+    t = e - 8  # d = den >> t in [128,255]
+    d = jnp.where(
+        t >= 0,
+        den_sum >> jnp.maximum(t, 0),
+        den_sum << jnp.maximum(-t, 0),
+    )
+    d = jnp.where(den_sum > 0, jnp.clip(d, 1, 255), 0)
+    return d.astype(jnp.int32), t.astype(jnp.int32)
+
+
+def mpu_ratio(shift: jax.Array, nz: jax.Array) -> jax.Array:
+    """Stage 1-3a: the LUT-divided ratio with MPU_Q fractional bits (int32)."""
+    num, den = _stage2(*_stage1(shift, nz))
+    d, t = _normalize_u8(den)
+    recip = reciprocal_lut[d]
+    # num/den = num * recip / (2**LUT_BITS * 2**t); keep Q fractional bits.
+    # Each num_i = shift*2**F >> shift maxes out at shift∈{1,2}: 2**(F-1),
+    # so num_sum <= 64*2**(F-1) = 2**17 and recip <= 2**8 after
+    # normalization -> the product fits a 25-bit (int32) multiplier.
+    prod = num * recip
+    sh = _LUT_BITS + t - MPU_Q
+    ratio = jnp.where(sh >= 0, prod >> jnp.maximum(sh, 0), prod << jnp.maximum(-sh, 0))
+    ratio = jnp.where(den > 0, ratio, 0)
+    return ratio.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k_fixed", "b_fix", "ceil_output"))
+def mpu_predict(
+    shift: jax.Array,
+    nz: jax.Array,
+    k_fixed: int,
+    b_fix: int,
+    ceil_output: bool = True,
+) -> jax.Array:
+    """Full MPU: B_g = sat5( k * ratio + B_fix ).
+
+    ``k_fixed`` is k in MPU_KF-bit fixed point (e.g. k=2 -> 32).
+    ``ceil_output=True`` applies the input path's hardware round-up; the
+    weight path (offline) never goes through the MPU.
+    """
+    ratio = mpu_ratio(shift, nz)  # Q frac bits; <= 31*2**Q = 2**11
+    acc = k_fixed * ratio + (b_fix << (MPU_Q + MPU_KF))
+    frac = MPU_Q + MPU_KF
+    if ceil_output:
+        b = -((-acc) >> frac)  # ceil for non-negative acc
+    else:
+        b = (acc + (1 << (frac - 1))) >> frac
+    return jnp.clip(b, 0, 31).astype(jnp.int32)  # 5-bit saturation

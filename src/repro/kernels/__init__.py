@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the macro's perf-critical datapaths.
+
+  dsbp_matmul     — group-aligned INT GEMM with per-64-group scales (MXU)
+  fp8_quant_align — fused FP8 quantize + DSBP predict + align (VPU)
+  flash_attention — blockwise online-softmax attention for serving
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec) with its jnp oracle in
+ref.py and the jit'd public wrapper in ops.py.  Validated in interpret mode
+on CPU; compiled on TPU (REPRO_PALLAS_INTERPRET=0).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused FP8 quantize + DSBP predict + mantissa align.
+
+This is the macro's *input path* (max-exponent logic + MPU + FIAU) as one
+VPU kernel: a f32/bf16 tile comes in from HBM, and aligned integer
+mantissas + per-64-group scales + predicted bitwidths go out.  Fusing the
+three stages means the activations are read exactly once (the memory-term
+optimization for the serving path — see EXPERIMENTS.md §Perf).
+
+Implementation notes (TPU-friendly, no transcendentals):
+  * FP8 round-to-nearest-even is done with the same step-quantization as
+    repro.core.formats.quantize, but the exponent comes from the f32 bit
+    pattern (bitcast) instead of frexp, and 2**n from bit assembly — both
+    lower to pure VPU integer ops.
+  * the predictor is Eq. (1) vectorized in f32 (the bit-exact 8b-LUT MPU is
+    the DCIM circuit model; its ≤1-level deviation is characterized in
+    tests/test_mpu.py).
+  * groups (64) never straddle tiles, so there is no cross-tile reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dsbp import DSBPConfig, MAX_SHIFT
+from repro.core.formats import get_format
+
+GROUP = 64
+
+__all__ = ["fp8_quant_align_kernel_call", "GROUP"]
+
+
+def _exp2i(n):
+    """Exact 2**n via f32 bit assembly (n in [-126, 127])."""
+    return jax.lax.bitcast_convert_type(
+        (n.astype(jnp.int32) + 127) << 23, jnp.float32
+    )
+
+
+def _floor_log2(ax):
+    """Exponent field of |x| (normal f32 range; subnormal f32 -> emin clamp)."""
+    bits = jax.lax.bitcast_convert_type(ax, jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _kernel(x_ref, a_ref, s_ref, b_ref, *, cfg: DSBPConfig):
+    f = get_format(cfg.fmt)
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    ng = bk // GROUP
+
+    # ---- FP8 quantize (RNE, saturating) + field extraction ----
+    ax = jnp.abs(x)
+    e = jnp.maximum(_floor_log2(jnp.where(ax > 0, ax, 1.0)), f.emin)
+    step = _exp2i(e - f.mbits)
+    q = jnp.clip(jnp.round(x / step) * step, -f.max_value, f.max_value)
+    q = jnp.where(ax > 0, q, 0.0)
+    aq = jnp.abs(q)
+    e_unb = jnp.clip(_floor_log2(jnp.where(aq > 0, aq, 1.0)), f.emin, f.emax)
+    m_int = jnp.round(aq * _exp2i(f.mbits - e_unb))
+    nz = aq > 0
+    e_unb = jnp.where(nz, e_unb, f.emin)
+
+    # ---- group max-exponent + shifts (the max-exponent logic) ----
+    eg = e_unb.reshape(bm, ng, GROUP)
+    nzg = nz.reshape(bm, ng, GROUP)
+    e_eff = jnp.where(nzg, eg, -(2**30))
+    e_max = jnp.max(e_eff, axis=-1)
+    e_max = jnp.where(jnp.any(nzg, axis=-1), e_max, 0)
+    shift = jnp.clip(e_max[:, :, None] - eg, 0, MAX_SHIFT)
+    shift = jnp.where(nzg, shift, MAX_SHIFT)
+
+    # ---- MPU: Eq. (1) on the VPU ----
+    if cfg.mode == "fixed":
+        b = jnp.full((bm, ng), cfg.b_fix, jnp.int32)
+    else:
+        w = _exp2i(-shift) * nzg.astype(jnp.float32)
+        num = jnp.sum(shift.astype(jnp.float32) * w, axis=-1)
+        den = jnp.sum(w, axis=-1)
+        ratio = jnp.where(den > 0, num / jnp.maximum(den, 1e-30), 0.0)
+        b = jnp.clip(jnp.ceil(cfg.k * ratio + cfg.b_fix), 1, 11).astype(jnp.int32)
+
+    # ---- FIAU: align to (B+1)-bit signed ints sharing 2**(e_max-(B-1)) ----
+    sign = jnp.where(q < 0, -1.0, 1.0).reshape(bm, ng, GROUP)
+    mag = sign * m_int.reshape(bm, ng, GROUP) * _exp2i(
+        b[:, :, None] - 1 - shift - f.mbits
+    )
+    lim = _exp2i(b[:, :, None])
+    if cfg.mantissa_rounding == "rne":
+        a = jnp.clip(jnp.round(mag), -(lim - 1.0), lim - 1.0)
+    else:
+        a = jnp.clip(jnp.floor(mag), -lim, lim - 1.0)
+
+    a_ref[...] = a.reshape(bm, bk).astype(a_ref.dtype)
+    s_ref[...] = _exp2i(e_max - (b - 1))
+    b_ref[...] = b
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
+def fp8_quant_align_kernel_call(
+    x: jax.Array,
+    cfg: DSBPConfig,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    interpret: bool = True,
+):
+    """x (M, K) f32 (pre-scaled by the per-tensor scale) ->
+    (a (M,K) int32, scale (M,K//64) f32, bits (M,K//64) int32)."""
+    m, k = x.shape
+    assert k % GROUP == 0
+    bm, bk = min(bm, m), min(bk, k)
+    assert m % bm == 0 and k % bk == 0 and bk % GROUP == 0
+    ng, bng = k // GROUP, bk // GROUP
+    return pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg),
+        grid=(m // bm, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bng), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bng), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m, ng), jnp.float32),
+            jax.ShapeDtypeStruct((m, ng), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)

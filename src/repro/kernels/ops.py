@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+kernel body runs in Python op-by-op); on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile them.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsbp import DSBPConfig
+from repro.core.formats import per_tensor_scale
+from repro.core.quantized import QuantizedMatmulConfig, quantize_weights
+
+from . import dsbp_matmul as _dm
+from . import fp8_quant_align as _qa
+from . import flash_attention as _fa
+
+__all__ = ["interpret_default", "dsbp_matmul", "fp8_quant_align", "flash_attention"]
+
+
+def interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "folded"))
+def fp8_quant_align(x: jax.Array, cfg: DSBPConfig, interpret: bool | None = None,
+                    folded: bool = False):
+    """On-the-fly input path: (M,K) f32 -> aligned ints, scales, bits."""
+    del folded
+    if interpret is None:
+        interpret = interpret_default()
+    ts = per_tensor_scale(x, cfg.fmt)
+    a, s, b = _qa.fp8_quant_align_kernel_call(x * ts, cfg, interpret=interpret)
+    return {"a": a, "scale": s, "bits": b, "tscale": ts}
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret", "folded"))
+def dsbp_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: QuantizedMatmulConfig,
+    interpret: bool | None = None,
+    folded: bool = True,
+):
+    """Full DSBP GEMM through both kernels: x (..., K) @ w (K, N) -> f32.
+
+    Weights are quantized offline per call here for convenience; in the
+    serving engine the packed (aw, sw) pair is precomputed once
+    (repro.serve.engine caches it), which is where the memory saving lands.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    batch = x.shape[:-1]
+    k = x.shape[-1]
+    xm = x.reshape(-1, k).astype(jnp.float32)
+    qx = fp8_quant_align(xm, cfg.input_cfg, interpret=interpret)
+    qw = quantize_weights(w, cfg.weight_cfg)  # (N, ng, G) layout
+    n = w.shape[-1]
+    ng = qw["a"].shape[1]
+    aw = qw["a"].reshape(n, ng * _dm.GROUP).T  # (K', N)
+    sw = qw["scale"].T  # (ng, N)
+    y = _dm.dsbp_matmul_kernel_call(
+        qx["a"], qx["scale"], aw, sw, interpret=interpret, folded=folded
+    )
+    tw = qw["tscale"].reshape(1, -1) if jnp.ndim(qw["tscale"]) else qw["tscale"]
+    return (y / (qx["tscale"] * tw)).reshape(*batch, n)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, interpret=None,
+                    bq=128, bkv=128):
+    """(B, Hq, Sq, D) x (B, Hkv, S, D) GQA flash attention via vmap."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, sq, d)
+
+    def one(qh, kh, vh):
+        return _fa.flash_attention_kernel_call(
+            qh, kh, vh, causal=causal, window=window, bq=bq, bkv=bkv,
+            interpret=interpret,
+        )
+
+    f = jax.vmap(jax.vmap(one, in_axes=(0, None, None)), in_axes=(0, 0, 0))
+    out = jax.vmap(f, in_axes=(0, 0, 0))(qg, k, v)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels (the "golden" numerics).
+
+Every kernel in this package must match its oracle bit-for-bit (integer
+outputs) or to f32 round-off (float outputs) across the shape/dtype sweeps
+in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsbp as D
+from repro.core.dsbp import DSBPConfig
+from repro.core.formats import exp2i, get_format
+
+__all__ = [
+    "grouped_scaled_matmul_ref",
+    "quant_align_ref",
+    "flash_attention_ref",
+]
+
+
+def grouped_scaled_matmul_ref(ax, sx, aw, sw, group: int = 64):
+    """Oracle for kernels.dsbp_matmul.
+
+    ax: (M, K) int  aligned input mantissas
+    sx: (M, K//group) f32 per-(row, group) scales
+    aw: (K, N) int  aligned weight mantissas
+    sw: (K//group, N) f32 per-(group, col) scales
+    returns (M, N) f32:  Σ_g sx[m,g]·sw[g,n]·Σ_i ax[m,g*G+i]·aw[g*G+i,n]
+    """
+    m, k = ax.shape
+    n = aw.shape[1]
+    ng = k // group
+    a = ax.reshape(m, ng, group).astype(jnp.float32)
+    b = aw.reshape(ng, group, n).astype(jnp.float32)
+    part = jnp.einsum("mgi,gin->mgn", a, b)  # exact: int products in f32
+    return jnp.einsum("mgn,mg,gn->mn", part, sx, sw)
+
+
+def quant_align_ref(x, cfg: DSBPConfig):
+    """Oracle for kernels.fp8_quant_align: the on-the-fly input path.
+
+    x: (M, K) f32, already multiplied by the per-tensor scale.
+    Returns (a, scale, bits):
+      a (M, K) int32 aligned mantissas, scale (M, K//G) f32, bits (M, K//G).
+
+    Matches core.dsbp.dsbp_quantize with the 'mpu' float predictor (the
+    TPU kernel vectorizes Eq. 1 on the VPU; the 8b-LUT fixed-point MPU is
+    the DCIM circuit model, see DESIGN.md §4).
+    """
+    f = get_format(cfg.fmt)
+    from repro.core.formats import decompose
+
+    fields = decompose(x, f)
+    sign = D.group_reshape(fields["sign"], cfg.group_size)
+    e_unb = D.group_reshape(fields["e_unb"], cfg.group_size)
+    m_int = D.group_reshape(fields["m_int"], cfg.group_size)
+    shift, e_max, nz = D.group_shifts(e_unb, m_int)
+    if cfg.mode == "fixed":
+        b = jnp.full(shift.shape[:-1], cfg.b_fix, jnp.int32)
+    else:
+        ratio = D.predict_bdyn(shift, nz)
+        b = D.round_to_valid_input(cfg.k * ratio + cfg.b_fix)
+    a, scale = D.align_group(
+        sign, e_unb, m_int, f.mbits, shift, e_max, b, cfg.mantissa_rounding
+    )
+    m, ng = a.shape[0], a.shape[1]
+    return a.reshape(m, ng * cfg.group_size), scale, b
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Naive softmax attention oracle (f32).
+
+    q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D); GQA via head repeat.
+    window: sliding-window size (None = full); causal offsets assume the
+    queries are the last Sq positions of the Skv-long sequence.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    skv = k.shape[2]
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

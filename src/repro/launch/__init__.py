@@ -1,0 +1,5 @@
+"""Launchers: mesh builders, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time.
+"""
+from . import mesh  # noqa: F401

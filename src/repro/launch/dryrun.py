@@ -1,0 +1,256 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so the production meshes can build.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+Each cell prints memory_analysis() (proves per-device fit) and
+cost_analysis() (FLOPs/bytes for §Roofline) and, with --out, dumps a json
+record including the parsed collective-byte totals.
+"""
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import sharding as SH
+from repro.parallel.context import sharding_ctx
+from repro.roofline.analysis import correct_for_scan, raw_costs, roofline_record
+from repro.train.trainer import train_step
+
+DEFAULT_CELL_ARCHS = [a for a in ARCH_IDS if a != "llama-7b-paper"]
+
+
+def arch_for_dryrun(name: str, shape_name: str, unroll: int = 1):
+    cfg = get_config(name).replace(dtype="bfloat16", remat=True,
+                                   scan_unroll=unroll)
+    if SHAPES[shape_name].kind != "train":
+        cfg = cfg.replace(remat=False)
+        if cfg.n_experts:
+            cfg = cfg.replace(moe_group=256)  # bound the no-drop dispatch tensor
+    if os.environ.get("REPRO_SSD_CHUNK"):
+        cfg = cfg.replace(ssd_chunk=int(os.environ["REPRO_SSD_CHUNK"]))
+    return cfg
+
+
+def packed_like(params_sds):
+    """ShapeDtypeStructs of the DSBP-packed weight tree (serve §Perf-3)."""
+    from repro.parallel.context import _GATHERED
+
+    def pack(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name not in _GATHERED or name == "router" or leaf.ndim < 2 or \
+                leaf.shape[-2] < 64:
+            return leaf
+        *lead, k, n = leaf.shape
+        ng = -(-k // 64)
+        return {
+            "a": jax.ShapeDtypeStruct((*lead, n, ng, 64), jnp.int8),
+            "scale": jax.ShapeDtypeStruct((*lead, n, ng), jnp.float32),
+            "tscale": jax.ShapeDtypeStruct((*lead, n, 1), jnp.float32),
+        }
+
+    return jax.tree_util.tree_map_with_path(pack, params_sds)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cfg = arch_for_dryrun(arch, shape_name)
+    suite = SHAPES[shape_name]
+    b, s = suite.global_batch, suite.seq_len
+    i32 = jnp.int32
+    if suite.kind == "train":
+        if cfg.frontend == "audio_codebooks":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), i32)}
+        elif cfg.frontend == "vlm_patches":
+            s_txt = s - cfg.n_image_tokens
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s_txt), i32),
+                "labels": jax.ShapeDtypeStruct((b, s_txt), i32),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"batch": batch}
+    if suite.kind == "prefill":
+        if cfg.frontend == "audio_codebooks":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s, cfg.n_codebooks), i32)}
+        elif cfg.frontend == "vlm_patches":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.n_image_tokens), i32),
+                "image_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.frontend == "audio_codebooks" else (b, 1)
+    cache = jax.eval_shape(partial(M.init_cache, cfg, b, s))
+    return {
+        "token": {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)},
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def _opt_cfg(arch: str):
+    # grok on one pod needs the low-mem optimizer preset (DESIGN.md §6)
+    if arch.startswith("grok"):
+        return adamw.AdamWConfig(m_dtype="bfloat16", v_dtype="float32",
+                                 master_dtype=None)
+    return adamw.AdamWConfig(master_dtype=None)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True,
+               unroll: int = 1):
+    """Build shardings, lower, compile; returns (compiled, lowered, meta)."""
+    cfg = arch_for_dryrun(arch, shape_name, unroll)
+    suite = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    params_sds = jax.eval_shape(partial(M.init, cfg=cfg), jax.random.PRNGKey(0))
+    if os.environ.get("REPRO_PACKED") == "1" and suite.kind != "train":
+        params_sds = packed_like(params_sds)
+    p_sh = SH.named(mesh, SH.param_pspecs(params_sds, mesh))
+
+    if suite.kind == "train":
+        ocfg = _opt_cfg(arch)
+        opt_sds = jax.eval_shape(partial(adamw.init_state, cfg=ocfg), params_sds)
+        o_ps = SH.param_pspecs(params_sds, mesh)
+        o_sh = SH.named(mesh, {
+            "step": P(),
+            "m": o_ps, "v": o_ps,
+        } if "master" not in opt_sds else {
+            "step": P(), "m": o_ps, "v": o_ps, "master": o_ps,
+        })
+        b_sh = SH.named(mesh, SH.batch_pspecs(specs["batch"], mesh))
+        fn = jax.jit(
+            partial(train_step, cfg=cfg, opt_cfg=ocfg),
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, specs["batch"])
+    elif suite.kind == "prefill":
+        b_sh = SH.named(mesh, SH.batch_pspecs(specs["batch"], mesh))
+        fn = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_len=suite.seq_len),
+            in_shardings=(p_sh, b_sh),
+        )
+        args = (params_sds, specs["batch"])
+    else:  # decode
+        c_sh = SH.named(mesh, SH.cache_pspecs(specs["cache"], mesh,
+                                              suite.global_batch))
+        t_sh = SH.named(mesh, SH.batch_pspecs(specs["token"], mesh))
+        fn = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg),
+            in_shardings=(p_sh, t_sh, c_sh, None),
+            donate_argnums=(2,),
+        )
+        args = (params_sds, specs["token"], specs["cache"], specs["pos"])
+
+    t0 = time.monotonic()
+    with sharding_ctx(mesh, SH.batch_axes(mesh),
+                      gather=(suite.kind != "decode")):
+        lowered = fn.lower(*args)
+    t1 = time.monotonic()
+    compiled = lowered.compile()
+    t2 = time.monotonic()
+    meta = {"lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1)}
+    if verbose:
+        print(f"[{arch} x {shape_name}] unroll={unroll} "
+              f"lowered {meta['lower_s']}s, compiled {meta['compile_s']}s")
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    return compiled, lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str | None,
+             verbose=True, skip_existing=False):
+    if out_dir:
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        if skip_existing and os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    cfg = arch_for_dryrun(arch, shape_name)
+    with mesh:
+        compiled, _, meta = lower_cell(arch, shape_name, mesh, verbose, unroll=1)
+        u1 = raw_costs(compiled)
+        mem = compiled.memory_analysis()
+        if mesh_kind == "single" and cfg.n_units > 1:
+            # second lowering at unroll=2: the delta gives per-unit costs
+            compiled2, _, meta2 = lower_cell(arch, shape_name, mesh, verbose,
+                                             unroll=2)
+            u2 = raw_costs(compiled2)
+            costs = correct_for_scan(u1, u2, cfg.n_units)
+            meta["compile2_s"] = meta2["compile_s"]
+        else:
+            costs = correct_for_scan(u1, u1, 1)
+    rec = roofline_record(
+        arch=arch, shape=shape_name, mesh=mesh_kind,
+        n_devices=512 if multi else 256, costs=costs, mem_stats=mem,
+        cfg=cfg, suite=SHAPES[shape_name],
+    )
+    rec.update(meta)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [
+            (a, s) for a in DEFAULT_CELL_ARCHS for s in SHAPES
+            if shape_applicable(a, s)
+        ]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+    for arch, shape in cells:
+        if not shape_applicable(arch, shape):
+            print(f"[skip] {arch} x {shape}: long-context inapplicable "
+                  f"(pure full attention, DESIGN.md §5)")
+            continue
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, args.out,
+                           skip_existing=args.skip_existing)
+            print(json.dumps({k: rec[k] for k in
+                              ("arch", "shape", "mesh", "bytes_per_device_gb",
+                               "hlo_gflops", "dominant_term")}, indent=None))
+
+
+if __name__ == "__main__":
+    main()

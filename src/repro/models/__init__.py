@@ -1,0 +1,2 @@
+"""Model zoo: layers, attention, MoE, RG-LRU, SSD, and the LM assembly."""
+from . import attention, blocks, layers, model, moe, recurrent, ssd  # noqa: F401

@@ -1,0 +1,120 @@
+"""Attention: blockwise online-softmax (train/prefill) + single-step decode.
+
+The blockwise path is the pure-JAX mirror of kernels/flash_attention.py —
+never materializes the (Sq, Skv) score matrix: lax.map over query blocks,
+lax.scan over KV blocks with running (max, sum, acc).  It supports causal,
+sliding-window and GQA, so one implementation serves every assigned arch
+(full, SWA, 5:1 local:global).
+
+The decode path is a plain masked single-query attention: with the KV cache
+possibly sequence-sharded (long_500k), its softmax reductions become
+all-reduces under GSPMD — see DESIGN.md §6 (SP).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blockwise_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, qpos, kpos, kv_len, causal, window, state):
+    m_prev, l_prev, acc = state
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    mask = jnp.broadcast_to(kpos[None, :] < kv_len, s.shape[-2:])
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_cur[..., None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return m_cur, l_cur, acc
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bkv", "q_offset"),
+)
+def blockwise_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 512,
+    bkv: int = 1024,
+    q_offset: int = 0,  # absolute position of q[0] (chunked prefill)
+):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = d**-0.5
+    q = (q * scale).reshape(b, hkv, rep, sq, d)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    nq, nkv = -(-sq // bq), -(-skv // bkv)
+    pad_q, pad_kv = nq * bq - sq, nkv * bkv - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+
+    def q_block(args):
+        qi, qblk = args  # qblk: (B, Hkv, rep, bq, D)
+        qb = qblk.reshape(b, hkv * rep, bq, d)
+        qpos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_step(state, ki):
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * bkv, bkv, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * bkv, bkv, axis=2)
+            kb = jnp.repeat(kb, rep, axis=1)
+            vb = jnp.repeat(vb, rep, axis=1)
+            kpos = ki * bkv + jnp.arange(bkv)
+            state = _attend_block(qb, kb, vb, qpos, kpos, skv, causal, window, state)
+            return state, None
+
+        init = (
+            jnp.full((b, hkv * rep, bq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv * rep, bq), jnp.float32),
+            jnp.zeros((b, hkv * rep, bq, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    blocks = q.reshape(b, hkv, rep, nq, bq, d).transpose(3, 0, 1, 2, 4, 5)
+    out = jax.lax.map(q_block, (jnp.arange(nq), blocks))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, hq, nq * bq, d)
+    return out[:, :, :sq].astype(jnp.promote_types(q.dtype, jnp.bfloat16))
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attention(
+    q: jax.Array,  # (B, Hq, 1, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    pos: jax.Array,  # () current position (tokens < pos are valid)
+    window: int = 0,
+):
+    b, hq, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    qg = (q * d**-0.5).reshape(b, hkv, rep, d)
+    logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
+    kpos = jnp.arange(s)
+    valid = kpos < pos
+    if window:
+        valid &= kpos >= pos - window
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -1,0 +1,238 @@
+"""Decoder blocks: attention (full/local) + FFN/MoE, RG-LRU, SSD — with a
+uniform (params, x, cache) -> (x, cache) interface per layer kind so the
+model can scan over heterogeneous repeating units.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import anchor_batch, gather_unit_params
+
+from . import moe as moe_mod
+from . import recurrent as rec
+from . import ssd as ssd_mod
+from .attention import blockwise_attention, decode_attention
+from .layers import Quant, dense, init_dense, init_norm, rms_norm, rope
+
+__all__ = [
+    "init_layer",
+    "layer_seq",
+    "layer_decode",
+    "init_layer_cache",
+    "KIND_HAS_KV",
+]
+
+KIND_HAS_KV = {"attn_full": True, "attn_local": True, "rglru": False, "ssd": False}
+
+
+# ---------------- init ----------------
+
+def _init_attn(key, cfg, dtype):
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": init_dense(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": init_dense(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": init_dense(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+
+
+def _init_ffn(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": init_dense(ks[0], d, ff, dtype),
+        "w3": init_dense(ks[1], d, ff, dtype),
+        "w2": init_dense(ks[2], ff, d, dtype),
+    }
+
+
+def init_layer(key, cfg, kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_norm(cfg.d_model, dtype)}
+    if kind in ("attn_full", "attn_local"):
+        p["attn"] = _init_attn(k1, cfg, dtype)
+        p["norm2"] = init_norm(cfg.d_model, dtype)
+        if cfg.n_experts:
+            p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+        else:
+            p["ffn"] = _init_ffn(k2, cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rec.init_rglru_block(k1, cfg, dtype)
+        p["norm2"] = init_norm(cfg.d_model, dtype)
+        p["ffn"] = _init_ffn(k2, cfg, dtype)
+    elif kind == "ssd":
+        p["ssd"] = ssd_mod.init_ssd_block(k1, cfg, dtype)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return p
+
+
+# ---------------- ffn ----------------
+
+def _ffn(params, x, quant):
+    h1 = dense(params["w1"], x, quant)
+    h3 = dense(params["w3"], x, quant)
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    return dense(params["w2"], h, quant)
+
+
+def _mlp_part(params, x, cfg, quant, no_drop=False):
+    y = rms_norm(params["norm2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        return x + moe_mod.moe_ffn(params["moe"], y, cfg, quant, no_drop)
+    return x + _ffn(params["ffn"], y, quant)
+
+
+# ---------------- attention, sequence mode ----------------
+
+def _qkv(params, y, cfg, quant, positions):
+    b, s, _ = y.shape
+    dh = cfg.d_head
+    q = dense(params["wq"], y, quant).reshape(b, s, cfg.n_heads, dh)
+    k = dense(params["wk"], y, quant).reshape(b, s, cfg.n_kv_heads, dh)
+    v = dense(params["wv"], y, quant).reshape(b, s, cfg.n_kv_heads, dh)
+    q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    return q, k, v.transpose(0, 2, 1, 3)
+
+
+def _attn_seq(params, x, cfg, kind, quant, positions):
+    y = rms_norm(params["norm1"], x, cfg.norm_eps)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
+    window = cfg.window if kind == "attn_local" else 0
+    o = blockwise_attention(q, k, v, causal=True, window=window)
+    b, s, _ = x.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    return x, (k, v)
+
+
+# ---------------- per-kind sequence step ----------------
+
+def layer_seq(params, x, cfg, kind, quant=None, positions=None, state=None,
+              no_drop=False):
+    """(x, carry_state) for one layer in sequence mode.
+
+    Returns (x_out, aux) where aux is (k, v) for attention kinds (for cache
+    construction during prefill) or the recurrent state dict.
+    """
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    params = gather_unit_params(params)  # FSDP all-gather point (no-op
+    x = anchor_batch(x)                  # outside a sharding_ctx)
+    if kind in ("attn_full", "attn_local"):
+        x, kv = _attn_seq(params, x, cfg, kind, quant, positions)
+        x = _mlp_part(params, x, cfg, quant, no_drop)
+        return x, kv
+    if kind == "rglru":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, st = rec.rglru_block(params["rec"], y, cfg, quant, state)
+        x = x + o
+        x = _mlp_part(params, x, cfg, quant, no_drop)
+        return x, st
+    if kind == "ssd":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, st = ssd_mod.ssd_block(params["ssd"], y, cfg, quant, state,
+                                   chunk=cfg.ssd_chunk)
+        return x + o, st
+    raise ValueError(kind)  # pragma: no cover
+
+
+# ---------------- caches ----------------
+
+def cache_len(cfg, kind, max_len: int) -> int:
+    if kind == "attn_local" and cfg.window:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype):
+    if kind in ("attn_full", "attn_local"):
+        s = cache_len(cfg, kind, max_len)
+        shp = (batch, cfg.n_kv_heads, s, cfg.d_head)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if kind == "rglru":
+        return rec.init_rglru_state(batch, cfg, dtype)
+    if kind == "ssd":
+        return ssd_mod.init_ssd_state(batch, cfg, dtype)
+    raise ValueError(kind)  # pragma: no cover
+
+
+def fill_kv_cache(cache, k, v, length: int):
+    """Write prefill K/V (B,H,L,D) into the (possibly ring) cache buffer."""
+    s = cache["k"].shape[2]
+    l = k.shape[2]
+    if l <= s:
+        idx = (jnp.arange(l) % s).astype(jnp.int32)
+        ck = cache["k"].at[:, :, idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, idx].set(v.astype(cache["v"].dtype))
+    else:  # keep the trailing window, ring-indexed by absolute position
+        tail_pos = jnp.arange(l - s, l)
+        idx = (tail_pos % s).astype(jnp.int32)
+        ck = cache["k"].at[:, :, idx].set(k[:, :, l - s :].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, idx].set(v[:, :, l - s :].astype(cache["v"].dtype))
+    return {"k": ck, "v": cv}
+
+
+# ---------------- decode ----------------
+
+def _attn_decode(params, x, cfg, kind, quant, cache, pos):
+    """x: (B, 1, d); cache k/v: (B, Hkv, S_c, D); pos: scalar int32."""
+    y = rms_norm(params["norm1"], x, cfg.norm_eps)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, pos[None] if pos.ndim == 0 else pos)
+    s_c = cache["k"].shape[2]
+    slot = (pos % s_c).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=2
+    )
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=2
+    )
+    if kind == "attn_local" and cfg.window and s_c < 2**31:
+        # ring cache: entry r holds absolute position p_r = pos - ((pos - r) mod S_c)
+        r = jnp.arange(s_c)
+        p_r = pos - ((pos - r) % s_c)
+        valid = (p_r >= 0) & (p_r >= pos - cfg.window + 1)
+        o = _ring_decode_attention(q, ck, cv, valid)
+    else:
+        o = decode_attention(q, ck, cv, pos + 1, window=0)
+    b = x.shape[0]
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    return x, {"k": ck, "v": cv}
+
+
+def _ring_decode_attention(q, k_cache, v_cache, valid):
+    b, hq, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    qg = (q * d**-0.5).reshape(b, hkv, rep, d)
+    logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def layer_decode(params, x, cfg, kind, cache, pos, quant=None):
+    """One decode step. x: (B, 1, d). Returns (x, new_cache)."""
+    params = gather_unit_params(params)
+    x = anchor_batch(x)
+    if kind in ("attn_full", "attn_local"):
+        x, cache = _attn_decode(params, x, cfg, kind, quant, cache, pos)
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, cache
+    if kind == "rglru":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, cache = rec.rglru_decode_step(params["rec"], y, cache, cfg, quant)
+        x = x + o
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, cache
+    if kind == "ssd":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, cache = ssd_mod.ssd_decode_step(params["ssd"], y, cache, cfg, quant)
+        return x + o, cache
+    raise ValueError(kind)  # pragma: no cover

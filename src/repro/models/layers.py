@@ -1,0 +1,87 @@
+"""Shared model layers: RMSNorm, RoPE, dense projections (DSBP-quantizable).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); sharding rules
+bind to the dict key names (repro/parallel/sharding.py), so names here are
+part of the distribution contract:
+
+  embed, lm_head, head_*           vocab-sharded
+  wq, wk, wv, wo                   head-sharded (model axis)
+  w1, w2, w3, router               ffn-sharded
+  scale (norms), a_param, ...      replicated
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantized import PRESETS, dsbp_matmul_ste
+
+__all__ = ["rms_norm", "dense", "init_dense", "rope", "init_norm", "Quant"]
+
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    if scale is None:
+        scale = d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+class Quant:
+    """Threaded quantization context: None or a PRESETS key / config."""
+
+    def __init__(self, preset: str | None):
+        self.cfg = PRESETS[preset] if isinstance(preset, str) else preset
+
+    def __bool__(self):
+        return self.cfg is not None
+
+
+def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
+    """x (..., d_in) @ w (d_in, d_out), optionally through the DSBP macro
+    numerics (straight-through gradients for QAT).
+
+    ``w`` may also be a DSBP-*packed* weight (dict with int8 aligned
+    mantissas 'a' (d_out, n_g, G), per-group 'scale' and per-channel
+    'tscale' — serve.engine.pack_weights_int8): the stored/sharded/gathered
+    representation is then ~1.06 B/elem instead of 2 (bf16) / 4 (f32), the
+    serving memory+collective optimization of EXPERIMENTS.md §Perf-3.
+    """
+    if isinstance(w, dict):
+        n, ng, g = w["a"].shape
+        deq = w["a"].astype(x.dtype) * w["scale"][..., None].astype(x.dtype)
+        ts = w["tscale"].reshape(-1, 1).astype(x.dtype)
+        w = (deq.reshape(n, ng * g) / ts).T[: x.shape[-1]]
+        return jnp.einsum("...k,kn->...n", x, w)
+    if quant and quant.cfg is not None:
+        return dsbp_matmul_ste(x, w, quant.cfg).astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def _rope_angles(positions: jax.Array, d_head: int, theta: float):
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding. x: (B, H, S, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)  # (B, S, D/2) or (S, D/2)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, None], sin[:, None]  # add head axis
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

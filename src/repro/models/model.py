@@ -1,0 +1,266 @@
+"""LM assembly: embeddings/frontends → scanned decoder stack → head.
+
+The repeating layer pattern (cfg.pattern) is scanned with jax.lax.scan over
+stacked per-unit parameters (optionally remat'ed); the remainder layers
+(cfg.tail) are unrolled.  Three entry points:
+
+  loss_fn / forward   : training & evaluation (sequence mode)
+  prefill             : sequence mode + cache construction
+  decode_step         : one token through the cached stack
+
+Modality frontends are stubs per the brief: audio = K codebook embeddings
+summed (+K output heads); vlm = precomputed patch embeddings prepended.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+from . import blocks
+from .layers import Quant, init_norm, rms_norm
+
+__all__ = ["init", "forward", "loss_fn", "init_cache", "prefill", "decode_step"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _vocab_rows(cfg) -> int:
+    """Embedding/head rows: padded vocab (x codebooks for audio)."""
+    if cfg.frontend == "audio_codebooks":
+        return cfg.padded_vocab_size * cfg.n_codebooks
+    return cfg.padded_vocab_size
+
+
+# ---------------- init ----------------
+
+def init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    d = cfg.d_model
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (_vocab_rows(cfg), d), jnp.float32)
+                  * d**-0.5).astype(dt),
+        "final_norm": init_norm(d, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (d, _vocab_rows(cfg)), jnp.float32) * d**-0.5
+        ).astype(dt)
+
+    pat = cfg.pattern
+    ki = iter(keys[2:])
+    # stacked unit params: per pattern position, a pytree with leading n_units
+    unit_layers = []
+    for li, kind in enumerate(pat):
+        per_unit = [blocks.init_layer(next(ki), cfg, kind, dt) for _ in range(cfg.n_units)]
+        unit_layers.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
+    params["units"] = unit_layers
+    params["tail"] = [
+        blocks.init_layer(next(ki), cfg, kind, dt) for kind in cfg.tail
+    ]
+    return params
+
+
+# ---------------- embedding / frontend ----------------
+
+def embed_tokens(params, batch: dict, cfg: ArchConfig):
+    """Returns (x (B,S,d), positions (S,))."""
+    emb = params["embed"]
+    if cfg.frontend == "audio_codebooks":
+        tok = batch["tokens"]  # (B, S, K)
+        offs = jnp.arange(cfg.n_codebooks, dtype=tok.dtype) * cfg.padded_vocab_size
+        x = jnp.take(emb, tok + offs[None, None, :], axis=0).sum(axis=2)
+    elif cfg.frontend == "vlm_patches":
+        tok = batch["tokens"]  # (B, S_txt)
+        tx = jnp.take(emb, tok, axis=0)
+        img = batch["image_embeds"].astype(tx.dtype)  # (B, S_img, d)
+        x = jnp.concatenate([img, tx], axis=1)
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def _head(params, x, cfg):
+    """Logits over the PADDED vocab; padded rows masked to -inf."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    vp, v = cfg.padded_vocab_size, cfg.vocab_size
+    if vp != v:
+        k = cfg.n_codebooks if cfg.frontend == "audio_codebooks" else 1
+        col = jnp.arange(logits.shape[-1]) % (vp if k > 1 else vp)
+        valid = (col % vp) < v
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------- sequence-mode stack ----------------
+
+def _unit_seq(unit_params, x, cfg, quant, positions, with_cache: bool,
+              no_drop: bool = False):
+    """Apply one pattern unit; returns (x, list_of_aux per layer)."""
+    auxs = []
+    for p_layer, kind in zip(unit_params, cfg.pattern):
+        x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions,
+                                  no_drop=no_drop)
+        auxs.append(aux if (with_cache or not blocks.KIND_HAS_KV[kind]) else None)
+    return x, auxs
+
+
+def forward(params, batch: dict, cfg: ArchConfig, collect_cache: bool = False):
+    quant = Quant(cfg.quant)
+    x, positions = embed_tokens(params, batch, cfg)
+
+    def unit_body(xc, stacked):
+        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, collect_cache)
+        return xx, auxs
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    x, unit_auxs = jax.lax.scan(body, x, tuple(params["units"]),
+                                unroll=cfg.scan_unroll)
+    tail_auxs = []
+    for p_layer, kind in zip(params["tail"], cfg.tail):
+        x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions)
+        tail_auxs.append(aux)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    if collect_cache:
+        return logits, (unit_auxs, tail_auxs)
+    return logits
+
+
+def _ce(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig):
+    """Next-token cross entropy; returns (loss, metrics)."""
+    logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "audio_codebooks":
+        b, s, kv = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.padded_vocab_size)
+        loss = _ce(logits, labels)  # labels (B, S, K)
+    elif cfg.frontend == "vlm_patches":
+        s_img = batch["image_embeds"].shape[1]
+        loss = _ce(logits[:, s_img:], labels, batch.get("loss_mask"))
+    else:
+        loss = _ce(logits, labels, batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------- caches / serving ----------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    unit_caches = []
+    for kind in cfg.pattern:
+        per_unit = [
+            blocks.init_layer_cache(cfg, kind, batch, max_len, dt)
+            for _ in range(cfg.n_units)
+        ]
+        unit_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
+    tail_caches = [
+        blocks.init_layer_cache(cfg, kind, batch, max_len, dt) for kind in cfg.tail
+    ]
+    return {"units": unit_caches, "tail": tail_caches}
+
+
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
+    """Run the prompt; returns (last-position logits, cache, length)."""
+    quant = Quant(cfg.quant)
+    x, positions = embed_tokens(params, batch, cfg)
+    length = x.shape[1]
+
+    def unit_body(xc, stacked):
+        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, True, no_drop=True)
+        return xx, auxs
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    x, unit_auxs = jax.lax.scan(body, x, tuple(params["units"]),
+                                unroll=cfg.scan_unroll)
+    tail_auxs = []
+    for p_layer, kind in zip(params["tail"], cfg.tail):
+        x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions,
+                                  no_drop=True)
+        tail_auxs.append(aux)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x[:, -1:], cfg)
+
+    cache = init_cache(cfg, x.shape[0], max_len)
+
+    def pack(kind, c, aux):
+        if blocks.KIND_HAS_KV[kind]:
+            k, v = aux
+            return blocks.fill_kv_cache(c, k, v, length)
+        return jax.tree.map(lambda a, cc: a.astype(cc.dtype), aux, c)
+
+    new_units = []
+    for li, kind in enumerate(cfg.pattern):
+        c = cache["units"][li]
+        aux = unit_auxs[li]
+        if blocks.KIND_HAS_KV[kind]:
+            # aux k/v have leading unit axis (R, B, H, L, D) from the scan
+            new_units.append(
+                jax.vmap(lambda cc, kk, vv: blocks.fill_kv_cache(cc, kk, vv, length))(
+                    c, aux[0], aux[1]
+                )
+            )
+        else:
+            new_units.append(jax.tree.map(lambda a, cc: a.astype(cc.dtype), aux, c))
+    new_tail = [
+        pack(kind, cache["tail"][i], tail_auxs[i]) for i, kind in enumerate(cfg.tail)
+    ]
+    return logits, {"units": new_units, "tail": new_tail}, length
+
+
+def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
+    """One token for every sequence. token_batch['tokens']: (B, 1) (or
+    (B,1,K) audio). pos: scalar int32 absolute position. Returns
+    (logits (B,1,V), new_cache)."""
+    quant = Quant(cfg.quant)
+    emb = params["embed"]
+    if cfg.frontend == "audio_codebooks":
+        tok = token_batch["tokens"]
+        offs = jnp.arange(cfg.n_codebooks, dtype=tok.dtype) * cfg.padded_vocab_size
+        x = jnp.take(emb, tok + offs[None, None, :], axis=0).sum(axis=2)
+    else:
+        x = jnp.take(emb, token_batch["tokens"], axis=0)
+
+    def unit_body(carry, stacked):
+        xc = carry
+        p_stack, c_stack = stacked
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            xc, nc = blocks.layer_decode(
+                {k: v for k, v in p_stack[i].items()}, xc, cfg, kind,
+                c_stack[i], pos, quant,
+            )
+            new_caches.append(nc)
+        return xc, tuple(new_caches)
+
+    x, new_unit_caches = jax.lax.scan(
+        unit_body, x, (tuple(params["units"]), tuple(cache["units"])),
+        unroll=cfg.scan_unroll,
+    )
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        x, nc = blocks.layer_decode(
+            params["tail"][i], x, cfg, kind, cache["tail"][i], pos, quant
+        )
+        new_tail.append(nc)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    return logits, {"units": list(new_unit_caches), "tail": new_tail}

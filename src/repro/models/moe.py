@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN: GShard-style grouped top-k dispatch.
+
+Tokens are split into dispatch groups of ``moe_group``; within each group a
+capacity-limited one-hot dispatch tensor routes tokens to experts via
+einsums (dense, shardable — the standard GSPMD MoE formulation, cf. GShard/
+MaxText).  Experts' FFN weights carry a leading expert axis; under the
+production mesh the ffn dim shards over 'model' and the token/group dims
+over 'data' (EP over a dedicated expert axis is exercised separately in
+tests/test_parallel.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Quant, dense
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = d**-0.5, ff**-0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * s_in).astype(dtype),
+        "w1": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * s_in).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * s_in).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, ff, d), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def moe_ffn(params, x: jax.Array, cfg, quant: Quant | None = None,
+            no_drop: bool = False):
+    """x: (B, S, d) -> (B, S, d); top-k routing.
+
+    Training uses GShard capacity dropping (cfg.capacity_factor); serving
+    paths pass ``no_drop=True`` (capacity = group size, nothing dropped, so
+    outputs are independent of batch composition).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g_sz = min(cfg.moe_group, t)
+    pad = (-t) % g_sz
+    xf = x.reshape(t, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)])
+    valid = (jnp.arange(t + pad) < t).reshape(-1, g_sz)  # (G, S)
+    n_g = (t + pad) // g_sz
+    xg = xf.reshape(n_g, g_sz, d)
+
+    logits = dense(params["router"], xg)  # (G, S, E) — router stays fp
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    if no_drop:
+        cap = g_sz
+    else:
+        cap = max(int(cfg.capacity_factor * k * g_sz / e), 1)
+
+    # dispatch/combine tensors, k choices in priority order
+    dispatch = jnp.zeros((n_g, g_sz, e, cap), jnp.bool_)
+    combine = jnp.zeros((n_g, g_sz, e, cap), jnp.float32)
+    # position of each token within its expert's queue, computed jointly
+    # over the k choices so capacity is shared (GShard priority order)
+    prev_counts = jnp.zeros((n_g, 1, e), jnp.int32)
+    for choice in range(k):
+        mask = jax.nn.one_hot(idx[..., choice], e, dtype=jnp.int32)  # (G,S,E)
+        mask = mask * valid[..., None]  # pad tokens never dispatch
+        pos = jnp.cumsum(mask, axis=1) - 1 + prev_counts
+        prev_counts = prev_counts + jnp.sum(mask, axis=1, keepdims=True)
+        within = (pos < cap) & (mask > 0)
+        posc = jnp.clip(pos, 0, cap - 1)
+        oh = jax.nn.one_hot(posc, cap, dtype=jnp.float32) * within[..., None]
+        dispatch = dispatch | (oh > 0)
+        combine = combine + oh * gate_vals[..., choice, None, None]
+
+    def _expert_w(wp, d_in):
+        # DSBP-packed expert weights: (E, d_out, ng, G) int8 -> (E, d_in, d_out)
+        if not isinstance(wp, dict):
+            return wp
+        e_, dout, ng, g_ = wp["a"].shape
+        deq = wp["a"].astype(x.dtype) * wp["scale"][..., None].astype(x.dtype)
+        ts = wp["tscale"].reshape(e_, dout, 1).astype(x.dtype)
+        return (deq.reshape(e_, dout, ng * g_) / ts)[:, :, :d_in].transpose(0, 2, 1)
+
+    w1 = _expert_w(params["w1"], d)
+    w3 = _expert_w(params["w3"], d)
+    w2 = _expert_w(params["w2"], cfg.d_ff)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    h1 = jnp.einsum("gecd,edf->gecf", xe, w1)
+    h3 = jnp.einsum("gecd,edf->gecf", xe, w3)
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
+    ye = jnp.einsum("gecf,efd->gecd", h, w2)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    y = y.reshape(-1, d)[:t]
+    return y.reshape(b, s, d)

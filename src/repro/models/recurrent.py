@@ -1,0 +1,133 @@
+"""Griffin/RecurrentGemma recurrent block: causal conv1d + RG-LRU.
+
+RG-LRU (arXiv:2402.19427 §2.4):
+    r_t = sigmoid(W_a x_t + b_a)             (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)             (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)        (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Sequence mode uses an associative scan over (a, b) pairs; decode mode is a
+single fused step.  The block is:  in-proj → conv1d(4, causal, depthwise) →
+RG-LRU  gated (GeGLU-style) by a parallel branch, then out-proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Quant, dense, init_dense
+
+__all__ = ["init_rglru_block", "rglru_block", "rglru_decode_step", "rglru_scan"]
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype):
+    d, r = cfg.d_model, cfg.rnn_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": init_dense(ks[0], d, r, dtype),
+        "w_gate": init_dense(ks[1], d, r, dtype),
+        "w_out": init_dense(ks[2], r, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.d_conv, r), jnp.float32) * 0.1).astype(dtype),
+        "wa": init_dense(ks[4], r, r, dtype),
+        "wx": init_dense(ks[5], r, r, dtype),
+        # Λ init so that a^c in [0.9, 0.999] at r=0.5 (Griffin appendix)
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[6], (r,), jnp.float32, 2.0, 6.0), jnp.float32
+        ),
+        "ba": jnp.zeros((r,), jnp.float32),
+        "bx": jnp.zeros((r,), jnp.float32),
+    }
+
+
+def _gates(params, x):
+    """a_t (log-space), gated input. x: (..., r) post-conv."""
+    r_gate = jax.nn.sigmoid(
+        dense(params["wa"], x).astype(jnp.float32) + params["ba"]
+    )
+    i_gate = jax.nn.sigmoid(
+        dense(params["wx"], x).astype(jnp.float32) + params["bx"]
+    )
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r_gate  # (..., r), <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i_gate * x.astype(jnp.float32)
+    )
+    return a, gated_x
+
+
+def rglru_scan(params, x):
+    """Sequence-mode RG-LRU. x: (B, S, r) -> (y (B, S, r), h_last (B, r))."""
+    a, b = _gates(params, x)  # (B, S, r) f32
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def causal_conv1d(conv_w, x, state=None):
+    """Depthwise causal conv. x: (B, S, r); conv_w: (K, r).
+    state: (B, K-1, r) trailing context (decode) or None (zeros)."""
+    k = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, r)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * conv_w[i][None, None] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1) :]
+    return out, new_state
+
+
+def rglru_block(params, x, cfg, quant: Quant | None = None, state=None):
+    """Full recurrent block, sequence mode.
+
+    x: (B, S, d) -> (B, S, d).  state: optional dict(h, conv) for chunked
+    prefill; returns (y, new_state).
+    """
+    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
+    u = dense(params["w_in"], x, quant)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = causal_conv1d(params["conv_w"], u, conv_state)
+    if state is not None:
+        # seed the scan with the carried h by folding it into the first step
+        a, b = _gates(params, u)
+        h0 = state["h"].astype(jnp.float32)
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y, h_last = hh.astype(u.dtype), hh[:, -1]
+    else:
+        y, h_last = rglru_scan(params, u)
+    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def rglru_decode_step(params, x, state, cfg, quant: Quant | None = None):
+    """x: (B, 1, d); state: {'h': (B, r), 'conv': (B, K-1, r)}."""
+    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
+    u = dense(params["w_in"], x, quant)
+    u, new_conv = causal_conv1d(params["conv_w"], u, state["conv"])
+    a, b = _gates(params, u)  # (B, 1, r)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = h[:, None].astype(u.dtype)
+    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_rglru_state(batch: int, cfg, dtype):
+    r = cfg.rnn_dim
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, r), dtype),
+    }

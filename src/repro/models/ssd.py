@@ -1,0 +1,189 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form + decode.
+
+Follows the minimal SSD algorithm of arXiv:2405.21060 (Listing 1): the
+sequence is split into chunks of Q; within a chunk the quadratic "attention"
+form runs on the MXU, states are passed between chunks with a scan:
+
+  per chunk c:   L[i,j] = exp(Σ_{j<t<=i} dt_t A)  (causal decay)
+    Y_intra = (C B^T ⊙ L) (dt ⊙ X)
+    S_c     = Σ_q exp(cum_end - cum_q) B_q ⊗ (dt ⊙ X)_q
+    carry   : S = exp(Σ_chunk dtA) S_prev + S_c
+    Y_inter = exp(cum_q) C_q · S_prev
+
+Decode is the SSM recurrence h = exp(dt·A)·h + dt·B⊗x;  y = C·h + D·x.
+Verified against the naive per-step recurrence in tests/test_models.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Quant, dense, init_dense
+from .recurrent import causal_conv1d
+
+__all__ = ["init_ssd_block", "ssd_block", "ssd_decode_step", "init_ssd_state",
+           "ssd_chunked", "ssd_naive"]
+
+
+def init_ssd_block(key, cfg, dtype):
+    d = cfg.d_model
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    conv_dim = din + 2 * ns
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in-projection: [z (din), x (din), B (ns), C (ns), dt (nh)]
+        "w_in": init_dense(ks[0], d, 2 * din + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "w_out": init_dense(ks[2], din, d, dtype),
+        "a_log": jnp.log(
+            jax.random.uniform(ks[3], (nh,), jnp.float32, 1.0, 16.0)
+        ),
+        "dt_bias": jnp.log(
+            jnp.expm1(jax.random.uniform(ks[4], (nh,), jnp.float32, 1e-3, 1e-1))
+        ),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    z, x, bmat, cmat, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + ns, 2 * din + 2 * ns], axis=-1
+    )
+    return z, x, bmat, cmat, dt
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) (negative); b, c: (B, S, N)
+    h0: optional (B, H, P, N) initial state.
+    Returns y: (B, S, H, P), h_last: (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = b.reshape(bsz, nc, q, n)
+    cr = c.reshape(bsz, nc, q, n)
+
+    da = dtr * a[None, None, None]  # (B, nc, q, H), <= 0
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+    # intra-chunk causal decay L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of masked positives would overflow and poison grads
+    l_mat = jnp.exp(jnp.where(mask, li, -jnp.inf))
+    xdt = xr * dtr[..., None]  # (B,nc,q,H,P)
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)  # (B,nc,i,j)
+    # two-step contraction: the masked-decay score matrix first (the 5-D
+    # (B,nc,i,j,H) tensor), then a per-head (i,j)@(j,p) MXU matmul — a
+    # 3-operand einsum here would materialize a 6-D (...,i,j,h,p) monster
+    m_mat = cb[..., None] * l_mat  # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m_mat, xdt)
+
+    # chunk state contribution and carry
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,q,H)
+    s_c = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", br, decay_end, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        dec, s_new = inp
+        s_next = dec[:, :, None, None] * s_prev + s_new
+        return s_next, s_prev
+
+    init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_last, s_prevs = jax.lax.scan(
+        step,
+        init,
+        (chunk_decay.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4).astype(jnp.float32)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cr, jnp.exp(cum), s_prevs.astype(x.dtype)
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def ssd_naive(x, dt, a, b, c, h0=None):
+    """Per-step recurrence oracle (tests)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    h_t = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0
+
+    def step(h_t, t):
+        dec = jnp.exp(dt[:, t] * a[None])  # (B, H)
+        upd = jnp.einsum("bn,bhp->bhpn", b[:, t], x[:, t] * dt[:, t, :, None])
+        h_t = dec[:, :, None, None] * h_t + upd
+        y = jnp.einsum("bn,bhpn->bhp", c[:, t], h_t)
+        return h_t, y
+
+    h_last, ys = jax.lax.scan(step, h_t, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), h_last
+
+
+def ssd_block(params, x, cfg, quant: Quant | None = None, state=None,
+              chunk: int = 256):
+    """Full Mamba-2 block, sequence mode. x: (B, S, d)."""
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    hp = cfg.ssm_headdim
+    zxbcdt = dense(params["w_in"], x, quant)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = causal_conv1d(params["conv_w"], conv_in, conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    xh = xs.reshape(*xs.shape[:-1], nh, hp)
+    h0 = None if state is None else state["h"]
+    y, h_last = ssd_chunked(xh, dt, a, bmat, cmat, chunk, h0)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:-1], din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def ssd_decode_step(params, x, state, cfg, quant: Quant | None = None):
+    """Single-token SSM recurrence. x: (B, 1, d)."""
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    hp = cfg.ssm_headdim
+    zxbcdt = dense(params["w_in"], x, quant)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, new_conv = causal_conv1d(params["conv_w"], conv_in, state["conv"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs[:, 0].reshape(-1, nh, hp)
+    dec = jnp.exp(dt * a[None])  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", bmat[:, 0], xh * dt[..., None])
+    h = dec[:, :, None, None] * state["h"] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(-1, 1, din) * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_ssd_state(batch: int, cfg, dtype):
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_headdim, ns), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, din + 2 * ns), dtype),
+    }

@@ -1,0 +1,106 @@
+"""AdamW from scratch (no optax) with configurable state dtypes.
+
+State-dtype knobs exist because the paper's theme — spend mantissa bits
+where the distribution needs them — applies to optimizer memory too: the
+low-mem preset (m in bf16, v in f32, no master copy) is what lets
+grok-1-314b train on a single 256-chip pod (EXPERIMENTS.md §Perf-mem).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "cosine_schedule",
+           "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"  # 'bfloat16' for the low-mem preset
+    v_dtype: str = "float32"
+    master_dtype: str | None = None  # 'float32' keeps a master copy when
+    # params are bf16; None updates params in their own dtype
+
+
+def _dt(name):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params, cfg: AdamWConfig):
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, _dt(cfg.m_dtype)), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, _dt(cfg.v_dtype)), params),
+    }
+    if cfg.master_dtype:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(_dt(cfg.master_dtype)), params
+        )
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def apply_updates(params, state, grads, cfg: AdamWConfig):
+    """One AdamW step; returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v, g, master=None):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * gf * gf
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        base = (master if master is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base)
+        return new, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    if "master" in state:
+        out = jax.tree.map(upd, params, state["m"], state["v"], grads, state["master"])
+    else:
+        out = jax.tree.map(upd, params, state["m"], state["v"], grads)
+    new32 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda p, n: n.astype(p.dtype), params, new32)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda ms, n: n.astype(ms.dtype), state["master"], new32
+        )
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

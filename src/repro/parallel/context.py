@@ -1,0 +1,125 @@
+"""Trace-time sharding context: anchors GSPMD's partitioning choices.
+
+FSDP semantics ("weights stored sharded over 'data', gathered at use")
+cannot be expressed through in_shardings alone: the partitioner is free to
+instead all-gather *activations* over 'data' — catastrophically replicating
+the batch (observed: 48GB score tensors in the grok dry-run).  The fix is
+the standard one (MaxText et al.): explicit with_sharding_constraint at the
+use site — weights constrained to their TP-only ("gathered") spec, and the
+residual stream re-anchored to batch sharding at every unit boundary.
+
+The launcher activates the context around trace/lower time; without it
+(tests, single-host training) every helper is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["sharding_ctx", "constrain", "gather_unit_params", "anchor_batch"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh_ctx", default=None)
+
+# gathered (TP-only) specs per weight name for trailing dims
+_GATHERED = {
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "w1": (None, "model"), "w3": (None, "model"), "w2": ("model", None),
+    "w_in": (None, "model"), "w_gate": (None, "model"), "w_out": ("model", None),
+    "wa": (None, "model"), "wx": (None, "model"),
+    "router": (None, None),
+}
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, batch_axes: tuple[str, ...], gather: bool = True):
+    """``gather=False`` (decode): weights stay storage-sharded and GSPMD
+    contracts against the shards (activation all-reduces are tiny at one
+    token/step); ``gather=True`` (train/prefill): FSDP all-gather at use —
+    14x lower decode collective traffic, see EXPERIMENTS.md §Perf-2."""
+    token = _CTX.set({"mesh": mesh, "batch_axes": tuple(batch_axes),
+                      "gather": gather})
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _mesh_fits(mesh, dim, axis):
+    import numpy as np
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return dim % int(np.prod([mesh.shape[a] for a in axes])) == 0
+
+
+def constrain(x, *spec):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        fixed.append(ax if ax and _mesh_fits(mesh, dim, ax) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed))
+    )
+
+
+def gather_unit_params(params):
+    """Constrain every projection weight of one layer's params to its
+    gathered (TP-only) spec — the FSDP all-gather point.
+
+    REPRO_NO_GATHER=1 disables the constraints (perf experiment: let GSPMD
+    contract against storage-sharded weights — right for decode, where
+    activations are tiny and weight gathers dominate)."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.get("gather", True) \
+            or os.environ.get("REPRO_NO_GATHER") == "1":
+        return params
+    mesh = ctx["mesh"]
+
+    def fix(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        parent = str(getattr(path[-2], "key", "")) if len(path) >= 2 else ""
+        if name in ("a", "scale", "tscale") and parent in _GATHERED:
+            # packed projection: gather the 'data'(ng) dim; keep 'model'
+            spec = [None] * leaf.ndim
+            pos = {"a": -3, "scale": -2, "tscale": -2}[name]
+            if leaf.ndim >= -pos and _mesh_fits(mesh, leaf.shape[pos], "model"):
+                spec[pos] = "model"
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, P(*spec)))
+        if name in _GATHERED and leaf.ndim >= 2:
+            spec = _GATHERED[name]
+            lead = (None,) * (leaf.ndim - 2)
+            full = lead + spec
+            fixed = [
+                ax if ax and _mesh_fits(mesh, d, ax) else None
+                for d, ax in zip(leaf.shape, full)
+            ]
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, P(*fixed))
+            )
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def anchor_batch(x):
+    """Pin the residual stream's leading dim to the batch axes.
+
+    REPRO_SP_ANCHOR=1 additionally shards the sequence dim over 'model'
+    between blocks (Korthikanti-style sequence-parallel TP: turns the
+    full-size activation all-reduces at TP boundaries into 1/TP-sized
+    gather/scatter pairs — §Perf experiment)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    ba = ctx["batch_axes"]
+    if os.environ.get("REPRO_SP_ANCHOR") == "1" and x.ndim >= 3:
+        return constrain(x, ba, "model", *([None] * (x.ndim - 2)))
+    return constrain(x, ba, *([None] * (x.ndim - 1)))

@@ -1,0 +1,171 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for the production mesh.
+
+Scheme (DESIGN.md §6) — "FSDP × TP":
+  * projection weights:  contraction/d_model dim -> 'data' (storage
+    sharding; GSPMD all-gathers per layer inside the scan), output/heads/
+    ffn/vocab dim -> 'model' (tensor parallel);
+  * batch dims -> ('pod', 'data') (multi-pod) or 'data';
+  * 'pod' is pure DP for weights (replicated across pods, grads all-reduced
+    over DCN);
+  * decode caches: batch-sharded; at batch=1 (long_500k) the KV sequence
+    dim shards over 'data' (sequence parallelism — softmax reductions
+    become collectives) and recurrent states shard over 'model' heads.
+
+Rules bind to parameter names (the contract stated in models/layers.py).
+Every rule checks divisibility and falls back to replication for that dim,
+so odd vocabularies (mamba2's 50280) and head counts (deepseek's 56) stay
+correct — they just replicate where they do not divide.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "named", "batch_axes"]
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _spec2d(shape, mesh, in_axis="data", out_axis="model"):
+    """(d_in, d_out) rule with divisibility fallback."""
+    a = in_axis if in_axis and _fits(shape[0], mesh, in_axis) else None
+    b = out_axis if out_axis and _fits(shape[1], mesh, out_axis) else None
+    return P(a, b)
+
+
+# weight-name -> (in_axis, out_axis) for trailing 2 dims
+_IN_OUT = {
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "w1": ("data", "model"), "w3": ("data", "model"), "w2": ("model", "data"),
+    "w_in": ("data", "model"), "w_gate": ("data", "model"),
+    "w_out": ("model", "data"),
+    "wa": ("data", "model"), "wx": ("data", "model"),
+    "router": ("data", None),
+    "lm_head": ("data", "model"),
+}
+_VEC_MODEL = {"lam", "ba", "bx", "a_log", "dt_bias", "d_skip"}  # width-sharded 1-D
+
+
+def _param_rule(path, leaf, mesh: Mesh):
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1]
+    stacked = "units" in names  # leading unit axis from the layer scan
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    lead = (None,) if stacked else ()
+
+    if name in ("a", "scale", "tscale") and len(names) >= 2 and names[-2] in _IN_OUT:
+        # DSBP-packed projection: a (..., N_out, ng, G) int8; scale (..., N,
+        # ng); tscale (..., N, 1).  N_out -> 'model' (TP), ng -> 'data' (FSDP)
+        full = leaf.shape
+        spec = [None] * len(full)
+        if name == "a" and len(full) >= 3:
+            spec[-3] = "model" if _fits(full[-3], mesh, "model") else None
+            spec[-2] = "data" if _fits(full[-2], mesh, "data") else None
+        elif name == "scale" and len(full) >= 2:
+            spec[-2] = "model" if _fits(full[-2], mesh, "model") else None
+            spec[-1] = "data" if _fits(full[-1], mesh, "data") else None
+        elif name == "tscale" and len(full) >= 2:
+            spec[-2] = "model" if _fits(full[-2], mesh, "model") else None
+        return P(*spec)
+
+    if name == "embed":
+        spec = _spec2d(shape, mesh, "model", "data")  # (vocab, d)
+    elif name in _IN_OUT:
+        ia, oa = _IN_OUT[name]
+        if len(shape) == 3:  # MoE experts (E, d_in, d_out)
+            a = ia if ia and _fits(shape[1], mesh, ia) else None
+            b = oa if oa and _fits(shape[2], mesh, oa) else None
+            spec = P(None, a, b)
+        else:
+            spec = _spec2d(shape, mesh, ia, oa)
+    elif name == "conv_w":  # (K, width)
+        spec = P(None, "model" if _fits(shape[1], mesh, "model") else None)
+    elif name in _VEC_MODEL:
+        spec = P("model" if _fits(shape[0], mesh, "model") else None)
+    elif name == "scale":  # norms
+        spec = P(*([None] * len(shape)))
+    else:
+        spec = P(*([None] * len(shape)))
+    return P(*lead, *spec)
+
+
+def param_pspecs(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _param_rule(p, l, mesh), params
+    )
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        a = ba if b % int(np.prod([mesh.shape[x] for x in ba])) == 0 else (
+            "data" if b % mesh.shape["data"] == 0 else None
+        )
+        return P(a, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True):
+    """KV caches (B,H,S,D) / states.
+
+    Batch dim -> batch axes; additionally (the decode memory-term
+    optimization, EXPERIMENTS.md §Perf-2) the KV head dim shards over
+    'model' when divisible, else the *sequence* dim does — either way the
+    cache stops being replicated across the TP axis.  B=1 (long_500k)
+    shards the sequence over 'data' (SP).
+    """
+    ba = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[x] for x in ba]))
+    batch_ok = batch_size % bsz == 0
+    msz = mesh.shape["model"]
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        stacked = "units" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        lead = (None,) if stacked else ()
+        name = names[-1]
+        if name in ("k", "v") and len(shape) == 4:
+            b_ax = ba if batch_ok else None
+            head_ax = "model" if (shard_kv_model and shape[1] % msz == 0) else None
+            seq_axes = []
+            if not batch_ok and shape[2] % mesh.shape["data"] == 0:
+                seq_axes.append("data")  # B=1: SP over data
+            if (shard_kv_model and head_ax is None
+                    and shape[2] % (mesh.shape["data"] * msz if seq_axes else msz) == 0):
+                seq_axes.append("model")
+            spec = (b_ax, head_ax, tuple(seq_axes) if seq_axes else None, None)
+        elif name == "h" and len(shape) >= 2:
+            ok = shape[1] % msz == 0
+            spec = (ba if batch_ok else None, "model" if ok else None)
+            spec += (None,) * (len(shape) - 2)
+        elif name == "conv":
+            ok = shape[-1] % msz == 0
+            spec = (ba if batch_ok else None,)
+            spec += (None,) * (len(shape) - 2) + ("model" if ok else None,)
+        elif batch_ok:
+            spec = (ba,) + (None,) * (len(shape) - 1)
+        else:
+            spec = (None,) * len(shape)
+        return P(*lead, *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

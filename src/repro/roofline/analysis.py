@@ -1,0 +1,147 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh) cell, all seconds (lower bound per
+step assuming perfect overlap within each resource):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = collective_ICI_bytes_per_device / ICI_bandwidth
+
+Sources: ``compiled.cost_analysis()`` (per-device FLOPs / bytes accessed) +
+collective bytes parsed from the post-SPMD HLO text.  XLA counts a
+while-loop (lax.scan) body ONCE, so the launcher lowers each cell twice
+(layer-scan unroll=1 and unroll=2); the delta is the exact per-unit cost
+and :func:`correct_for_scan` scales it by the unit count.
+
+Ring-algorithm ICI cost per device, as a fraction of the RESULT bytes:
+  all-gather (n-1)/n ≈ 1x; reduce-scatter 1x of operand≈result·n -> we only
+  see the shard result, so 1x result (lower bound); all-reduce 2x (RS+AG);
+  all-to-all / collective-permute 1x.
+
+Hardware constants: TPU v5e per the brief — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "raw_costs", "correct_for_scan", "roofline_record",
+           "model_flops", "parse_collective_bytes"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16, per chip
+    "hbm_gbps": 819e9,
+    "ici_gbps": 50e9,  # per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    out = {k: 0 for k in _FACTOR}
+    counts = dict.fromkeys(_FACTOR, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape = m.group(1) or m.group(2)
+        kind = m.group(3)
+        out[kind] += int(_shape_bytes(shape) * _FACTOR[kind])
+        counts[kind] += 1
+    return {"by_kind": out, "counts": counts, "total": sum(out.values())}
+
+
+def raw_costs(compiled) -> dict:
+    """Per-device flops/bytes/collective-bytes of one compiled executable
+    (scan bodies counted once — correct with correct_for_scan)."""
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total"]),
+        "coll": coll,
+    }
+
+
+def correct_for_scan(u1: dict, u2: dict, n_units: int) -> dict:
+    """u1/u2 = raw_costs at layer-scan unroll 1/2.  The unroll delta is one
+    unit's cost; total = once-counted program + (n_units-1) extra units."""
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        per_unit = max(u2[k] - u1[k], 0.0)
+        out[k] = u1[k] + (n_units - 1) * per_unit
+        out[f"{k}_per_unit"] = per_unit
+    out["coll_counts"] = u1["coll"]["counts"]
+    out["coll_by_kind"] = {
+        k: u1["coll"]["by_kind"][k]
+        + (n_units - 1) * max(u2["coll"]["by_kind"][k] - u1["coll"]["by_kind"][k], 0)
+        for k in u1["coll"]["by_kind"]
+    }
+    return out
+
+
+def model_flops(cfg, suite) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N per token (decode), with MoE
+    active params — the 'useful' FLOPs yardstick."""
+    n = cfg.active_param_count()
+    if suite.kind == "train":
+        return 6.0 * n * suite.global_batch * suite.seq_len
+    if suite.kind == "prefill":
+        return 2.0 * n * suite.global_batch * suite.seq_len
+    return 2.0 * n * suite.global_batch
+
+
+def roofline_record(*, arch, shape, mesh, n_devices, costs, mem_stats, cfg,
+                    suite) -> dict:
+    t_compute = costs["flops"] / HW["peak_flops"]
+    t_memory = costs["bytes"] / HW["hbm_gbps"]
+    t_coll = costs["coll_bytes"] / HW["ici_gbps"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, suite)
+    total_flops = costs["flops"] * n_devices
+    ma = mem_stats
+    dev_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    step = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "n_devices": n_devices,
+        "hlo_gflops": round(costs["flops"] / 1e9, 2),
+        "hlo_gbytes": round(costs["bytes"] / 1e9, 3),
+        "collective_gbytes": round(costs["coll_bytes"] / 1e9, 4),
+        "coll_by_kind_gb": {k: round(v / 1e9, 4)
+                            for k, v in costs.get("coll_by_kind", {}).items()},
+        "coll_counts": costs.get("coll_counts", {}),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant_term": dominant,
+        "roofline_step_s": step,
+        "roofline_fraction": round(t_compute / step, 4) if step else 0.0,
+        "model_gflops_total": round(mf / 1e9, 2),
+        "useful_flop_ratio": round(mf / total_flops, 4) if total_flops else 0.0,
+        "bytes_per_device_gb": round(dev_bytes / 2**30, 3),
+        "arg_gb": round(ma.argument_size_in_bytes / 2**30, 3),
+        "temp_gb": round(ma.temp_size_in_bytes / 2**30, 3),
+        "fits_16gb_hbm": bool(dev_bytes <= 16 * 2**30),
+    }

@@ -1,0 +1,96 @@
+"""Render the dry-run/roofline result JSONs into EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs import ARCH_IDS, SHAPES, shape_applicable
+
+ARCHS = [a for a in ARCH_IDS if a != "llama-7b-paper"]
+
+
+def load(dirname: str) -> dict:
+    out = {}
+    for fn in os.listdir(dirname):
+        if fn.endswith(".json"):
+            with open(os.path.join(dirname, fn)) as f:
+                rec = json.load(f)
+            out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_table(recs: dict, mesh: str) -> str:
+    lines = [
+        "| arch | shape | devs | GB/dev | arg GB | temp GB | fits 16GB | "
+        "HLO GFLOPs/dev | HLO GB/dev | coll GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            if not shape_applicable(a, s):
+                if mesh == "single":
+                    lines.append(
+                        f"| {a} | {s} | — | — | — | — | — | — | — | — | "
+                        f"skipped: pure full-attention (DESIGN.md §5) |")
+                continue
+            r = recs.get((a, s, mesh))
+            if not r:
+                lines.append(f"| {a} | {s} | MISSING | | | | | | | | |")
+                continue
+            lines.append(
+                f"| {a} | {s} | {r['n_devices']} | {r['bytes_per_device_gb']} | "
+                f"{r['arg_gb']} | {r['temp_gb']} | "
+                f"{'yes' if r['fits_16gb_hbm'] else 'NO'} | "
+                f"{r['hlo_gflops']} | {r['hlo_gbytes']} | "
+                f"{r['collective_gbytes']} | "
+                f"{r.get('compile_s', '?')}+{r.get('compile2_s', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "roofline step | compute/roofline | MODEL GFLOPs | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            if not shape_applicable(a, s):
+                continue
+            r = recs.get((a, s, "single"))
+            if not r:
+                continue
+            lines.append(
+                f"| {a} | {s} | {fmt_s(r['t_compute_s'])} | "
+                f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+                f"**{r['dominant_term']}** | {fmt_s(r['roofline_step_s'])} | "
+                f"{r['roofline_fraction']:.2f} | {r['model_gflops_total']} | "
+                f"{r['useful_flop_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print("## Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

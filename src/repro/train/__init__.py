@@ -1,0 +1,1 @@
+from . import grad_compress, trainer  # noqa: F401

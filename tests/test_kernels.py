@@ -1,0 +1,192 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantized as Q
+from repro.core.dsbp import DSBPConfig
+from repro.core.formats import per_tensor_scale
+from repro.kernels import ops
+from repro.kernels.dsbp_matmul import dsbp_matmul_kernel_call
+from repro.kernels.fp8_quant_align import fp8_quant_align_kernel_call
+from repro.kernels.flash_attention import flash_attention_kernel_call
+from repro.kernels.ref import (
+    flash_attention_ref,
+    grouped_scaled_matmul_ref,
+    quant_align_ref,
+)
+
+
+def _x(shape, seed=0, spread=4, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal(shape) * np.exp2(rng.integers(-spread, spread, shape))
+    ).astype(dtype)
+
+
+# ---------------- dsbp_matmul ----------------
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 64), (128, 512, 128), (32, 64, 32),
+                                   (256, 1024, 64)])
+@pytest.mark.parametrize("folded", [False, True])
+def test_grouped_matmul_exact(m, k, n, folded):
+    rng = np.random.default_rng(m + k + n)
+    ng = k // 64
+    ax = rng.integers(-2047, 2048, (m, k)).astype(np.int32)
+    aw = rng.integers(-127, 128, (k, n)).astype(np.int32)
+    # unit scales, single group: the integer path is bit-exact per 64-group
+    # (products <= 2**18, 64-deep sums < 2**24; cross-group accumulation is
+    # f32, exactly like the macro's FP accumulator across column passes)
+    ones_x = np.ones((m, 1), np.float32)
+    ones_w = np.ones((1, n), np.float32)
+    got1 = dsbp_matmul_kernel_call(
+        jnp.asarray(ax[:, :64]), jnp.asarray(ones_x),
+        jnp.asarray(aw[:64]), jnp.asarray(ones_w),
+        bm=min(64, m), bn=min(64, n), bk=64, folded=folded,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got1),
+        (ax[:, :64].astype(np.int64) @ aw[:64].astype(np.int64)).astype(np.float32),
+    )
+    # wild random scales: cross-group f32 accumulation is order-dependent
+    # (like any f32 GEMM) -> tolerance instead of equality
+    sx = np.exp2(rng.integers(-8, 8, (m, ng))).astype(np.float32)
+    sw = np.exp2(rng.integers(-8, 8, (ng, n))).astype(np.float32)
+    got = dsbp_matmul_kernel_call(
+        jnp.asarray(ax), jnp.asarray(sx), jnp.asarray(aw), jnp.asarray(sw),
+        bm=min(64, m), bn=min(64, n), bk=min(256, k), folded=folded,
+    )
+    # f64 reference; error budget relative to the largest term magnitude
+    # (elementwise rtol is meaningless under cross-group cancellation)
+    a64 = ax.astype(np.float64).reshape(m, ng, 64)
+    w64 = aw.astype(np.float64).reshape(ng, 64, n)
+    ref64 = np.einsum("mgi,gin,mg,gn->mn", a64, w64, sx.astype(np.float64),
+                      sw.astype(np.float64))
+    tol = 1e-5 * np.abs(ref64).max()
+    np.testing.assert_allclose(np.asarray(got), ref64, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int16, np.int8])
+def test_grouped_matmul_dtypes(dtype):
+    rng = np.random.default_rng(7)
+    lim = min(np.iinfo(dtype).max, 2047)
+    ax = rng.integers(-lim, lim, (64, 128)).astype(dtype)
+    aw = rng.integers(-127, 127, (128, 64)).astype(np.int8)
+    sx = np.exp2(rng.integers(-4, 4, (64, 2))).astype(np.float32)
+    sw = np.exp2(rng.integers(-4, 4, (2, 64))).astype(np.float32)
+    got = dsbp_matmul_kernel_call(
+        jnp.asarray(ax), jnp.asarray(sx), jnp.asarray(aw), jnp.asarray(sw),
+        bm=64, bn=64, bk=128,
+    )
+    ref = grouped_scaled_matmul_ref(
+        jnp.asarray(ax.astype(np.int32)), jnp.asarray(sx),
+        jnp.asarray(aw.astype(np.int32)), jnp.asarray(sw),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5)
+
+
+# ---------------- fp8_quant_align ----------------
+
+@pytest.mark.parametrize("fmt", ["e2m5", "e3m4", "e4m3", "e5m2"])
+@pytest.mark.parametrize("mode,k,b_fix", [("dsbp", 1.0, 6), ("dsbp", 2.0, 4),
+                                          ("fixed", 0.0, 7)])
+def test_quant_align_bit_exact(fmt, mode, k, b_fix):
+    cfg = DSBPConfig(fmt=fmt, side="input", mode=mode, k=k, b_fix=b_fix)
+    x = jnp.asarray(_x((64, 256), seed=3))
+    ts = per_tensor_scale(x, fmt)
+    a_r, s_r, b_r = quant_align_ref(x * ts, cfg)
+    a_k, s_k, b_k = fp8_quant_align_kernel_call(x * ts, cfg, bm=32, bk=128)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (128, 512), (32, 192)])
+def test_quant_align_shapes(shape):
+    cfg = DSBPConfig(fmt="e4m3", side="input", k=1.0, b_fix=5)
+    x = jnp.asarray(_x(shape, seed=shape[0]))
+    ts = per_tensor_scale(x, "e4m3")
+    a_r, s_r, b_r = quant_align_ref(x * ts, cfg)
+    a_k, s_k, b_k = fp8_quant_align_kernel_call(x * ts, cfg, bm=32, bk=64)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+def test_quant_align_trunc_mode():
+    cfg = DSBPConfig(fmt="e4m3", side="input", k=1.0, b_fix=5,
+                     mantissa_rounding="trunc")
+    x = jnp.asarray(_x((32, 128), seed=11))
+    ts = per_tensor_scale(x, "e4m3")
+    a_r, _, _ = quant_align_ref(x * ts, cfg)
+    a_k, _, _ = fp8_quant_align_kernel_call(x * ts, cfg, bm=32, bk=128)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+# ---------------- end-to-end wrapper ----------------
+
+@pytest.mark.parametrize("preset", list(Q.PRESETS))
+@pytest.mark.parametrize("folded", [False, True])
+def test_dsbp_matmul_op_matches_core(preset, folded):
+    cfg = Q.PRESETS[preset]
+    x = jnp.asarray(_x((128, 512), seed=5))
+    w = jnp.asarray((_x((512, 128), seed=6, spread=1) * 0.05).astype(np.float32))
+    y_ref = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
+    y_k = np.asarray(ops.dsbp_matmul(x, w, cfg, folded=folded))
+    tol = 3e-5 * np.abs(y_ref).max()  # f32 accumulation-order difference only
+    np.testing.assert_allclose(y_k, y_ref, atol=tol)
+
+
+def test_dsbp_matmul_op_batched():
+    cfg = Q.PRESETS["precise"]
+    x = jnp.asarray(_x((2, 4, 16, 128), seed=8))
+    w = jnp.asarray((_x((128, 64), seed=9, spread=1) * 0.1).astype(np.float32))
+    y = ops.dsbp_matmul(x, w, cfg)
+    assert y.shape == (2, 4, 16, 64)
+    y_ref = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
+    tol = 3e-5 * np.abs(y_ref).max()
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=tol)
+
+
+# ---------------- flash attention ----------------
+
+@pytest.mark.parametrize(
+    "sq,skv,d,causal,window",
+    [(128, 128, 64, True, None), (128, 256, 64, True, None),
+     (256, 256, 32, True, 64), (128, 384, 64, False, None),
+     (128, 256, 128, True, 128)],
+)
+def test_flash_attention_kernel(sq, skv, d, causal, window):
+    rng = np.random.default_rng(sq + skv)
+    q = jnp.asarray(rng.standard_normal((sq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((skv, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((skv, d)).astype(np.float32))
+    o = flash_attention_kernel_call(q, k, v, causal=causal, window=window)
+    r = flash_attention_ref(q[None, None], k[None, None], v[None, None],
+                            causal=causal, window=window)[0, 0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_attention_gqa_wrapper():
+    rng = np.random.default_rng(12)
+    b, hq, hkv, sq, d = 2, 8, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, sq, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, sq, d)).astype(np.float32))
+    o = ops.flash_attention(q, k, v, causal=True)
+    r = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128, 192]),
+       st.sampled_from([1.0, 2.0]))
+def test_property_quant_align_random(seed, kdim, k):
+    """Property: kernel == oracle for arbitrary data/width combinations."""
+    cfg = DSBPConfig(fmt="e4m3", side="input", k=k, b_fix=4)
+    x = jnp.asarray(_x((32, kdim), seed=seed % 2**16))
+    ts = per_tensor_scale(x, "e4m3")
+    a_r, s_r, b_r = quant_align_ref(x * ts, cfg)
+    a_k, s_k, b_k = fp8_quant_align_kernel_call(x * ts, cfg, bm=32, bk=64)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))

@@ -1,0 +1,132 @@
+"""Model-component tests: attention oracle, SSD vs recurrence, RG-LRU, MoE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import ssd as S
+from repro.models import recurrent as R
+from repro.models import moe as MOE
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def _r(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape).astype(np.float32) * scale
+    )
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+def test_blockwise_attention_vs_ref(causal, window, hq, hkv):
+    q = _r((2, hq, 96, 32), 1)
+    k = _r((2, hkv, 96, 32), 2)
+    v = _r((2, hkv, 96, 32), 3)
+    out = blockwise_attention(q, k, v, causal=causal, window=window, bq=32, bkv=32)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window or None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_blockwise_attention_ragged_blocks():
+    """Sq/Skv not divisible by block sizes -> padding path."""
+    q, k, v = _r((1, 2, 80, 16), 4), _r((1, 2, 112, 16), 5), _r((1, 2, 112, 16), 6)
+    out = blockwise_attention(q, k, v, causal=False, bq=32, bkv=48)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_decode_attention_matches_ref():
+    q = _r((2, 8, 1, 32), 7)
+    k = _r((2, 2, 64, 32), 8)
+    v = _r((2, 2, 64, 32), 9)
+    out = decode_attention(q, k, v, jnp.int32(64))
+    ref = flash_attention_ref(q, k[:, :, :64], v[:, :, :64], causal=False)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]), np.asarray(ref[:, :, 0]),
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_ssd_chunked_vs_naive(chunk):
+    rng = np.random.default_rng(0)
+    B, s, H, P, N = 2, 64, 4, 16, 8
+    x = _r((B, s, H, P), 1)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, s, H)).astype(np.float32))
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, H).astype(np.float32))
+    b = _r((B, s, N), 2)
+    c = _r((B, s, N), 3)
+    y_ref, h_ref = S.ssd_naive(x, dt, a, b, c)
+    y, h = S.ssd_chunked(x, dt, a, b, c, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
+
+
+def test_ssd_state_carry():
+    """Two half-sequences with carried state == one full sequence."""
+    rng = np.random.default_rng(1)
+    B, s, H, P, N = 1, 64, 2, 8, 4
+    x = _r((B, s, H, P), 4)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, s, H)).astype(np.float32))
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, H).astype(np.float32))
+    b, c = _r((B, s, N), 5), _r((B, s, N), 6)
+    y_full, h_full = S.ssd_chunked(x, dt, a, b, c, 16)
+    y1, h1 = S.ssd_chunked(x[:, :32], dt[:, :32], a, b[:, :32], c[:, :32], 16)
+    y2, h2 = S.ssd_chunked(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:], 16, h0=h1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 32:]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-4)
+
+
+def test_rglru_scan_vs_stepwise():
+    cfg = smoke_config("recurrentgemma-2b")
+    params = R.init_rglru_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = _r((2, 16, cfg.d_model), 7, 0.5)
+    y_seq, st_seq = R.rglru_block(params, x, cfg)
+    st = R.init_rglru_state(2, cfg, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, st = R.rglru_decode_step(params, x[:, t : t + 1], st, cfg)
+        outs.append(o)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_step), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_seq["h"]), np.asarray(st["h"]), atol=2e-5)
+
+
+def test_rglru_stability():
+    """|a_t| < 1 -> bounded state for bounded inputs."""
+    cfg = smoke_config("recurrentgemma-2b")
+    params = R.init_rglru_block(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = _r((1, 512, cfg.d_model), 8, 2.0)
+    y, st = R.rglru_block(params, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.abs(st["h"]).max()) < 1e3
+
+
+def test_moe_no_drop_batch_independence():
+    cfg = smoke_config("mixtral-8x7b")
+    params = MOE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = _r((4, 16, cfg.d_model), 9)
+    y_full = MOE.moe_ffn(params, x, cfg, no_drop=True)
+    y_half = MOE.moe_ffn(params, x[:2], cfg, no_drop=True)
+    np.testing.assert_allclose(np.asarray(y_full[:2]), np.asarray(y_half), atol=1e-5)
+
+
+def test_moe_capacity_drops_some_tokens():
+    cfg = smoke_config("mixtral-8x7b").replace(capacity_factor=0.5)
+    params = MOE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = _r((4, 16, cfg.d_model), 10)
+    y_tight = MOE.moe_ffn(params, x, cfg, no_drop=False)
+    y_loose = MOE.moe_ffn(params, x, cfg, no_drop=True)
+    assert float(jnp.abs(y_tight - y_loose).max()) > 1e-4  # something dropped
+
+
+def test_moe_grad_finite():
+    cfg = smoke_config("grok-1-314b")
+    params = MOE.init_moe(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = _r((2, 32, cfg.d_model), 11)
+
+    def f(p):
+        return jnp.sum(MOE.moe_ffn(p, x, cfg) ** 2)
+
+    g = jax.grad(f)(params)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))

@@ -1,0 +1,79 @@
+"""MPU fixed-point pipeline vs the float oracle (Eq. 1 / Fig. 3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dsbp as D
+from repro.core import formats as F
+from repro.core import mpu as M
+
+
+def _realistic_shifts(n=2000, seed=0):
+    """Shift patterns as produced by real FP8 groups (max elem has shift 0)."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n, 64)) * np.exp2(rng.integers(-8, 8, (n, 64)))).astype(
+        np.float32
+    )
+    d = F.decompose(jnp.asarray(x), "e4m3")
+    shift, _, nz = D.group_shifts(d["e_unb"], d["m_int"])
+    return np.asarray(shift), np.asarray(nz)
+
+
+def test_reciprocal_lut_shape_and_accuracy():
+    lut = np.asarray(M.reciprocal_lut)
+    assert lut.shape == (256,)
+    d = np.arange(128, 256)
+    err = np.abs(lut[d] / 2.0**15 - 1.0 / d)
+    assert err.max() <= 0.5 / 2**15 + 1e-12  # correctly rounded reciprocal
+
+
+def test_ratio_against_oracle():
+    shift, nz = _realistic_shifts()
+    rf = np.asarray(D.predict_bdyn(jnp.asarray(shift), jnp.asarray(nz)))
+    rm = np.asarray(M.mpu_ratio(jnp.asarray(shift), jnp.asarray(nz))) / 2.0**M.MPU_Q
+    assert np.abs(rf - rm).max() < 0.05  # 8b LUT + F=12 truncation error
+
+
+@pytest.mark.parametrize("k,b_fix", [(0, 3), (1, 6), (1, 5), (2, 4), (2, 3)])
+def test_predict_within_one_level(k, b_fix):
+    shift, nz = _realistic_shifts(seed=k * 7 + b_fix)
+    rf = np.asarray(D.predict_bdyn(jnp.asarray(shift), jnp.asarray(nz)))
+    oracle = np.ceil(np.clip(k * rf + b_fix, 0, 31)).astype(np.int32)
+    hw = np.asarray(
+        M.mpu_predict(jnp.asarray(shift), jnp.asarray(nz), k * (1 << M.MPU_KF), b_fix)
+    )
+    assert np.abs(hw - oracle).max() <= 1
+    assert (hw == oracle).mean() >= 0.95
+
+
+def test_paper_examples():
+    nz = jnp.ones((1, 64), bool)
+    s0 = jnp.zeros((1, 64), jnp.int32)
+    # all shifts 0 -> B = b_fix exactly
+    assert int(M.mpu_predict(s0, nz, 16, 4)[0]) == 4
+    # nearly all 5 -> k=1 adds ~5
+    s5 = jnp.full((1, 64), 5, jnp.int32).at[0, 0].set(0)
+    b = int(M.mpu_predict(s5, nz, 16, 4)[0])
+    assert 8 <= b <= 9
+
+
+def test_saturation_5bit():
+    nz = jnp.ones((1, 64), bool)
+    s = jnp.zeros((1, 64), jnp.int32)
+    assert int(M.mpu_predict(s, nz, 16, 31)[0]) == 31
+    assert int(M.mpu_predict(s, nz, 16, 99)[0]) == 31  # saturates, no wrap
+
+
+def test_all_zero_group():
+    nz = jnp.zeros((1, 64), bool)
+    s = jnp.full((1, 64), 9, jnp.int32)
+    assert int(M.mpu_predict(s, nz, 32, 4)[0]) == 4  # ratio 0 -> B_fix
+
+
+def test_stage1_fixed_point_widths():
+    """num_i maxes at 2**(F-1); den_i at 2**F — the adder trees never overflow."""
+    shift = jnp.asarray(np.arange(32, dtype=np.int32)[None, :].repeat(2, 0))
+    nz = jnp.ones_like(shift, bool)
+    num, den = M._stage1(shift, nz)
+    assert int(jnp.max(num)) <= 1 << (M.MPU_F - 1)
+    assert int(jnp.max(den)) <= 1 << M.MPU_F
