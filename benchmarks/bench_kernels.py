@@ -56,6 +56,31 @@ def bench_flash_attention_kernel():
     return us, f"kernel_us={us:.0f};naive_ref_us={us_r:.0f}"
 
 
+def bench_pack_once_vs_per_call():
+    """Serving hot path: pack weights ONCE and run repeated GEMMs off the
+    int8 container (ops.dsbp_matmul_packed) vs re-quantizing the weights
+    inside every call (ops.dsbp_matmul).  Same kernels, same numerics —
+    the delta is exactly the offline weight path the paper moves off the
+    critical path."""
+    x = jnp.asarray(llama_like_activations((128, 2048), 5))
+    w = jnp.asarray(llama_like_weights((2048, 256), 6))
+    cfg = Q.PRESETS["precise"]
+    pw = Q.pack_weights(w, cfg)
+    jax.block_until_ready(pw.a)
+    _, us_packed = timed(lambda: ops.dsbp_matmul_packed(x, pw))
+    _, us_percall = timed(lambda: ops.dsbp_matmul(x, w, cfg))
+    y_p = np.asarray(ops.dsbp_matmul_packed(x, pw))
+    y_c = np.asarray(ops.dsbp_matmul(x, w, cfg))
+    relerr = float(np.abs(y_p - y_c).max() / (np.abs(y_c).max() + 1e-9))
+    from repro.core.packed import packed_nbytes
+    ratio = (w.size * w.dtype.itemsize) / packed_nbytes(pw)
+    return us_packed, (
+        f"packed_us={us_packed:.0f};per_call_us={us_percall:.0f};"
+        f"pack_once_speedup={us_percall/us_packed:.2f}x;"
+        f"hbm_ratio={ratio:.2f}x;relerr={relerr:.1e}"
+    )
+
+
 def bench_e2e_quantized_layer():
     """Full DSBP layer through both kernels vs the f32 einsum GEMM."""
     x = jnp.asarray(llama_like_activations((128, 2048), 3))

@@ -19,6 +19,7 @@ BENCHES = [
     ("fig8_breakdown", bench_paper.bench_fig8_breakdown),
     ("fiau_vs_barrel", bench_paper.bench_fiau_vs_barrel),
     ("kernel_dsbp_matmul", bench_kernels.bench_dsbp_matmul_kernel),
+    ("kernel_pack_once_vs_per_call", bench_kernels.bench_pack_once_vs_per_call),
     ("kernel_fp8_quant_align", bench_kernels.bench_fp8_quant_align_kernel),
     ("kernel_flash_attention", bench_kernels.bench_flash_attention_kernel),
     ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),

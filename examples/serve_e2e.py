@@ -1,22 +1,36 @@
-"""End-to-end serving driver: batched prefill + decode with DSBP-packed
-int8 weights (the macro's offline weight path), comparing memory and
-quantized-vs-float generations.
+"""End-to-end serving driver: batched prefill + decode with pack-once DSBP
+int8 weights (the macro's offline weight path).
+
+Three engines over the same checkpoint:
+  float    — no quantization (baseline numerics)
+  per-call — DSBP preset, raw weights re-quantized inside every matmul
+  packed   — DSBP preset, weights packed ONCE at Engine init (the paper's
+             offline/on-the-fly split); must match per-call token-for-token
 
   PYTHONPATH=src python examples/serve_e2e.py --new-tokens 16
 """
 import argparse
+import time
 
 import numpy as np
 import jax
 
 from repro.configs import smoke_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig, pack_weights_int8, packed_nbytes
+from repro.serve.engine import Engine, ServeConfig
+
+
+def _timed_generate(eng, prompts, n_new):
+    eng.generate(prompts, 2)  # warm the jit caches
+    t0 = time.monotonic()
+    out = eng.generate(prompts, n_new)
+    return out, time.monotonic() - t0
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--preset", default="precise")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -24,27 +38,39 @@ def main():
 
     cfg = smoke_config(args.arch).replace(remat=False, d_model=256, d_ff=512,
                                           vocab_size=1024)
+    cfg_q = cfg.replace(quant=args.preset)
     params = M.init(jax.random.PRNGKey(0), cfg)
-
-    packed, stats = pack_weights_int8(params, "precise")
-    full, quant = packed_nbytes(params), packed_nbytes(packed)
-    print(f"weights: {full/1e6:.1f} MB f32 -> {quant/1e6:.1f} MB packed "
-          f"({full/quant:.2f}x smaller), avg W bits {stats['avg_w_bits']:.2f}")
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
+    scfg = ServeConfig(max_len=128)
 
-    eng_f = Engine(params, cfg, ServeConfig(max_len=128))
-    out_f = eng_f.generate(prompts, args.new_tokens)
-    eng_q = Engine(params, cfg.replace(quant="precise"), ServeConfig(max_len=128))
-    out_q = eng_q.generate(prompts, args.new_tokens)
+    eng_f = Engine(params, cfg, scfg)
+    eng_percall = Engine(params, cfg_q, ServeConfig(max_len=128, pack=False))
+    eng_packed = Engine(params, cfg_q, scfg)
 
-    agree = float((out_f == out_q).mean())
-    print(f"batched greedy generations: {out_f.shape}")
-    print(f"float vs DSBP-quantized token agreement: {agree*100:.1f}%")
+    rep = eng_packed.pack_report
+    print(f"weights: {rep['raw_nbytes']/1e6:.1f} MB f32 -> "
+          f"{rep['packed_nbytes']/1e6:.1f} MB packed "
+          f"({rep['raw_nbytes']/rep['packed_nbytes']:.2f}x smaller), "
+          f"avg W bits {rep['avg_w_bits']:.2f}")
+
+    out_f, dt_f = _timed_generate(eng_f, prompts, args.new_tokens)
+    out_c, dt_c = _timed_generate(eng_percall, prompts, args.new_tokens)
+    out_p, dt_p = _timed_generate(eng_packed, prompts, args.new_tokens)
+
+    exact = bool((out_p == out_c).all())
+    agree = float((out_f == out_p).mean())
+    print(f"batched greedy generations: {out_p.shape}")
+    print(f"packed == per-call quantized (token-for-token): {exact}")
+    print(f"float vs DSBP token agreement: {agree*100:.1f}%")
+    print(f"decode wall: float {dt_f:.2f}s | quantize-per-call {dt_c:.2f}s | "
+          f"pack-once {dt_p:.2f}s ({dt_c/dt_p:.2f}x vs per-call)")
     for b in range(min(2, args.batch)):
-        print(f"  seq{b} float: {out_f[b][:12]}")
-        print(f"  seq{b} dsbp : {out_q[b][:12]}")
+        print(f"  seq{b} float : {out_f[b][:12]}")
+        print(f"  seq{b} packed: {out_p[b][:12]}")
+    if not exact:
+        raise SystemExit("packed serving diverged from per-call DSBP serving")
 
 
 if __name__ == "__main__":

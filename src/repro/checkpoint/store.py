@@ -12,6 +12,11 @@ Fault-tolerance contract (tests/test_checkpoint.py):
     container); on a real cluster each host saves its addressable shards
     and ``reshard_restore`` re-slices them for a different mesh — the
     resharding math itself is exercised in tests via simulated shards.
+
+DSBP-packed weight trees (PackedDSBPWeight leaves, DESIGN.md §2) round-trip
+transparently: the container is a pytree node whose fields flatten with
+attribute key paths, so a packed model checkpoints int8 mantissas + scales
+instead of the dense f32 matrices (tests/test_packed.py).
 """
 from __future__ import annotations
 
@@ -22,17 +27,22 @@ import jax
 import msgpack
 import numpy as np
 
+from repro.core.packed import key_entry_str
+
 __all__ = ["save", "restore", "latest_step", "reshard_leaf"]
 
 _SEP = "/"
+
+
+def _path_key(path) -> str:
+    return _SEP.join(key_entry_str(p) for p in path)
 
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out[key] = np.asarray(leaf)
+        out[_path_key(path)] = np.asarray(leaf)
     return out, treedef
 
 
@@ -84,7 +94,7 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None, host: int = 0):
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
     leaves = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree_like)[0]:
-        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = _path_key(path)
         arr = data[key]
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"{key}: ckpt shape {arr.shape} != model {np.shape(leaf)}")

@@ -59,6 +59,10 @@ class ArchConfig:
     scan_unroll: int = 1
     # DSBP quantization preset for projections (None = bf16/f32 baseline)
     quant: str | None = None
+    # quantized-linear method executing the preset — a repro.core.packed
+    # registry name ('dsbp_ref', 'dsbp_kernel'); None auto-selects
+    # 'dsbp_ref' when quant is set (DESIGN.md §2)
+    quant_method: str | None = None
     source: str = ""
 
     @property

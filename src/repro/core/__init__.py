@@ -1,7 +1,16 @@
 """Core: the paper's contribution — FP8 codecs, DSBP, and the macro models."""
-from . import dsbp, energy, fiau, formats, mac_array, mpu, quantized  # noqa: F401
+from . import dsbp, energy, fiau, formats, mac_array, mpu, packed, quantized  # noqa: F401
 from .dsbp import DSBPConfig, dsbp_quantize  # noqa: F401
 from .formats import FP8_FORMATS, FPFormat, decompose, get_format, quantize  # noqa: F401
+from .packed import (  # noqa: F401
+    PackedDSBPWeight,
+    QuantMethod,
+    get_quant_method,
+    packed_nbytes,
+    quant_method_names,
+    register_quant_method,
+    tree_is_packed,
+)
 from .quantized import (  # noqa: F401
     PRESETS,
     QuantizedMatmulConfig,
@@ -9,4 +18,6 @@ from .quantized import (  # noqa: F401
     dsbp_matmul_ref,
     dsbp_matmul_ste,
     matmul_stats,
+    pack_weights,
+    packed_matmul,
 )

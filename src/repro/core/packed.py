@@ -1,0 +1,298 @@
+"""Pack-once DSBP weight representation + the quantized-linear-method
+registry (DESIGN.md §2).
+
+The paper computes the weight path **offline** ("For weights, B_g can be
+calculated offline and rounded to the nearest valid bitwidth") and only the
+input path on-the-fly.  :class:`PackedDSBPWeight` is that offline product as
+a first-class, pytree-registered container:
+
+  a       int8  (..., N, n_g, G)  aligned mantissas (sign applied; weights
+                                  are <= 7 magnitude bits + sign -> int8)
+  scale   f32   (..., N, n_g)     per-64-group scales (powers of two)
+  tscale  f32                     per-channel (N, 1) or per-tensor () scale
+  bits    int8  (..., N, n_g)     predicted aligned widths B_g (stats/energy)
+
+plus static metadata: the **logical** GEMM shape ``(k, n)`` (so K-padding
+up to a multiple of the group is explicit, not recovered by slicing), the
+group size, and the :class:`~repro.core.quantized.QuantizedMatmulConfig`
+the weights were packed under (so consumers know which on-the-fly input
+path pairs with them).
+
+Because the container is a pytree node it flows transparently through
+``jax.jit`` / ``lax.scan`` (stacked per-unit params), ``jax.tree`` utils,
+sharding constraints, and the checkpoint store.
+
+The **registry** follows the vLLM ``FP8Config``/``FP8LinearMethod``
+pattern: a named :class:`QuantMethod` decides how ``models.layers.dense``
+executes a projection —
+
+  dense_bf16   plain einsum, no quantization
+  dsbp_ref     reference DSBP numerics (jnp grouped int contraction; STE
+               backward for QAT on raw weights)
+  dsbp_kernel  Pallas TPU kernels (fused quant-align + grouped int GEMM)
+
+``models.layers.Quant`` resolves a method once per forward; ``dense()``
+dispatches through it instead of isinstance-checking dict layouts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import GetAttrKey
+
+__all__ = [
+    "PackedDSBPWeight",
+    "QuantMethod",
+    "register_quant_method",
+    "get_quant_method",
+    "quant_method_names",
+    "key_entry_str",
+    "packed_nbytes",
+    "tree_is_packed",
+]
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class PackedDSBPWeight:
+    """Offline-quantized DSBP weight for a logical ``(k, n)`` GEMM.
+
+    Leading axes (stacked scan units, MoE experts) are carried by the
+    array children; ``k``/``n``/``group_size``/``cfg`` are static aux data,
+    so ``lax.scan`` can unstack a container along its leading axis and the
+    per-slice container keeps the same logical metadata.
+    """
+
+    __slots__ = ("a", "scale", "tscale", "bits", "k", "n", "group_size", "cfg")
+
+    def __init__(self, a, scale, tscale, bits, *, k, n, group_size, cfg):
+        self.a = a
+        self.scale = scale
+        self.tscale = tscale
+        self.bits = bits
+        self.k = k
+        self.n = n
+        self.group_size = group_size
+        self.cfg = cfg
+
+    # ---- pytree protocol ----
+
+    def tree_flatten_with_keys(self):
+        children = [
+            (GetAttrKey("a"), self.a),
+            (GetAttrKey("scale"), self.scale),
+            (GetAttrKey("tscale"), self.tscale),
+            (GetAttrKey("bits"), self.bits),
+        ]
+        aux = (self.k, self.n, self.group_size, self.cfg)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k, n, group_size, cfg = aux
+        a, scale, tscale, bits = children
+        return cls(a, scale, tscale, bits, k=k, n=n, group_size=group_size,
+                   cfg=cfg)
+
+    # ---- derived geometry ----
+
+    @property
+    def n_groups(self) -> int:
+        return self.a.shape[-2]
+
+    @property
+    def padded_k(self) -> int:
+        """K rounded up to a multiple of the group (zero-filled lanes)."""
+        return self.a.shape[-2] * self.a.shape[-1]
+
+    @property
+    def nbytes(self) -> int:
+        return packed_nbytes(self)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"PackedDSBPWeight(k={self.k}, n={self.n}, "
+                f"group={self.group_size}, a={getattr(self.a, 'shape', None)})")
+
+    # ---- dequantization (weight-only consumption) ----
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Back to a dense ``(..., k, n)`` matrix (weight-only quantization:
+        dequantization error only, activations untouched).
+
+        The logical ``k`` is sliced off the padded reduction axis here —
+        explicitly, from the container's metadata — instead of trusting the
+        caller's activation width.
+        """
+        a = self.a
+        lead = a.shape[:-3]
+        n, ng, g = a.shape[-3:]
+        deq = a.astype(dtype) * self.scale[..., None].astype(dtype)
+        flat = deq.reshape(*lead, n, ng * g)
+        ts = jnp.asarray(self.tscale).astype(dtype)
+        if ts.ndim < flat.ndim:  # per-tensor () or leading (L,) -> broadcast
+            ts = ts.reshape(*ts.shape, *([1] * (flat.ndim - ts.ndim)))
+        flat = (flat / ts)[..., : self.k]
+        return jnp.swapaxes(flat, -1, -2)
+
+
+def key_entry_str(entry) -> str:
+    """Stable string for one pytree key-path entry: dict key (DictKey),
+    sequence index (SequenceKey), or attribute name (GetAttrKey — the
+    fields of a PackedDSBPWeight flatten with attribute paths).  Shared by
+    the checkpoint store and the sharding constraints so both name the same
+    leaf identically."""
+    for attr in ("key", "idx", "name"):
+        v = getattr(entry, attr, None)
+        if v is not None:
+            return str(v)
+    return str(entry)
+
+
+def packed_nbytes(tree) -> int:
+    """Total bytes of every array leaf (packed containers included)."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def tree_is_packed(tree) -> bool:
+    """True if any leaf of ``tree`` is a :class:`PackedDSBPWeight`."""
+    is_pw = lambda x: isinstance(x, PackedDSBPWeight)
+    return any(is_pw(l) for l in jax.tree.leaves(tree, is_leaf=is_pw))
+
+
+# ---------------------------------------------------------------------------
+# Quantized-linear-method registry
+# ---------------------------------------------------------------------------
+
+class QuantMethod:
+    """How a projection executes: pack its weight, and apply x @ w.
+
+    ``apply(w, x, cfg)`` computes the logical ``x (..., K) @ w (K, N)``;
+    ``w`` is either a raw array or a :class:`PackedDSBPWeight`, and ``cfg``
+    is the active :class:`QuantizedMatmulConfig` (None = no activation
+    quantization, i.e. weight-only consumption of packed weights).
+
+    The base class owns the common dispatch — packed weights without a cfg
+    dequantize (weight-only), raw weights without a cfg run the plain
+    einsum — and subclasses implement only their two quantized paths.
+    """
+
+    name: str = "?"
+
+    def pack(self, w, cfg):
+        """Offline weight representation for this method (default: raw)."""
+        del cfg
+        return w
+
+    def apply(self, w, x, cfg):
+        if isinstance(w, PackedDSBPWeight):
+            if cfg is None:
+                return _einsum(w.dequantize(x.dtype), x)
+            return self._apply_packed(w, x, cfg)
+        if cfg is None:
+            return _einsum(w, x)
+        return self._apply_raw(w, x, cfg)
+
+    def _apply_packed(self, pw, x, cfg):
+        raise NotImplementedError
+
+    def _apply_raw(self, w, x, cfg):
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, QuantMethod] = {}
+
+
+def register_quant_method(cls):
+    """Class decorator: instantiate and register under ``cls.name``."""
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_quant_method(name: str) -> QuantMethod:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown quant method {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def quant_method_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _einsum(w, x):
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+@register_quant_method
+class DenseBF16Method(QuantMethod):
+    """No quantization: the bf16/f32 einsum baseline."""
+
+    name = "dense_bf16"
+
+    def apply(self, w, x, cfg):
+        del cfg
+        if isinstance(w, PackedDSBPWeight):
+            w = w.dequantize(x.dtype)
+        return _einsum(w, x)
+
+
+@register_quant_method
+class DSBPRefMethod(QuantMethod):
+    """Reference DSBP numerics (core.quantized, bit-exact macro oracle).
+
+    * packed weight + cfg  -> true integer path: on-the-fly input
+      quantization + grouped int contraction off the packed form (no weight
+      re-quantization, bit-exact vs ``dsbp_matmul_ref``);
+    * raw weight + cfg     -> ``dsbp_matmul_ste`` (QAT: quantized forward,
+      straight-through backward);
+    * no cfg (base class)  -> weight-only dequantization / plain einsum.
+    """
+
+    name = "dsbp_ref"
+
+    def pack(self, w, cfg):
+        from . import quantized as Q
+
+        return Q.pack_weights(w, cfg)
+
+    def _apply_packed(self, pw, x, cfg):
+        from . import quantized as Q
+
+        return Q.packed_matmul(x, pw, input_cfg=cfg.input_cfg).astype(x.dtype)
+
+    def _apply_raw(self, w, x, cfg):
+        from . import quantized as Q
+
+        return Q.dsbp_matmul_ste(x, w, cfg).astype(x.dtype)
+
+
+@register_quant_method
+class DSBPKernelMethod(QuantMethod):
+    """Pallas TPU kernels: fused quant-align (VPU) + grouped int GEMM (MXU).
+
+    Packed weights skip per-call quantization entirely — the int8 aligned
+    mantissas feed the GEMM kernel directly (``ops.dsbp_matmul_packed``),
+    with the *active* config's input path (so a preset override behaves
+    like dsbp_ref).  Raw weights keep STE gradients (``ops``' STE wrapper)
+    so QAT trains through the kernel forward too.
+    """
+
+    name = "dsbp_kernel"
+
+    def pack(self, w, cfg):
+        from . import quantized as Q
+
+        return Q.pack_weights(w, cfg)
+
+    def _apply_packed(self, pw, x, cfg):
+        from repro.kernels import ops as kops  # local import: optional dep
+
+        return kops.dsbp_matmul_packed(
+            x, pw, input_cfg=cfg.input_cfg
+        ).astype(x.dtype)
+
+    def _apply_raw(self, w, x, cfg):
+        from repro.kernels import ops as kops
+
+        return kops.dsbp_matmul_ste(x, w, cfg).astype(x.dtype)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from . import dsbp, energy
 from .dsbp import DSBPConfig
+from .packed import PackedDSBPWeight
 
 __all__ = [
     "QuantizedMatmulConfig",
@@ -35,6 +36,8 @@ __all__ = [
     "quantize_weights",
     "quantize_inputs",
     "grouped_int_matmul",
+    "pack_weights",
+    "packed_matmul",
     "dsbp_matmul_ref",
     "dsbp_matmul",
     "dsbp_matmul_ste",
@@ -104,6 +107,71 @@ def grouped_int_matmul(qx: dict, qw: dict) -> jax.Array:
     tx = qx["tscale"].reshape(-1, 1) if jnp.ndim(qx["tscale"]) else qx["tscale"]
     tw = qw["tscale"].reshape(1, -1) if jnp.ndim(qw["tscale"]) else qw["tscale"]
     return y / (tx * tw)
+
+
+def pack_weights(w: jax.Array, cfg: QuantizedMatmulConfig | str) -> PackedDSBPWeight:
+    """Offline weight path, run ONCE: w (..., K, N) -> PackedDSBPWeight.
+
+    ``cfg`` is a :data:`PRESETS` key or a full config; the container embeds
+    it so consumers know which on-the-fly input path pairs with the packed
+    weights.  Aligned mantissas are stored as int8 (weight widths are <= 7
+    magnitude bits + sign), the logical (K, N) shape is recorded so the
+    group padding of K is explicit, and leading axes (stacked scan units,
+    MoE experts) are preserved.  Bit-exact vs :func:`quantize_weights`:
+    the int8 narrowing is lossless for every valid weight width.
+    """
+    if isinstance(cfg, str):
+        cfg = PRESETS[cfg]
+    wcfg = cfg.weight_cfg
+    k, n = w.shape[-2:]
+    lead = w.shape[:-2]
+    wf = w.astype(jnp.float32)
+    if lead:
+        q = jax.vmap(lambda m: quantize_weights(m, wcfg))(wf.reshape(-1, k, n))
+        q = {key: q[key].reshape(*lead, *q[key].shape[1:])
+             for key in ("a", "scale", "tscale", "bits")}
+    else:
+        q = quantize_weights(wf, wcfg)
+    return PackedDSBPWeight(
+        a=q["a"].astype(jnp.int8),
+        scale=q["scale"],
+        tscale=q["tscale"],
+        bits=q["bits"].astype(jnp.int8),
+        k=k,
+        n=n,
+        group_size=wcfg.group_size,
+        cfg=cfg,
+    )
+
+
+@partial(jax.jit, static_argnames=("input_cfg",))
+def packed_matmul(x: jax.Array, pw: PackedDSBPWeight,
+                  input_cfg: DSBPConfig | None = None) -> jax.Array:
+    """Grouped int contraction consuming the packed form directly.
+
+    x (..., K) @ packed(K, N) -> (..., N) f32, with K the container's
+    *logical* reduction width.  The input path runs on the fly under
+    ``input_cfg`` (default: the config the weights were packed with), the
+    weight path is the stored int8 mantissas — nothing is re-quantized.
+    Bit-exact vs ``dsbp_matmul_ref(x, w, pw.cfg)`` when
+    ``pw = pack_weights(w, pw.cfg)``.
+    """
+    if x.shape[-1] != pw.k:
+        raise ValueError(
+            f"activation K={x.shape[-1]} != packed logical K={pw.k}"
+        )
+    if pw.a.ndim != 3:
+        raise ValueError(
+            f"packed_matmul needs a 2-D logical weight; got leading axes "
+            f"{pw.a.shape[:-3]} (vmap over them instead)"
+        )
+    icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
+    batch_shape = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    qx = quantize_inputs(xm, icfg)
+    qw = {"a": pw.a, "scale": pw.scale, "tscale": pw.tscale}
+    y = grouped_int_matmul(qx, qw)
+    return y.reshape(*batch_shape, pw.n)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

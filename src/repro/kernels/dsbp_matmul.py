@@ -95,10 +95,17 @@ def dsbp_matmul_kernel_call(
     """Tiled pallas_call; shapes must divide by the block sizes.
 
     ax (M,K) int, sx (M,K//64) f32, aw (K,N) int, sw (K//64,N) f32 -> (M,N) f32.
+
+    Operands may be any integer dtype: the input path produces int32 (up to
+    11 magnitude bits + sign) while pack-once weights arrive as **int8**
+    aligned mantissas (<= 7 magnitude bits + sign) straight from
+    ``PackedDSBPWeight`` — both stage to f32 losslessly inside the kernel.
     """
     m, k = ax.shape
     n = aw.shape[1]
     ng = k // GROUP
+    assert jnp.issubdtype(ax.dtype, jnp.integer), ax.dtype
+    assert jnp.issubdtype(aw.dtype, jnp.integer), aw.dtype
     assert k % GROUP == 0 and sx.shape == (m, ng) and sw.shape == (ng, n)
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % GROUP == 0

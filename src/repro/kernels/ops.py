@@ -3,6 +3,11 @@
 On this CPU container the kernels execute with ``interpret=True`` (the
 kernel body runs in Python op-by-op); on a real TPU set
 ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile them.
+
+Weight handling mirrors the macro (DESIGN.md §2): ``dsbp_matmul_packed``
+is the serving entry point — it consumes a :class:`PackedDSBPWeight`
+produced once offline, so only the input path runs per call.
+``dsbp_matmul`` is the pack-per-call convenience wrapper around it.
 """
 from __future__ import annotations
 
@@ -14,29 +19,79 @@ import jax.numpy as jnp
 
 from repro.core.dsbp import DSBPConfig
 from repro.core.formats import per_tensor_scale
-from repro.core.quantized import QuantizedMatmulConfig, quantize_weights
+from repro.core.packed import PackedDSBPWeight
+from repro.core.quantized import QuantizedMatmulConfig, pack_weights
 
 from . import dsbp_matmul as _dm
 from . import fp8_quant_align as _qa
 from . import flash_attention as _fa
 
-__all__ = ["interpret_default", "dsbp_matmul", "fp8_quant_align", "flash_attention"]
+__all__ = [
+    "interpret_default",
+    "dsbp_matmul",
+    "dsbp_matmul_packed",
+    "dsbp_matmul_ste",
+    "fp8_quant_align",
+    "flash_attention",
+]
 
 
 def interpret_default() -> bool:
     return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-@partial(jax.jit, static_argnames=("cfg", "interpret", "folded"))
-def fp8_quant_align(x: jax.Array, cfg: DSBPConfig, interpret: bool | None = None,
-                    folded: bool = False):
+@partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fp8_quant_align(x: jax.Array, cfg: DSBPConfig, interpret: bool | None = None):
     """On-the-fly input path: (M,K) f32 -> aligned ints, scales, bits."""
-    del folded
     if interpret is None:
         interpret = interpret_default()
     ts = per_tensor_scale(x, cfg.fmt)
     a, s, b = _qa.fp8_quant_align_kernel_call(x * ts, cfg, interpret=interpret)
     return {"a": a, "scale": s, "bits": b, "tscale": ts}
+
+
+@partial(jax.jit, static_argnames=("input_cfg", "interpret", "folded"))
+def dsbp_matmul_packed(
+    x: jax.Array,
+    pw: PackedDSBPWeight,
+    input_cfg: DSBPConfig | None = None,
+    interpret: bool | None = None,
+    folded: bool = True,
+):
+    """Pre-packed DSBP GEMM: x (..., K) @ packed(K, N) -> (..., N) f32.
+
+    The Pallas GEMM takes the stored int8 aligned mantissas + per-group
+    scales directly — no per-call weight quantization.  The input path runs
+    under ``input_cfg`` (default: the config the weights were packed with).
+    K is the container's *logical* reduction width; activations are
+    zero-padded here up to the packed (group-aligned) K', exactly mirroring
+    the zero lanes the weights were packed with.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if pw.a.ndim != 3:
+        raise ValueError(
+            f"dsbp_matmul_packed needs a 2-D logical weight; got leading "
+            f"axes {pw.a.shape[:-3]} (vmap over them instead)"
+        )
+    if x.shape[-1] != pw.k:
+        raise ValueError(
+            f"activation K={x.shape[-1]} != packed logical K={pw.k}"
+        )
+    batch = x.shape[:-1]
+    n, ng = pw.n, pw.n_groups
+    icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
+    xm = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if pw.padded_k != pw.k:
+        xm = jnp.pad(xm, ((0, 0), (0, pw.padded_k - pw.k)))
+    qx = fp8_quant_align(xm, icfg, interpret=interpret)
+    aw = pw.a.reshape(n, ng * _dm.GROUP).T  # (K', N) int8
+    sw = pw.scale.T  # (ng, N)
+    y = _dm.dsbp_matmul_kernel_call(
+        qx["a"], qx["scale"], aw, sw, interpret=interpret, folded=folded
+    )
+    tw = pw.tscale.reshape(1, -1) if jnp.ndim(pw.tscale) else pw.tscale
+    return (y / (qx["tscale"] * tw)).reshape(*batch, n)
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret", "folded"))
@@ -49,26 +104,39 @@ def dsbp_matmul(
 ):
     """Full DSBP GEMM through both kernels: x (..., K) @ w (K, N) -> f32.
 
-    Weights are quantized offline per call here for convenience; in the
-    serving engine the packed (aw, sw) pair is precomputed once
-    (repro.serve.engine caches it), which is where the memory saving lands.
+    Convenience wrapper that packs the weight per call; the serving engine
+    packs once at init (``core.quantized.pack_weights``) and calls
+    :func:`dsbp_matmul_packed`, which is where the memory saving and the
+    repeated-GEMM speedup land (benchmarks/bench_kernels.py).
     """
-    if interpret is None:
-        interpret = interpret_default()
-    batch = x.shape[:-1]
-    k = x.shape[-1]
-    xm = x.reshape(-1, k).astype(jnp.float32)
-    qx = fp8_quant_align(xm, cfg.input_cfg, interpret=interpret)
-    qw = quantize_weights(w, cfg.weight_cfg)  # (N, ng, G) layout
-    n = w.shape[-1]
-    ng = qw["a"].shape[1]
-    aw = qw["a"].reshape(n, ng * _dm.GROUP).T  # (K', N)
-    sw = qw["scale"].T  # (ng, N)
-    y = _dm.dsbp_matmul_kernel_call(
-        qx["a"], qx["scale"], aw, sw, interpret=interpret, folded=folded
+    return dsbp_matmul_packed(
+        x, pack_weights(w, cfg), interpret=interpret, folded=folded
     )
-    tw = qw["tscale"].reshape(1, -1) if jnp.ndim(qw["tscale"]) else qw["tscale"]
-    return (y / (qx["tscale"] * tw)).reshape(*batch, n)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def dsbp_matmul_ste(x: jax.Array, w: jax.Array, cfg: QuantizedMatmulConfig):
+    """Kernel forward, straight-through (full-precision) backward — the
+    Pallas counterpart of ``core.quantized.dsbp_matmul_ste`` so QAT can
+    train through the 'dsbp_kernel' method (gradients would otherwise be
+    zero through the rounding/clipping ops)."""
+    return dsbp_matmul(x, w, cfg)
+
+
+def _ste_fwd(x, w, cfg):
+    return dsbp_matmul(x, w, cfg), (x, w)
+
+
+def _ste_bwd(cfg, res, g):
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w)
+    xm = x.reshape(-1, x.shape[-1])
+    gm = g.reshape(-1, g.shape[-1])
+    gw = jnp.einsum("mk,mn->kn", xm, gm)
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+dsbp_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, interpret=None,

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig, pack_weights_int8, packed_nbytes
+from repro.serve.engine import Engine, ServeConfig
 
 
 def main():
@@ -24,21 +24,23 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--packed", action="store_true",
-                    help="serve DSBP-packed int8 weights")
+                    help="serve pack-once DSBP int8 weights (quantized path)")
+    ap.add_argument("--preset", default="precise")
     args = ap.parse_args()
 
     cfg = (smoke_config(args.arch) if args.smoke
            else get_config(args.arch).replace(dtype="bfloat16")).replace(remat=False)
-    params = M.init(jax.random.PRNGKey(0), cfg)
     if args.packed:
-        packed, stats = pack_weights_int8(params, "precise")
-        print(f"packed weights: {packed_nbytes(params)/1e6:.1f} -> "
-              f"{packed_nbytes(packed)/1e6:.1f} MB "
-              f"(avg W bits {stats['avg_w_bits']:.2f})")
-        params = packed
+        cfg = cfg.replace(quant=args.preset)
+    params = M.init(jax.random.PRNGKey(0), cfg)
 
     eng = Engine(params, cfg, ServeConfig(
         max_len=args.prompt_len + args.new_tokens + 8))
+    if eng.pack_report:
+        rep = eng.pack_report
+        print(f"packed weights: {rep['raw_nbytes']/1e6:.1f} -> "
+              f"{rep['packed_nbytes']/1e6:.1f} MB "
+              f"(avg W bits {rep['avg_w_bits']:.2f}, preset {rep['preset']})")
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len))
     t0 = time.monotonic()

@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantized import PRESETS, dsbp_matmul_ste
+from repro.core.packed import PackedDSBPWeight, get_quant_method
+from repro.core.quantized import PRESETS
 
 __all__ = ["rms_norm", "dense", "init_dense", "rope", "init_norm", "Quant"]
 
@@ -38,33 +39,42 @@ def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
 
 
 class Quant:
-    """Threaded quantization context: None or a PRESETS key / config."""
+    """Threaded quantization context: a PRESETS key / config (or None) plus
+    the quantized-linear method that executes it (DESIGN.md §2).
 
-    def __init__(self, preset: str | None):
+    ``method`` is a name from the ``repro.core.packed`` registry
+    ('dense_bf16', 'dsbp_ref', 'dsbp_kernel'); None auto-selects
+    'dsbp_ref' when a config is set, 'dense_bf16' otherwise.
+    """
+
+    def __init__(self, preset: str | None, method: str | None = None):
         self.cfg = PRESETS[preset] if isinstance(preset, str) else preset
+        if method is None:
+            method = "dsbp_ref" if self.cfg is not None else "dense_bf16"
+        self.method = get_quant_method(method)
 
     def __bool__(self):
         return self.cfg is not None
 
 
 def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
-    """x (..., d_in) @ w (d_in, d_out), optionally through the DSBP macro
-    numerics (straight-through gradients for QAT).
+    """x (..., d_in) @ w (d_in, d_out) through the active quant method.
 
-    ``w`` may also be a DSBP-*packed* weight (dict with int8 aligned
-    mantissas 'a' (d_out, n_g, G), per-group 'scale' and per-channel
-    'tscale' — serve.engine.pack_weights_int8): the stored/sharded/gathered
-    representation is then ~1.06 B/elem instead of 2 (bf16) / 4 (f32), the
-    serving memory+collective optimization of EXPERIMENTS.md §Perf-3.
+    ``w`` is a raw array or a :class:`PackedDSBPWeight` (offline-quantized
+    int8 aligned mantissas, ~1.06 B/elem stored/sharded/gathered instead of
+    2 bf16 / 4 f32 — the serving memory+collective lever).  Dispatch:
+
+    * quant context active -> its registry method runs the GEMM; packed
+      weights take the true DSBP integer path (on-the-fly input
+      quantization against the stored mantissas, no re-quantization), raw
+      weights the QAT STE path.
+    * no quant context -> packed weights dequantize (weight-only
+      quantization); raw weights are the plain einsum baseline.
     """
-    if isinstance(w, dict):
-        n, ng, g = w["a"].shape
-        deq = w["a"].astype(x.dtype) * w["scale"][..., None].astype(x.dtype)
-        ts = w["tscale"].reshape(-1, 1).astype(x.dtype)
-        w = (deq.reshape(n, ng * g) / ts).T[: x.shape[-1]]
-        return jnp.einsum("...k,kn->...n", x, w)
-    if quant and quant.cfg is not None:
-        return dsbp_matmul_ste(x, w, quant.cfg).astype(x.dtype)
+    if quant is not None and quant.cfg is not None:
+        return quant.method.apply(w, x, quant.cfg)
+    if isinstance(w, PackedDSBPWeight):
+        return get_quant_method("dsbp_ref").apply(w, x, None)
     return jnp.einsum("...k,kn->...n", x, w)
 
 

@@ -114,7 +114,7 @@ def _unit_seq(unit_params, x, cfg, quant, positions, with_cache: bool,
 
 
 def forward(params, batch: dict, cfg: ArchConfig, collect_cache: bool = False):
-    quant = Quant(cfg.quant)
+    quant = Quant(cfg.quant, cfg.quant_method)
     x, positions = embed_tokens(params, batch, cfg)
 
     def unit_body(xc, stacked):
@@ -180,7 +180,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
     """Run the prompt; returns (last-position logits, cache, length)."""
-    quant = Quant(cfg.quant)
+    quant = Quant(cfg.quant, cfg.quant_method)
     x, positions = embed_tokens(params, batch, cfg)
     length = x.shape[1]
 
@@ -230,7 +230,7 @@ def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
     """One token for every sequence. token_batch['tokens']: (B, 1) (or
     (B,1,K) audio). pos: scalar int32 absolute position. Returns
     (logits (B,1,V), new_cache)."""
-    quant = Quant(cfg.quant)
+    quant = Quant(cfg.quant, cfg.quant_method)
     emb = params["embed"]
     if cfg.frontend == "audio_codebooks":
         tok = token_batch["tokens"]

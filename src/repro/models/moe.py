@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.packed import PackedDSBPWeight
+
 from .layers import Quant, dense
 
 __all__ = ["init_moe", "moe_ffn"]
@@ -79,18 +81,20 @@ def moe_ffn(params, x: jax.Array, cfg, quant: Quant | None = None,
         dispatch = dispatch | (oh > 0)
         combine = combine + oh * gate_vals[..., choice, None, None]
 
-    def _expert_w(wp, d_in):
-        # DSBP-packed expert weights: (E, d_out, ng, G) int8 -> (E, d_in, d_out)
-        if not isinstance(wp, dict):
-            return wp
-        e_, dout, ng, g_ = wp["a"].shape
-        deq = wp["a"].astype(x.dtype) * wp["scale"][..., None].astype(x.dtype)
-        ts = wp["tscale"].reshape(e_, dout, 1).astype(x.dtype)
-        return (deq.reshape(e_, dout, ng * g_) / ts)[:, :, :d_in].transpose(0, 2, 1)
+    def _expert_w(wp):
+        # DSBP-packed expert weights dequantize for the dispatch einsums
+        # (weight-only consumption: experts contract against activations of
+        # mixed tokens, so the per-row on-the-fly path stays in `dense`).
+        # The logical (d_in, d_out) comes from the container, so the group
+        # padding of d_in is stripped explicitly: (E, N, ng, G) int8 ->
+        # (E, d_in, d_out).
+        if isinstance(wp, PackedDSBPWeight):
+            return wp.dequantize(x.dtype)
+        return wp
 
-    w1 = _expert_w(params["w1"], d)
-    w3 = _expert_w(params["w3"], d)
-    w2 = _expert_w(params["w2"], cfg.d_ff)
+    w1 = _expert_w(params["w1"])
+    w3 = _expert_w(params["w3"])
+    w2 = _expert_w(params["w2"])
     xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
     h1 = jnp.einsum("gecd,edf->gecf", xe, w1)
     h3 = jnp.einsum("gecd,edf->gecf", xe, w3)

@@ -20,6 +20,8 @@ import os
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.packed import key_entry_str
+
 __all__ = ["sharding_ctx", "constrain", "gather_unit_params", "anchor_batch"]
 
 _CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh_ctx", default=None)
@@ -83,8 +85,10 @@ def gather_unit_params(params):
     mesh = ctx["mesh"]
 
     def fix(path, leaf):
-        name = str(getattr(path[-1], "key", ""))
-        parent = str(getattr(path[-2], "key", "")) if len(path) >= 2 else ""
+        # dict keys (raw params) or attribute names (PackedDSBPWeight
+        # container fields, which flatten with GetAttrKey paths)
+        name = key_entry_str(path[-1])
+        parent = key_entry_str(path[-2]) if len(path) >= 2 else ""
         if name in ("a", "scale", "tscale") and parent in _GATHERED:
             # packed projection: gather the 'data'(ng) dim; keep 'model'
             spec = [None] * leaf.ndim

@@ -1,10 +1,14 @@
-"""Serving engine: batched prefill + decode with DSBP-quantized weights.
+"""Serving engine: batched prefill + decode with DSBP-packed weights.
 
-The engine owns the KV caches and (optionally) the packed DSBP weight
-representation: offline-quantized aligned mantissas stored as int8
-(weights are ≤ 7 magnitude bits + sign) + one f32 scale per 64-group —
-a 3.8x HBM saving vs f32 (1.9x vs bf16) on every projection, which is the
-serving-memory lever in EXPERIMENTS.md §Perf.
+The engine owns the KV caches and the packed DSBP weight representation
+(DESIGN.md §2): when the arch config carries a quant preset, every
+projection matrix is offline-quantized ONCE at ``__init__`` into a
+:class:`~repro.core.packed.PackedDSBPWeight` — int8 aligned mantissas
+(weights are <= 7 magnitude bits + sign) + one f32 scale per 64-group — and
+prefill/decode run entirely off that packed tree.  That is the paper's
+offline-weight / on-the-fly-input split: only the activation path quantizes
+per token, and the HBM footprint drops ~3.8x vs f32 (1.9x vs bf16) per
+projection (reported via :func:`packed_nbytes` in ``Engine.pack_report``).
 """
 from __future__ import annotations
 
@@ -15,10 +19,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.quantized import PRESETS, quantize_weights
+from repro.core.packed import packed_nbytes, tree_is_packed
+from repro.core.quantized import PRESETS, pack_weights
 from repro.models import model as M
 
 __all__ = ["ServeConfig", "Engine", "pack_weights_int8", "packed_nbytes"]
+
+# projection leaf names that carry a DSBP-quantizable GEMM (the sharding
+# contract of models/layers.py keys these same names)
+PROJ_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "w1", "w2", "w3", "w_in", "w_gate", "w_out",
+    "wa", "wx",
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,50 +39,63 @@ class ServeConfig:
     batch_size: int = 4
     temperature: float = 0.0  # 0 = greedy
     seed: int = 0
+    # pack projections once at Engine.__init__ when a preset is configured
+    # (cfg.quant, overridable via pack_preset); False serves raw weights,
+    # re-quantizing them on every matmul call.
+    pack: bool = True
+    pack_preset: str | None = None
 
 
 def pack_weights_int8(params, preset: str = "precise"):
-    """Offline DSBP pass over every projection matrix: returns a pytree of
-    {a: int8, scale: f32, tscale, bits} replacing 2-D weight leaves, plus
-    bit statistics (for the energy model)."""
-    cfg = PRESETS[preset].weight_cfg
+    """Offline DSBP pass over every projection matrix, run ONCE: returns a
+    pytree where 2-D+ projection leaves become
+    :class:`~repro.core.packed.PackedDSBPWeight` containers (int8 aligned
+    mantissas, f32 group scales, per-channel tscale, logical (K, N) shape),
+    plus bit statistics for the energy model."""
+    cfg = PRESETS[preset] if isinstance(preset, str) else preset
+    g = cfg.weight_cfg.group_size
     stats = {"bits_sum": 0.0, "groups": 0}
-    _PROJ = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "w_in", "w_gate",
-             "w_out", "wa", "wx"}
 
     def pack(path, leaf):
         name = str(getattr(path[-1], "key", ""))
-        if name not in _PROJ or leaf.ndim < 2 or leaf.shape[-2] < 64:
+        if name not in PROJ_NAMES or getattr(leaf, "ndim", 0) < 2 \
+                or leaf.shape[-2] < g:
             return leaf
-        lead = leaf.shape[:-2]
-        w2d = leaf.astype(jnp.float32).reshape(-1, *leaf.shape[-2:])
-        q = jax.vmap(lambda w: quantize_weights(w, cfg))(w2d)
-        stats["bits_sum"] += float(jnp.sum(q["bits"] + 1))
-        stats["groups"] += int(np.prod(q["bits"].shape))
-        n_out = q["a"].shape[1]
-        return {
-            "a": q["a"].astype(jnp.int8).reshape(*lead, *q["a"].shape[1:]),
-            "scale": q["scale"].reshape(*lead, *q["scale"].shape[1:]),
-            # per-channel tscale (LLM-FP4 recipe): (..., N_out, 1)
-            "tscale": q["tscale"].reshape(*lead, n_out, 1),
-        }
+        pw = pack_weights(leaf, cfg)
+        stats["bits_sum"] += float(jnp.sum(pw.bits.astype(jnp.int32) + 1))
+        stats["groups"] += int(np.prod(pw.bits.shape))
+        return pw
 
     packed = jax.tree_util.tree_map_with_path(pack, params)
     avg_w_bits = stats["bits_sum"] / max(stats["groups"], 1)
     return packed, {"avg_w_bits": avg_w_bits}
 
 
-def packed_nbytes(tree) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
-
-
 class Engine:
-    """Minimal continuous-batching server over M.prefill / M.decode_step."""
+    """Minimal continuous-batching server over M.prefill / M.decode_step.
+
+    With ``cfg.quant`` set and ``scfg.pack`` (the default), weights are
+    packed once here and every subsequent prefill/decode consumes the int8
+    representation directly — generations are bit-identical to serving the
+    raw weights through the same preset (which re-quantizes per call), see
+    tests/test_packed.py.
+    """
 
     def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
-        self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self.pack_report = None
+        preset = scfg.pack_preset or cfg.quant
+        if scfg.pack and preset is not None and not tree_is_packed(params):
+            raw_nbytes = packed_nbytes(params)
+            params, stats = pack_weights_int8(params, preset)
+            self.pack_report = {
+                "preset": preset,
+                "raw_nbytes": raw_nbytes,
+                "packed_nbytes": packed_nbytes(params),
+                "avg_w_bits": stats["avg_w_bits"],
+            }
+        self.params = params
         self._decode = jax.jit(
             lambda p, tok, cache, pos: M.decode_step(p, tok, cache, pos, cfg)
         )

@@ -1,7 +1,7 @@
 """FIAU pointer machine == barrel shifter, exhaustively + by property."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional: see tests/_hyp.py
 
 from repro.core import fiau as FI
 

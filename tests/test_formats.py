@@ -3,7 +3,7 @@ import ml_dtypes
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis optional: see tests/_hyp.py
 
 from repro.core import formats as F
 

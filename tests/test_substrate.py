@@ -205,12 +205,15 @@ def test_pack_weights_int8_saves_memory():
     packed, stats = pack_weights_int8(params, "precise")
     assert 2.0 <= stats["avg_w_bits"] <= 8.0
     # per packed projection: f32 -> int8 + one f32 scale per 64 ≈ 0.27x
+    from repro.core.packed import key_entry_str
+
     flat_p = {jax.tree_util.keystr(p): l
               for p, l in jax.tree_util.tree_flatten_with_path(params)[0]}
     flat_q = jax.tree_util.tree_flatten_with_path(packed)[0]
+    # container fields flatten with attribute key paths ('a', 'scale', ...)
     proj_packed = sum(l.size * l.dtype.itemsize for p, l in flat_q
-                      if "'a'" in jax.tree_util.keystr(p)
-                      or "'scale'" in jax.tree_util.keystr(p))
+                      if key_entry_str(p[-1]) in ("a", "scale"))
+    assert proj_packed > 0  # the filter must actually see packed fields
     proj_orig = sum(l.size * l.dtype.itemsize
                     for key, l in flat_p.items()
                     if any(f"'{n}'" in key for n in
