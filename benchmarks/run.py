@@ -9,7 +9,7 @@ import argparse
 import sys
 import traceback
 
-from . import bench_kernels, bench_paper
+from . import bench_kernels, bench_paper, bench_serving
 
 BENCHES = [
     ("fig6_bitwidth_accuracy", bench_paper.bench_fig6_bitwidth_accuracy),
@@ -23,6 +23,7 @@ BENCHES = [
     ("kernel_fp8_quant_align", bench_kernels.bench_fp8_quant_align_kernel),
     ("kernel_flash_attention", bench_kernels.bench_flash_attention_kernel),
     ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),
+    ("serving_ragged_continuous_batching", bench_serving.bench_serving_ragged),
 ]
 
 

@@ -1,11 +1,14 @@
-"""End-to-end serving driver: batched prefill + decode with pack-once DSBP
+"""End-to-end serving driver: ragged continuous batching with pack-once DSBP
 int8 weights (the macro's offline weight path).
 
-Three engines over the same checkpoint:
+Three engines over the same checkpoint serve the SAME ragged prompt mix:
   float    — no quantization (baseline numerics)
   per-call — DSBP preset, raw weights re-quantized inside every matmul
   packed   — DSBP preset, weights packed ONCE at Engine init (the paper's
              offline/on-the-fly split); must match per-call token-for-token
+
+Each request additionally must match its own batch-size-1 generation
+(length-aware batching: ragged prompts cannot perturb each other).
 
   PYTHONPATH=src python examples/serve_e2e.py --new-tokens 16
 """
@@ -20,10 +23,10 @@ from repro.models import model as M
 from repro.serve.engine import Engine, ServeConfig
 
 
-def _timed_generate(eng, prompts, n_new):
-    eng.generate(prompts, 2)  # warm the jit caches
+def _timed_serve(eng, prompts, n_new):
+    eng.serve(prompts, max_new_tokens=2)  # warm every admission prefill shape
     t0 = time.monotonic()
-    out = eng.generate(prompts, n_new)
+    out = eng.serve(prompts, max_new_tokens=n_new)
     return out, time.monotonic() - t0
 
 
@@ -42,11 +45,15 @@ def main():
     params = M.init(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
-    scfg = ServeConfig(max_len=128)
+    # ragged mix: 2 requests per slot, lengths in [L/2, L]
+    lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
+                        2 * args.batch)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lens]
+    scfg = ServeConfig(max_len=128, batch_size=args.batch)
 
     eng_f = Engine(params, cfg, scfg)
-    eng_percall = Engine(params, cfg_q, ServeConfig(max_len=128, pack=False))
+    eng_percall = Engine(params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, pack=False))
     eng_packed = Engine(params, cfg_q, scfg)
 
     rep = eng_packed.pack_report
@@ -55,22 +62,33 @@ def main():
           f"({rep['raw_nbytes']/rep['packed_nbytes']:.2f}x smaller), "
           f"avg W bits {rep['avg_w_bits']:.2f}")
 
-    out_f, dt_f = _timed_generate(eng_f, prompts, args.new_tokens)
-    out_c, dt_c = _timed_generate(eng_percall, prompts, args.new_tokens)
-    out_p, dt_p = _timed_generate(eng_packed, prompts, args.new_tokens)
+    out_f, dt_f = _timed_serve(eng_f, prompts, args.new_tokens)
+    out_c, dt_c = _timed_serve(eng_percall, prompts, args.new_tokens)
+    out_p, dt_p = _timed_serve(eng_packed, prompts, args.new_tokens)
+    st = eng_packed.last_stats
 
-    exact = bool((out_p == out_c).all())
-    agree = float((out_f == out_p).mean())
-    print(f"batched greedy generations: {out_p.shape}")
+    # batch-invariance: each request == its own batch-1 greedy generation
+    eng_1 = Engine(eng_packed.params, cfg_q, ServeConfig(max_len=128, batch_size=1))
+    solo_ok = all(
+        bool((out_p[i] == eng_1.generate(p[None, :], len(out_p[i]))[0]).all())
+        for i, p in enumerate(prompts)
+    )
+    exact = all((out_p[i] == out_c[i]).all() for i in out_p)
+    agree = np.mean([float((out_f[i] == out_p[i]).mean()) for i in out_p])
+    print(f"served {len(prompts)} ragged requests (lens {lens.tolist()}) on "
+          f"{args.batch} slots, occupancy {st['occupancy']*100:.0f}%")
     print(f"packed == per-call quantized (token-for-token): {exact}")
+    print(f"ragged batch == batch-size-1 per request: {solo_ok}")
     print(f"float vs DSBP token agreement: {agree*100:.1f}%")
     print(f"decode wall: float {dt_f:.2f}s | quantize-per-call {dt_c:.2f}s | "
           f"pack-once {dt_p:.2f}s ({dt_c/dt_p:.2f}x vs per-call)")
-    for b in range(min(2, args.batch)):
-        print(f"  seq{b} float : {out_f[b][:12]}")
-        print(f"  seq{b} packed: {out_p[b][:12]}")
+    for uid in list(out_p)[:2]:
+        print(f"  req{uid} float : {out_f[uid][:12]}")
+        print(f"  req{uid} packed: {out_p[uid][:12]}")
     if not exact:
         raise SystemExit("packed serving diverged from per-call DSBP serving")
+    if not solo_ok:
+        raise SystemExit("ragged batch diverged from batch-size-1 serving")
 
 
 if __name__ == "__main__":

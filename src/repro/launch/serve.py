@@ -1,7 +1,11 @@
-"""Production serving launcher: batched prefill + decode under a mesh.
+"""Production serving launcher: continuous batching under a mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
-      --batch 4 --prompt-len 16 --new-tokens 8 [--packed]
+      --batch 4 --prompt-len 16 --new-tokens 8 [--packed] [--ragged]
+
+``--ragged`` draws mixed-length prompts (2 per slot) and runs them through
+the ``Engine.serve`` slot scheduler — per-request generations, slot reuse
+and occupancy stats — instead of one uniform ``generate`` batch.
 """
 from __future__ import annotations
 
@@ -26,6 +30,8 @@ def main():
     ap.add_argument("--packed", action="store_true",
                     help="serve pack-once DSBP int8 weights (quantized path)")
     ap.add_argument("--preset", default="precise")
+    ap.add_argument("--ragged", action="store_true",
+                    help="mixed-length prompts through the slot scheduler")
     args = ap.parse_args()
 
     cfg = (smoke_config(args.arch) if args.smoke
@@ -35,14 +41,30 @@ def main():
     params = M.init(jax.random.PRNGKey(0), cfg)
 
     eng = Engine(params, cfg, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 8))
+        max_len=args.prompt_len + args.new_tokens + 8, batch_size=args.batch))
     if eng.pack_report:
         rep = eng.pack_report
         print(f"packed weights: {rep['raw_nbytes']/1e6:.1f} -> "
               f"{rep['packed_nbytes']/1e6:.1f} MB "
               f"(avg W bits {rep['avg_w_bits']:.2f}, preset {rep['preset']})")
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len))
+    rng = np.random.default_rng(0)
+    if args.ragged:
+        lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
+                            2 * args.batch)
+        reqs = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lens]
+        t0 = time.monotonic()
+        out = eng.serve(reqs, max_new_tokens=args.new_tokens)
+        dt = time.monotonic() - t0
+        st = eng.last_stats
+        tps = st["decode_tokens"] / dt
+        print(f"served {st['requests']} ragged requests (lens {lens.tolist()}) "
+              f"in {dt:.2f}s ({tps:.1f} tok/s, "
+              f"occupancy {st['occupancy']*100:.0f}%, "
+              f"{st['decode_steps']} pool steps)")
+        for uid in list(out)[:2]:
+            print(f"  req{uid}: {out[uid].tolist()}")
+        return
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
     t0 = time.monotonic()
     out = eng.generate(prompts, args.new_tokens)
     dt = time.monotonic() - t0

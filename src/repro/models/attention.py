@@ -22,7 +22,8 @@ __all__ = ["blockwise_attention", "decode_attention"]
 NEG_INF = -1e30
 
 
-def _attend_block(q, k, v, qpos, kpos, kv_len, causal, window, state):
+def _attend_block(q, k, v, qpos, kpos, kv_len, causal, window, state,
+                  kv_lens=None):
     m_prev, l_prev, acc = state
     s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
     mask = jnp.broadcast_to(kpos[None, :] < kv_len, s.shape[-2:])
@@ -31,6 +32,8 @@ def _attend_block(q, k, v, qpos, kpos, kv_len, causal, window, state):
     if window:
         mask &= kpos[None, :] > qpos[:, None] - window
     s = jnp.where(mask[None, None], s, NEG_INF)
+    if kv_lens is not None:  # ragged batch: keys at/after a row's length are pad
+        s = jnp.where((kpos[None, :] < kv_lens[:, None])[:, None, None], s, NEG_INF)
     m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_cur[..., None])
     alpha = jnp.exp(m_prev - m_cur)
@@ -53,6 +56,7 @@ def blockwise_attention(
     bq: int = 512,
     bkv: int = 1024,
     q_offset: int = 0,  # absolute position of q[0] (chunked prefill)
+    kv_lens: jax.Array | None = None,  # (B,) valid KV length per row (ragged)
 ):
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
@@ -80,7 +84,8 @@ def blockwise_attention(
             kb = jnp.repeat(kb, rep, axis=1)
             vb = jnp.repeat(vb, rep, axis=1)
             kpos = ki * bkv + jnp.arange(bkv)
-            state = _attend_block(qb, kb, vb, qpos, kpos, skv, causal, window, state)
+            state = _attend_block(qb, kb, vb, qpos, kpos, skv, causal, window,
+                                  state, kv_lens=kv_lens)
             return state, None
 
         init = (
@@ -102,7 +107,7 @@ def decode_attention(
     q: jax.Array,  # (B, Hq, 1, D)
     k_cache: jax.Array,  # (B, Hkv, S, D)
     v_cache: jax.Array,  # (B, Hkv, S, D)
-    pos: jax.Array,  # () current position (tokens < pos are valid)
+    pos: jax.Array,  # () or (B,) current position (tokens < pos are valid)
     window: int = 0,
 ):
     b, hq, _, d = q.shape
@@ -111,10 +116,12 @@ def decode_attention(
     qg = (q * d**-0.5).reshape(b, hkv, rep, d)
     logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
     kpos = jnp.arange(s)
-    valid = kpos < pos
+    pos = jnp.asarray(pos)
+    posb = jnp.broadcast_to(pos, (b,))  # ragged slots advance independently
+    valid = kpos[None, :] < posb[:, None]
     if window:
-        valid &= kpos >= pos - window
-    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        valid &= kpos[None, :] >= (posb - window)[:, None]
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -99,11 +99,11 @@ def _qkv(params, y, cfg, quant, positions):
     return q, k, v.transpose(0, 2, 1, 3)
 
 
-def _attn_seq(params, x, cfg, kind, quant, positions):
+def _attn_seq(params, x, cfg, kind, quant, positions, lengths=None):
     y = rms_norm(params["norm1"], x, cfg.norm_eps)
     q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
     window = cfg.window if kind == "attn_local" else 0
-    o = blockwise_attention(q, k, v, causal=True, window=window)
+    o = blockwise_attention(q, k, v, causal=True, window=window, kv_lens=lengths)
     b, s, _ = x.shape
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
     x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
@@ -113,30 +113,36 @@ def _attn_seq(params, x, cfg, kind, quant, positions):
 # ---------------- per-kind sequence step ----------------
 
 def layer_seq(params, x, cfg, kind, quant=None, positions=None, state=None,
-              no_drop=False):
+              no_drop=False, lengths=None):
     """(x, carry_state) for one layer in sequence mode.
 
     Returns (x_out, aux) where aux is (k, v) for attention kinds (for cache
     construction during prefill) or the recurrent state dict.
+
+    ``lengths`` ((B,) int32, optional) marks right-padded rows of a ragged
+    batch: attention masks keys at/after each row's length, and the
+    recurrent kinds freeze their state across pad steps, so aux/state is
+    what each sequence would produce served alone at its true length.
     """
     if positions is None:
         positions = jnp.arange(x.shape[1])
     params = gather_unit_params(params)  # FSDP all-gather point (no-op
     x = anchor_batch(x)                  # outside a sharding_ctx)
     if kind in ("attn_full", "attn_local"):
-        x, kv = _attn_seq(params, x, cfg, kind, quant, positions)
+        x, kv = _attn_seq(params, x, cfg, kind, quant, positions, lengths)
         x = _mlp_part(params, x, cfg, quant, no_drop)
         return x, kv
     if kind == "rglru":
         y = rms_norm(params["norm1"], x, cfg.norm_eps)
-        o, st = rec.rglru_block(params["rec"], y, cfg, quant, state)
+        o, st = rec.rglru_block(params["rec"], y, cfg, quant, state,
+                                lengths=lengths)
         x = x + o
         x = _mlp_part(params, x, cfg, quant, no_drop)
         return x, st
     if kind == "ssd":
         y = rms_norm(params["norm1"], x, cfg.norm_eps)
         o, st = ssd_mod.ssd_block(params["ssd"], y, cfg, quant, state,
-                                   chunk=cfg.ssd_chunk)
+                                   chunk=cfg.ssd_chunk, lengths=lengths)
         return x + o, st
     raise ValueError(kind)  # pragma: no cover
 
@@ -161,45 +167,52 @@ def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype):
     raise ValueError(kind)  # pragma: no cover
 
 
-def fill_kv_cache(cache, k, v, length: int):
-    """Write prefill K/V (B,H,L,D) into the (possibly ring) cache buffer."""
+def fill_kv_cache(cache, k, v, lengths):
+    """Write prefill K/V (B,H,L,D) into the (possibly ring) cache buffer.
+
+    ``lengths`` is a scalar (uniform batch) or a (B,) vector of valid
+    right-padded prompt lengths.  Cache slot r receives the K/V of the LAST
+    valid token whose absolute position ≡ r (mod S_c) — one gather that
+    covers plain caches (identity), ring/SWA caches (trailing window), and
+    ragged batches (per-row lengths); slots with no valid token keep their
+    previous (zero) contents.
+    """
     s = cache["k"].shape[2]
-    l = k.shape[2]
-    if l <= s:
-        idx = (jnp.arange(l) % s).astype(jnp.int32)
-        ck = cache["k"].at[:, :, idx].set(k.astype(cache["k"].dtype))
-        cv = cache["v"].at[:, :, idx].set(v.astype(cache["v"].dtype))
-    else:  # keep the trailing window, ring-indexed by absolute position
-        tail_pos = jnp.arange(l - s, l)
-        idx = (tail_pos % s).astype(jnp.int32)
-        ck = cache["k"].at[:, :, idx].set(k[:, :, l - s :].astype(cache["k"].dtype))
-        cv = cache["v"].at[:, :, idx].set(v[:, :, l - s :].astype(cache["v"].dtype))
-    return {"k": ck, "v": cv}
+    b, l = k.shape[0], k.shape[2]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    r = jnp.arange(s, dtype=jnp.int32)
+    last = lengths[:, None] - 1                       # (B, 1)
+    src = last - ((last - r[None, :]) % s)            # (B, S_c)
+    ok = (src >= 0)[:, None, :, None]
+    idx = jnp.clip(src, 0, l - 1)[:, None, :, None]   # (B, 1, S_c, 1)
+    ck = jnp.take_along_axis(k, idx, axis=2).astype(cache["k"].dtype)
+    cv = jnp.take_along_axis(v, idx, axis=2).astype(cache["v"].dtype)
+    return {"k": jnp.where(ok, ck, cache["k"]), "v": jnp.where(ok, cv, cache["v"])}
 
 
 # ---------------- decode ----------------
 
 def _attn_decode(params, x, cfg, kind, quant, cache, pos):
-    """x: (B, 1, d); cache k/v: (B, Hkv, S_c, D); pos: scalar int32."""
+    """x: (B, 1, d); cache k/v: (B, Hkv, S_c, D); pos: () or (B,) int32
+    absolute position of the incoming token — a vector lets ragged slots
+    advance independently (continuous batching)."""
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     y = rms_norm(params["norm1"], x, cfg.norm_eps)
-    q, k, v = _qkv(params["attn"], y, cfg, quant, pos[None] if pos.ndim == 0 else pos)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, posb[:, None])
     s_c = cache["k"].shape[2]
-    slot = (pos % s_c).astype(jnp.int32)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=2
-    )
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=2
-    )
+    slot = posb % s_c  # (B,) per-slot ring position
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
     if kind == "attn_local" and cfg.window and s_c < 2**31:
         # ring cache: entry r holds absolute position p_r = pos - ((pos - r) mod S_c)
         r = jnp.arange(s_c)
-        p_r = pos - ((pos - r) % s_c)
-        valid = (p_r >= 0) & (p_r >= pos - cfg.window + 1)
+        p_r = posb[:, None] - ((posb[:, None] - r[None, :]) % s_c)  # (B, S_c)
+        valid = (p_r >= 0) & (p_r >= posb[:, None] - cfg.window + 1)
         o = _ring_decode_attention(q, ck, cv, valid)
     else:
-        o = decode_attention(q, ck, cv, pos + 1, window=0)
-    b = x.shape[0]
+        o = decode_attention(q, ck, cv, posb + 1, window=0)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
     x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
     return x, {"k": ck, "v": cv}
@@ -211,14 +224,14 @@ def _ring_decode_attention(q, k_cache, v_cache, valid):
     rep = hq // hkv
     qg = (q * d**-0.5).reshape(b, hkv, rep, d)
     logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
-    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)  # valid: (B, S_c)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, 1, d).astype(q.dtype)
 
 
 def layer_decode(params, x, cfg, kind, cache, pos, quant=None):
-    """One decode step. x: (B, 1, d). Returns (x, new_cache)."""
+    """One decode step. x: (B, 1, d); pos: () or (B,). Returns (x, new_cache)."""
     params = gather_unit_params(params)
     x = anchor_batch(x)
     if kind in ("attn_full", "attn_local"):

@@ -88,14 +88,16 @@ def embed_tokens(params, batch: dict, cfg: ArchConfig):
 
 
 def _head(params, x, cfg):
-    """Logits over the PADDED vocab; padded rows masked to -inf."""
+    """Logits over the PADDED vocab; padded rows masked to -inf.
+
+    The last dim is ``padded_vocab_size`` for text heads and K stacked
+    blocks of that width for the audio-codebooks frontend — ``col % vp < v``
+    masks the pad rows of every block (identity modulo for text)."""
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
     vp, v = cfg.padded_vocab_size, cfg.vocab_size
     if vp != v:
-        k = cfg.n_codebooks if cfg.frontend == "audio_codebooks" else 1
-        col = jnp.arange(logits.shape[-1]) % (vp if k > 1 else vp)
-        valid = (col % vp) < v
+        valid = (jnp.arange(logits.shape[-1]) % vp) < v
         logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
     return logits
 
@@ -103,12 +105,12 @@ def _head(params, x, cfg):
 # ---------------- sequence-mode stack ----------------
 
 def _unit_seq(unit_params, x, cfg, quant, positions, with_cache: bool,
-              no_drop: bool = False):
+              no_drop: bool = False, lengths=None):
     """Apply one pattern unit; returns (x, list_of_aux per layer)."""
     auxs = []
     for p_layer, kind in zip(unit_params, cfg.pattern):
         x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions,
-                                  no_drop=no_drop)
+                                  no_drop=no_drop, lengths=lengths)
         auxs.append(aux if (with_cache or not blocks.KIND_HAS_KV[kind]) else None)
     return x, auxs
 
@@ -178,14 +180,27 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
     return {"units": unit_caches, "tail": tail_caches}
 
 
-def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
-    """Run the prompt; returns (last-position logits, cache, length)."""
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
+    """Run the prompt; returns (last-valid-position logits, cache, lengths).
+
+    ``lengths`` — optional (B,) int32 of valid prompt lengths for a
+    right-padded ragged batch, counted in EMBEDDED positions (i.e. including
+    the image prefix for the vlm frontend).  When given, attention masks pad
+    keys, recurrent state freezes across pad steps, the returned logits are
+    gathered at each row's own last valid token, the KV caches hold each
+    row's true prefix, and ``lengths`` is returned as the per-slot decode
+    position vector.  When None the whole batch uses x.shape[1] and a python
+    int is returned (legacy uniform-batch contract).
+    """
     quant = Quant(cfg.quant, cfg.quant_method)
     x, positions = embed_tokens(params, batch, cfg)
     length = x.shape[1]
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
 
     def unit_body(xc, stacked):
-        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, True, no_drop=True)
+        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, True,
+                             no_drop=True, lengths=lengths)
         return xx, auxs
 
     body = jax.checkpoint(unit_body) if cfg.remat else unit_body
@@ -194,17 +209,23 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
     tail_auxs = []
     for p_layer, kind in zip(params["tail"], cfg.tail):
         x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions,
-                                  no_drop=True)
+                                  no_drop=True, lengths=lengths)
         tail_auxs.append(aux)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-    logits = _head(params, x[:, -1:], cfg)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:  # per-sequence last valid position, not the pad slot
+        idx = jnp.clip(lengths - 1, 0, length - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    logits = _head(params, x_last, cfg)
 
     cache = init_cache(cfg, x.shape[0], max_len)
+    fill_len = length if lengths is None else lengths
 
     def pack(kind, c, aux):
         if blocks.KIND_HAS_KV[kind]:
             k, v = aux
-            return blocks.fill_kv_cache(c, k, v, length)
+            return blocks.fill_kv_cache(c, k, v, fill_len)
         return jax.tree.map(lambda a, cc: a.astype(cc.dtype), aux, c)
 
     new_units = []
@@ -214,7 +235,7 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
         if blocks.KIND_HAS_KV[kind]:
             # aux k/v have leading unit axis (R, B, H, L, D) from the scan
             new_units.append(
-                jax.vmap(lambda cc, kk, vv: blocks.fill_kv_cache(cc, kk, vv, length))(
+                jax.vmap(lambda cc, kk, vv: blocks.fill_kv_cache(cc, kk, vv, fill_len))(
                     c, aux[0], aux[1]
                 )
             )
@@ -223,13 +244,14 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int):
     new_tail = [
         pack(kind, cache["tail"][i], tail_auxs[i]) for i, kind in enumerate(cfg.tail)
     ]
-    return logits, {"units": new_units, "tail": new_tail}, length
+    return logits, {"units": new_units, "tail": new_tail}, fill_len
 
 
 def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
     """One token for every sequence. token_batch['tokens']: (B, 1) (or
-    (B,1,K) audio). pos: scalar int32 absolute position. Returns
-    (logits (B,1,V), new_cache)."""
+    (B,1,K) audio). pos: int32 absolute position — a scalar (uniform batch)
+    or a (B,) vector so ragged slots advance independently (continuous
+    batching). Returns (logits (B,1,V), new_cache)."""
     quant = Quant(cfg.quant, cfg.quant_method)
     emb = params["embed"]
     if cfg.frontend == "audio_codebooks":

@@ -70,9 +70,12 @@ def rglru_scan(params, x):
     return hh.astype(x.dtype), hh[:, -1]
 
 
-def causal_conv1d(conv_w, x, state=None):
+def causal_conv1d(conv_w, x, state=None, lengths=None):
     """Depthwise causal conv. x: (B, S, r); conv_w: (K, r).
-    state: (B, K-1, r) trailing context (decode) or None (zeros)."""
+    state: (B, K-1, r) trailing context (decode) or None (zeros).
+    lengths: optional (B,) valid length of right-padded rows — the returned
+    state is then each row's context at its OWN last valid token, so decode
+    can continue a ragged batch."""
     k = conv_w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -80,35 +83,46 @@ def causal_conv1d(conv_w, x, state=None):
     out = sum(
         xp[:, i : i + x.shape[1]] * conv_w[i][None, None] for i in range(k)
     )
-    new_state = xp[:, -(k - 1) :]
+    if lengths is None:
+        new_state = xp[:, -(k - 1) :]
+    else:
+        # xp row (len_b + i) is input token len_b - (K-1) + i: the K-1
+        # inputs preceding each row's first decode position.
+        idx = lengths[:, None].astype(jnp.int32) + jnp.arange(k - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out, new_state
 
 
-def rglru_block(params, x, cfg, quant: Quant | None = None, state=None):
+def rglru_block(params, x, cfg, quant: Quant | None = None, state=None,
+                lengths=None):
     """Full recurrent block, sequence mode.
 
     x: (B, S, d) -> (B, S, d).  state: optional dict(h, conv) for chunked
-    prefill; returns (y, new_state).
+    prefill; returns (y, new_state).  lengths: optional (B,) valid length of
+    right-padded rows — pad steps become identity transitions (a=1, input 0)
+    so the carried h is each row's state at its true last token.
     """
     gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
     u = dense(params["w_in"], x, quant)
     conv_state = None if state is None else state["conv"]
-    u, new_conv = causal_conv1d(params["conv_w"], u, conv_state)
+    u, new_conv = causal_conv1d(params["conv_w"], u, conv_state,
+                                lengths=lengths)
+    a, b = _gates(params, u)
+    if lengths is not None:
+        pad = jnp.arange(x.shape[1])[None, :] >= lengths[:, None]  # (B, S)
+        a = jnp.where(pad[..., None], 1.0, a)
+        b = jnp.where(pad[..., None], 0.0, b)
     if state is not None:
         # seed the scan with the carried h by folding it into the first step
-        a, b = _gates(params, u)
-        h0 = state["h"].astype(jnp.float32)
-        b = b.at[:, 0].add(a[:, 0] * h0)
+        b = b.at[:, 0].add(a[:, 0] * state["h"].astype(jnp.float32))
 
-        def combine(e1, e2):
-            a1, b1 = e1
-            a2, b2 = e2
-            return a1 * a2, a2 * b1 + b2
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
 
-        _, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
-        y, h_last = hh.astype(u.dtype), hh[:, -1]
-    else:
-        y, h_last = rglru_scan(params, u)
+    _, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y, h_last = hh.astype(u.dtype), hh[:, -1]
     out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
     return out, {"h": h_last, "conv": new_conv}
 

@@ -133,19 +133,27 @@ def ssd_naive(x, dt, a, b, c, h0=None):
 
 
 def ssd_block(params, x, cfg, quant: Quant | None = None, state=None,
-              chunk: int = 256):
-    """Full Mamba-2 block, sequence mode. x: (B, S, d)."""
+              chunk: int = 256, lengths=None):
+    """Full Mamba-2 block, sequence mode. x: (B, S, d).
+
+    lengths: optional (B,) valid length of right-padded rows — pad steps get
+    dt = 0 (decay exp(0·A) = 1, zero input) so the carried h is each row's
+    state at its true last token."""
     din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
     hp = cfg.ssm_headdim
     zxbcdt = dense(params["w_in"], x, quant)
     z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
     conv_state = None if state is None else state["conv"]
-    conv_out, new_conv = causal_conv1d(params["conv_w"], conv_in, conv_state)
+    conv_out, new_conv = causal_conv1d(params["conv_w"], conv_in, conv_state,
+                                       lengths=lengths)
     conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
     xs, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if lengths is not None:
+        pad = jnp.arange(x.shape[1])[None, :] >= lengths[:, None]  # (B, S)
+        dt = jnp.where(pad[..., None], 0.0, dt)
     a = -jnp.exp(params["a_log"])  # (H,) negative
     xh = xs.reshape(*xs.shape[:-1], nh, hp)
     h0 = None if state is None else state["h"]

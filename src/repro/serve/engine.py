@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + decode with DSBP-packed weights.
+"""Serving engine: length-aware continuous batching over packed DSBP weights.
 
 The engine owns the KV caches and the packed DSBP weight representation
 (DESIGN.md §2): when the arch config carries a quant preset, every
@@ -9,10 +9,21 @@ prefill/decode run entirely off that packed tree.  That is the paper's
 offline-weight / on-the-fly-input split: only the activation path quantizes
 per token, and the HBM footprint drops ~3.8x vs f32 (1.9x vs bf16) per
 projection (reported via :func:`packed_nbytes` in ``Engine.pack_report``).
+
+Serving is length-aware end to end (DESIGN.md §7): ragged prompts prefill
+with a per-sequence ``lengths`` vector (pad-masked attention, per-row last
+logits and KV fill), and decode advances a per-slot ``pos`` vector, so a
+batch of mixed-length prompts generates token-for-token what each prompt
+generates alone.  :meth:`Engine.serve` runs true continuous batching on top
+of that contract: a fixed pool of ``batch_size`` slots, admission of queued
+requests into freed slots, per-slot EOS / token-budget termination, and one
+jitted decode step per pool with the KV cache donated (updated in place,
+not copied per token).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +34,8 @@ from repro.core.packed import packed_nbytes, tree_is_packed
 from repro.core.quantized import PRESETS, pack_weights
 from repro.models import model as M
 
-__all__ = ["ServeConfig", "Engine", "pack_weights_int8", "packed_nbytes"]
+__all__ = ["ServeConfig", "Request", "Engine", "pack_weights_int8",
+           "packed_nbytes"]
 
 # projection leaf names that carry a DSBP-quantizable GEMM (the sharding
 # contract of models/layers.py keys these same names)
@@ -36,14 +48,25 @@ PROJ_NAMES = frozenset({
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int = 512
-    batch_size: int = 4
-    temperature: float = 0.0  # 0 = greedy
+    batch_size: int = 4          # slot-pool size for serve()
+    temperature: float = 0.0     # 0 = greedy
     seed: int = 0
     # pack projections once at Engine.__init__ when a preset is configured
     # (cfg.quant, overridable via pack_preset); False serves raw weights,
     # re-quantizing them on every matmul call.
     pack: bool = True
     pack_preset: str | None = None
+    eos_id: int | None = None    # serve(): slot frees when this is sampled
+    prefill_bucket: int = 16     # admission prompts pad up to a multiple of
+                                 # this (bounds prefill retraces per shape)
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request for :meth:`Engine.serve`."""
+    uid: object
+    tokens: np.ndarray           # (L,) prompt token ids
+    max_new_tokens: int = 32
 
 
 def pack_weights_int8(params, preset: str = "precise"):
@@ -71,8 +94,38 @@ def pack_weights_int8(params, preset: str = "precise"):
     return packed, {"avg_w_bits": avg_w_bits}
 
 
+def _cache_insert(pool, src, rows, slots):
+    """Copy prefill-cache batch rows ``rows`` into pool slots ``slots`` in
+    ONE pass over the pool (a per-request loop would reallocate the full
+    multi-layer pool once per admission).
+
+    Unit caches are stacked (R, B, ...) — batch is axis 1; tail caches are
+    plain (B, ...)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    units = jax.tree.map(
+        lambda p, s: p.at[:, slots].set(s[:, rows].astype(p.dtype)),
+        pool["units"], src["units"],
+    )
+    tail = jax.tree.map(
+        lambda p, s: p.at[slots].set(s[rows].astype(p.dtype)),
+        pool["tail"], src["tail"],
+    )
+    return {"units": units, "tail": tail}
+
+
 class Engine:
-    """Minimal continuous-batching server over M.prefill / M.decode_step.
+    """Length-aware continuous-batching server over M.prefill / M.decode_step.
+
+    Two entry points:
+
+    * :meth:`generate` — one batch in, ``(B, n_new)`` out.  Ragged prompts
+      are supported via ``lengths``; every row's generation is identical to
+      serving it alone at batch size 1.
+    * :meth:`serve` — a queue of :class:`Request` through a fixed pool of
+      ``batch_size`` slots: freed slots (EOS or token budget) are refilled
+      from the queue mid-flight; one jitted, cache-donating decode step
+      advances the whole pool per token.
 
     With ``cfg.quant`` set and ``scfg.pack`` (the default), weights are
     packed once here and every subsequent prefill/decode consumes the int8
@@ -85,6 +138,7 @@ class Engine:
         self.cfg = cfg
         self.scfg = scfg
         self.pack_report = None
+        self.last_stats: dict | None = None
         preset = scfg.pack_preset or cfg.quant
         if scfg.pack and preset is not None and not tree_is_packed(params):
             raw_nbytes = packed_nbytes(params)
@@ -96,34 +150,164 @@ class Engine:
                 "avg_w_bits": stats["avg_w_bits"],
             }
         self.params = params
+        # donate the cache: KV buffers update in place every step instead of
+        # being copied (tests/test_serving.py asserts the aliasing)
         self._decode = jax.jit(
-            lambda p, tok, cache, pos: M.decode_step(p, tok, cache, pos, cfg)
+            lambda p, tok, cache, pos: M.decode_step(p, tok, cache, pos, cfg),
+            donate_argnums=(2,),
         )
 
-    def generate(self, prompts: np.ndarray, n_new: int, extra: dict | None = None):
-        """prompts: (B, L) (or (B, L, K) audio) token ids.  Greedy/temp
-        sampling of ``n_new`` tokens.  Returns (B, n_new) generations."""
+    # ------------------------------------------------------------------
+    # batch API
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extra: dict | None = None, lengths=None):
+        """prompts: (B, L) (or (B, L, K) audio) token ids, right-padded when
+        ragged; ``lengths`` (B,) gives each row's true prompt length.
+        Greedy/temp sampling of ``n_new`` tokens.  Returns (B, n_new)."""
         cfg, scfg = self.cfg, self.scfg
         batch = {"tokens": jnp.asarray(prompts)}
         if extra:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
+            if cfg.frontend == "vlm_patches":  # embedded positions incl. image
+                lengths = lengths + batch["image_embeds"].shape[1]
         logits, cache, length = M.prefill(
-            self.params, batch, cfg, max_len=scfg.max_len
+            self.params, batch, cfg, max_len=scfg.max_len, lengths=lengths
         )
+        b = logits.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
         rng = jax.random.PRNGKey(scfg.seed)
         outs = []
-        tok = self._sample(logits[:, -1], rng)
-        for i in range(n_new):
+        rng, sub = jax.random.split(rng)  # never sample with a key we split
+        tok = self._sample(logits[:, -1], sub)
+        for _ in range(n_new):
             outs.append(np.asarray(tok))
             step_tok = {"tokens": tok[:, None]}
             if cfg.frontend == "audio_codebooks":
                 step_tok = {"tokens": tok.reshape(-1, 1, cfg.n_codebooks)}
-            logits, cache = self._decode(
-                self.params, step_tok, cache, jnp.int32(length + i)
-            )
+            logits, cache = self._decode(self.params, step_tok, cache, pos)
+            pos = pos + 1
             rng, sub = jax.random.split(rng)
             tok = self._sample(logits[:, -1], sub)
         return np.stack(outs, axis=1)
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+
+    def serve(self, requests, max_new_tokens: int = 32):
+        """Run a queue of requests through the slot pool; returns
+        {uid: np.ndarray(generated token ids)} and records scheduler stats
+        in ``self.last_stats`` (decode_steps, occupancy, admissions, ...).
+
+        ``requests`` items are :class:`Request` or plain token sequences
+        (uid = queue index, budget = ``max_new_tokens``)."""
+        cfg, scfg = self.cfg, self.scfg
+        if cfg.frontend in ("audio_codebooks", "vlm_patches"):
+            raise NotImplementedError(
+                "serve() schedules plain token prompts; use generate() for "
+                f"the {cfg.frontend} frontend")
+        queue = deque(self._norm_request(r, i, max_new_tokens)
+                      for i, r in enumerate(requests))
+        nreq = len(queue)
+        if len({r.uid for r in queue}) != nreq:
+            raise ValueError("request uids must be unique (results key on uid)")
+        for r in queue:
+            if len(r.tokens) + r.max_new_tokens > scfg.max_len:
+                raise ValueError(
+                    f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
+                    f"{r.max_new_tokens} exceeds max_len {scfg.max_len}")
+        B = scfg.batch_size
+        pool = M.init_cache(cfg, B, scfg.max_len)
+        active: list[Request | None] = [None] * B
+        tok = np.zeros(B, np.int64)        # last sampled token per slot
+        pos = np.zeros(B, np.int32)        # next absolute position per slot
+        out: dict = {}
+        rng = jax.random.PRNGKey(scfg.seed)
+        stats = {"decode_steps": 0, "occupied_lanes": 0, "admissions": 0,
+                 "prefill_tokens": 0, "decode_tokens": 0}
+
+        while queue or any(s is not None for s in active):
+            free = [i for i in range(B) if active[i] is None]
+            if queue and free:
+                rng, sub = jax.random.split(rng)
+                pool = self._admit(pool, queue, free, active, tok, pos, out,
+                                   stats, sub)
+            if not any(s is not None for s in active):
+                continue  # every admitted request finished at its 1st token
+            logits, pool = self._decode(
+                self.params, {"tokens": jnp.asarray(tok)[:, None]}, pool,
+                jnp.asarray(pos),
+            )
+            rng, sub = jax.random.split(rng)
+            nxt = np.asarray(self._sample(logits[:, -1], sub))
+            stats["decode_steps"] += 1
+            stats["occupied_lanes"] += sum(s is not None for s in active)
+            for i in range(B):
+                r = active[i]
+                if r is None:
+                    continue  # idle lane: output ignored, slot unchanged
+                pos[i] += 1
+                t = int(nxt[i])
+                out[r.uid].append(t)
+                tok[i] = t
+                stats["decode_tokens"] += 1
+                if self._done(t, out[r.uid], r):
+                    active[i] = None  # slot freed; next admission reuses it
+        self.last_stats = dict(
+            stats,
+            requests=nreq,
+            occupancy=stats["occupied_lanes"] / max(stats["decode_steps"] * B, 1),
+        )
+        return {uid: np.asarray(toks, np.int64) for uid, toks in out.items()}
+
+    def _admit(self, pool, queue, free, active, tok, pos, out, stats, rng):
+        """Admit up to len(free) queued requests: one ragged group prefill
+        (padded to a bucket multiple, per-row lengths), then copy each row's
+        cache into its slot."""
+        scfg = self.scfg
+        group = [queue.popleft() for _ in range(min(len(free), len(queue)))]
+        lens = np.asarray([len(r.tokens) for r in group], np.int32)
+        bucket = scfg.prefill_bucket
+        L = max(-(-int(lens.max()) // bucket) * bucket, bucket)
+        toks = np.zeros((len(group), L), np.int64)
+        for j, r in enumerate(group):
+            toks[j, : lens[j]] = np.asarray(r.tokens)
+        logits, cache, _ = M.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
+            max_len=scfg.max_len, lengths=lens,
+        )
+        first = np.asarray(self._sample(logits[:, -1], rng))
+        stats["admissions"] += len(group)
+        stats["prefill_tokens"] += int(lens.sum())
+        rows, slots = [], []
+        for j, r in enumerate(group):
+            t = int(first[j])
+            out[r.uid] = [t]
+            if self._done(t, out[r.uid], r):
+                continue  # finished at its first token: slot stays free
+            slot = free.pop(0)
+            rows.append(j)
+            slots.append(slot)
+            active[slot] = r
+            tok[slot] = t
+            pos[slot] = int(lens[j])
+        if rows:
+            pool = _cache_insert(pool, cache, rows, slots)
+        return pool
+
+    def _done(self, t: int, emitted: list, r: Request) -> bool:
+        eos = self.scfg.eos_id
+        return (eos is not None and t == eos) or len(emitted) >= r.max_new_tokens
+
+    @staticmethod
+    def _norm_request(r, i: int, max_new: int) -> Request:
+        if isinstance(r, Request):
+            return r
+        return Request(uid=i, tokens=np.asarray(r, np.int64), max_new_tokens=max_new)
 
     def _sample(self, logits, rng):
         cfg = self.cfg
