@@ -1,6 +1,6 @@
 """Pallas kernel benchmarks (interpret mode on CPU — numbers are for
-relative comparison and CI tracking, not TPU projections; the roofline
-section of EXPERIMENTS.md carries the TPU-side analysis)."""
+relative comparison and CI tracking, not TPU projections; DESIGN.md §8
+carries the HBM-traffic analysis the fused-kernel numbers correspond to)."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.core import quantized as Q
 from repro.kernels import ops
 from repro.kernels.dsbp_matmul import dsbp_matmul_kernel_call
+from repro.kernels.ops import count_weight_transposes
 
 from .common import llama_like_activations, llama_like_weights, timed
 
@@ -79,6 +80,82 @@ def bench_pack_once_vs_per_call():
         f"pack_once_speedup={us_percall/us_packed:.2f}x;"
         f"hbm_ratio={ratio:.2f}x;relerr={relerr:.1e}"
     )
+
+
+def _gemm_hbm_bytes(m, k, n, ng, fused: bool, bm=128, bn=256):
+    """Analytic HBM bytes per serving GEMM (DESIGN.md §8).
+
+    Two-kernel: the x*ts pre-multiply pass (read + write f32), the
+    quant-align kernel (read xs, write int32 mantissas + f32 scales + int32
+    bits), the GEMM (re-read mantissas + scales + weights, write y) and the
+    final y/(ts_x ts_w) division pass (read + write).  Fused: x streams in
+    per N-tile, weights per M-tile, y streams out once — nothing else.
+    """
+    wbytes = k * n * 1 + ng * n * 4 + n * 4  # ka int8 + kscale f32 + tw
+    if not fused:
+        return (
+            2 * 4 * m * k            # pre-multiply x*ts: read + write
+            + 4 * m * k              # quant-align: read xs
+            + 4 * m * k + 8 * m * ng  # quant-align: write a(int32)+scale+bits
+            + 4 * m * k + 4 * m * ng  # GEMM: re-read a + scales
+            + wbytes                 # GEMM: weights
+            + 4 * m * n              # GEMM: write y
+            + 2 * 4 * m * n          # division pass: read + write
+        )
+    n_tiles = -(-n // bn)
+    m_tiles = -(-m // bm)
+    return 4 * m * k * n_tiles + wbytes * m_tiles + 4 * m * n
+
+
+def bench_fused_vs_two_kernel():
+    """The serving hot path at a prefill shape (M=128) and a decode shape
+    (M=4): ONE quantize-align-MAC kernel off the kernel-layout container vs
+    the two-kernel path (aligned ints through HBM + 2 elementwise passes).
+    Reports the speedup, the analytic HBM bytes saved per GEMM, the
+    relative error vs dsbp_matmul_ref (must be 0.0: bit-exact), and the
+    weight-transpose count of both entries (must be 0: no per-call
+    relayout)."""
+    k, n = 1024, 256
+    ng = k // 64
+    w = jnp.asarray(llama_like_weights((k, n), 6))
+    cfg = Q.PRESETS["precise"]
+    pw = Q.pack_weights(w, cfg)
+    jax.block_until_ready(pw.ka)
+    def best_pair(fn_a, fn_b, reps=5):
+        """Interleaved min-of-reps timing: interpret-mode runs on shared CI
+        CPUs are noisy and the noise is time-correlated, so alternating the
+        two candidates per rep and taking each one's minimum is the fairest
+        stable estimator of their true costs."""
+        ta, tb = [], []
+        for _ in range(reps):
+            ta.append(timed(fn_a, warmup=1, iters=3)[1])
+            tb.append(timed(fn_b, warmup=1, iters=3)[1])
+        return min(ta), min(tb)
+
+    parts, us_decode = [], 0.0
+    for tag, m in (("prefill_m128", 128), ("decode_m4", 4)):
+        x = jnp.asarray(llama_like_activations((m, k), m))
+        us_f, us_2 = best_pair(lambda: ops.dsbp_matmul_fused(x, pw),
+                               lambda: ops.dsbp_matmul_packed(x, pw))
+        y_f = np.asarray(ops.dsbp_matmul_fused(x, pw))
+        ref = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
+        relerr = float(np.abs(y_f - ref).max() / (np.abs(ref).max() + 1e-9))
+        saved = (_gemm_hbm_bytes(m, k, n, ng, fused=False)
+                 - _gemm_hbm_bytes(m, k, n, ng, fused=True))
+        parts.append(
+            f"{tag}:fused_us={us_f:.0f};two_kernel_us={us_2:.0f};"
+            f"speedup={us_2 / us_f:.2f}x;hbm_saved_kb={saved / 1024:.0f};"
+            f"relerr={relerr:.1e}"
+        )
+        if m == 4:
+            us_decode = us_f
+    x4 = jnp.asarray(llama_like_activations((4, k), 4))
+    nt = sum(
+        count_weight_transposes(
+            lambda xx, p: f(xx, p), x4, pw, min_size=pw.ka.size)
+        for f in (ops.dsbp_matmul_fused, ops.dsbp_matmul_packed)
+    )
+    return us_decode, ";".join(parts) + f";weight_transposes={nt}"
 
 
 def bench_e2e_quantized_layer():

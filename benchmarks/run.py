@@ -1,11 +1,14 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Usage:
-  PYTHONPATH=src python -m benchmarks.run [--only substring]
+Prints ``name,us_per_call,derived`` CSV; ``--json BENCH_foo.json``
+additionally writes the rows as JSON so CI can archive the perf trajectory
+(the fused-vs-two-kernel numbers land in ``BENCH_kernels.json``).  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only substring] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -20,6 +23,7 @@ BENCHES = [
     ("fiau_vs_barrel", bench_paper.bench_fiau_vs_barrel),
     ("kernel_dsbp_matmul", bench_kernels.bench_dsbp_matmul_kernel),
     ("kernel_pack_once_vs_per_call", bench_kernels.bench_pack_once_vs_per_call),
+    ("kernel_fused_vs_two_kernel", bench_kernels.bench_fused_vs_two_kernel),
     ("kernel_fp8_quant_align", bench_kernels.bench_fp8_quant_align_kernel),
     ("kernel_flash_attention", bench_kernels.bench_flash_attention_kernel),
     ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),
@@ -30,8 +34,11 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write results to this JSON file (BENCH_*.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for name, fn in BENCHES:
         if args.only and args.only not in name:
@@ -39,9 +46,15 @@ def main() -> None:
         try:
             us, derived = fn()
             print(f"{name},{us:.1f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
         except Exception:
             failures += 1
             print(f"{name},ERROR,{traceback.format_exc(limit=2)!r}")
+            rows.append({"name": name, "error": traceback.format_exc(limit=2)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
     if failures:
         sys.exit(1)
 

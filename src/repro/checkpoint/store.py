@@ -13,10 +13,13 @@ Fault-tolerance contract (tests/test_checkpoint.py):
     and ``reshard_restore`` re-slices them for a different mesh — the
     resharding math itself is exercised in tests via simulated shards.
 
-DSBP-packed weight trees (PackedDSBPWeight leaves, DESIGN.md §2) round-trip
-transparently: the container is a pytree node whose fields flatten with
-attribute key paths, so a packed model checkpoints int8 mantissas + scales
-instead of the dense f32 matrices (tests/test_packed.py).
+DSBP-packed weight trees (PackedDSBPWeight leaves, DESIGN.md §2/§8)
+round-trip transparently: the container is a pytree node whose fields
+flatten with attribute key paths, so a packed model checkpoints int8
+mantissas + scales instead of the dense f32 matrices (tests/test_packed.py).
+Layout-v1 checkpoints (fields ``a (N, n_g, G)`` / ``scale (N, n_g)``)
+restore into v2 containers by deriving the kernel-layout ``ka``/``kscale``
+arrays on load — a pure permutation, so the upgrade is bit-exact.
 """
 from __future__ import annotations
 
@@ -27,7 +30,7 @@ import jax
 import msgpack
 import numpy as np
 
-from repro.core.packed import key_entry_str
+from repro.core.packed import key_entry_str, to_kernel_layout
 
 __all__ = ["save", "restore", "latest_step", "reshard_leaf"]
 
@@ -78,8 +81,38 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+# layout-v2 field name -> the v1 field it derives from
+_V1_SOURCES = {"ka": "a", "kscale": "scale"}
+
+
+def _v1_source_key(key: str, data) -> str | None:
+    """The v1 checkpoint key that can derive ``key``, if ``key`` names a
+    layout-v2 PackedDSBPWeight field and the old field is present in
+    ``data`` — a presence check only, no array is touched."""
+    base, _, name = key.rpartition(_SEP)
+    prefix = base + _SEP if base else ""
+    src = _V1_SOURCES.get(name)
+    if src is not None and prefix + src in data:
+        return prefix + src
+    return None
+
+
+def _upgrade_packed_leaf(key: str, data):
+    """Derive a layout-v2 PackedDSBPWeight field from a layout-v1
+    checkpoint (DESIGN.md §8) via ``core.packed.to_kernel_layout`` — a pure
+    permutation, so the upgrade is bit-exact."""
+    src = data[_v1_source_key(key, data)]
+    if key.rpartition(_SEP)[2] == "ka":
+        return to_kernel_layout(src)[0]
+    return src.swapaxes(-1, -2)  # kscale: transpose of the v1 scale
+
+
 def restore(ckpt_dir: str, tree_like, step: int | None = None, host: int = 0):
-    """Restore into the structure of ``tree_like``; returns (tree, step)."""
+    """Restore into the structure of ``tree_like``; returns (tree, step).
+
+    Packed-weight layout upgrades happen here: a v1 checkpoint's per-column
+    fields are relayouted into the v2 kernel-layout fields the live
+    container expects (:func:`_upgrade_packed_leaf`)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -89,13 +122,14 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None, host: int = 0):
         manifest = msgpack.unpackb(f.read())
     data = np.load(os.path.join(d, f"host{host}.npz"))
     flat_like, treedef = _flatten(tree_like)
-    missing = set(flat_like) - set(manifest["keys"])
+    missing = [k for k in set(flat_like) - set(manifest["keys"])
+               if _v1_source_key(k, data) is None]
     if missing:
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
     leaves = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree_like)[0]:
         key = _path_key(path)
-        arr = data[key]
+        arr = data[key] if key in data else _upgrade_packed_leaf(key, data)
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"{key}: ckpt shape {arr.shape} != model {np.shape(leaf)}")
         leaves.append(arr.astype(leaf.dtype))

@@ -200,7 +200,6 @@ def align_group(
 def per_row_scale(x: jax.Array, fmt, margin: float = 1.0) -> jax.Array:
     """Power-of-two scale per row (all-but-last axes): LLM-FP4-style
     per-channel weight scaling."""
-    from .formats import get_format
     f = get_format(fmt)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     amax = jnp.where(amax > 0, amax, 1.0)

@@ -4,19 +4,28 @@ registry (DESIGN.md §2).
 The paper computes the weight path **offline** ("For weights, B_g can be
 calculated offline and rounded to the nearest valid bitwidth") and only the
 input path on-the-fly.  :class:`PackedDSBPWeight` is that offline product as
-a first-class, pytree-registered container:
+a first-class, pytree-registered container.  Since layout v2 (DESIGN.md §8)
+the arrays are stored in **kernel layout** — exactly the operand shapes the
+Pallas GEMM consumes, so the serving path performs zero per-call relayout:
 
-  a       int8  (..., N, n_g, G)  aligned mantissas (sign applied; weights
-                                  are <= 7 magnitude bits + sign -> int8)
-  scale   f32   (..., N, n_g)     per-64-group scales (powers of two)
+  ka      int8  (..., K', N)      aligned mantissas, reduction axis leading
+                                  (sign applied; weights are <= 7 magnitude
+                                  bits + sign -> int8); K' = n_g * G is the
+                                  group-padded reduction width
+  kscale  f32   (..., n_g, N)     per-64-group scales (powers of two)
   tscale  f32                     per-channel (N, 1) or per-tensor () scale
   bits    int8  (..., N, n_g)     predicted aligned widths B_g (stats/energy)
 
 plus static metadata: the **logical** GEMM shape ``(k, n)`` (so K-padding
 up to a multiple of the group is explicit, not recovered by slicing), the
-group size, and the :class:`~repro.core.quantized.QuantizedMatmulConfig`
+group size, the :class:`~repro.core.quantized.QuantizedMatmulConfig`
 the weights were packed under (so consumers know which on-the-fly input
-path pairs with them).
+path pairs with them), and the layout ``version``.  The legacy v1 layout
+(``a (..., N, n_g, G)`` / ``scale (..., N, n_g)``) remains available as the
+derived read-only views :attr:`PackedDSBPWeight.a` /
+:attr:`PackedDSBPWeight.scale` (a pure, bit-exact permutation) for the
+reference numerics path; v1 checkpoints load and upgrade transparently
+(``checkpoint/store.py``).
 
 Because the container is a pytree node it flows transparently through
 ``jax.jit`` / ``lax.scan`` (stacked per-unit params), ``jax.tree`` utils,
@@ -29,7 +38,11 @@ executes a projection —
   dense_bf16   plain einsum, no quantization
   dsbp_ref     reference DSBP numerics (jnp grouped int contraction; STE
                backward for QAT on raw weights)
-  dsbp_kernel  Pallas TPU kernels (fused quant-align + grouped int GEMM)
+  dsbp_kernel  Pallas TPU kernels (two passes: quant-align, then the
+               grouped int GEMM, with the aligned ints through HBM)
+  dsbp_fused   single-pass Pallas kernel: quantize + predict + align +
+               scale-folded MXU dot in one VMEM-resident body (the serving
+               default, DESIGN.md §8)
 
 ``models.layers.Quant`` resolves a method once per forward; ``dense()``
 dispatches through it instead of isinstance-checking dict layouts.
@@ -42,6 +55,8 @@ from jax.tree_util import GetAttrKey
 
 __all__ = [
     "PackedDSBPWeight",
+    "LAYOUT_VERSION",
+    "to_kernel_layout",
     "QuantMethod",
     "register_quant_method",
     "get_quant_method",
@@ -50,6 +65,29 @@ __all__ = [
     "packed_nbytes",
     "tree_is_packed",
 ]
+
+# Bumped whenever the container's stored array layout changes.  v1 stored
+# the macro's per-column (N, n_g, G) mantissas; v2 stores the kernel-layout
+# (K', N) operands directly (DESIGN.md §8).  The checkpoint store upgrades
+# v1 trees on restore.
+LAYOUT_VERSION = 2
+
+
+def to_kernel_layout(a, scale=None):
+    """Relayout the macro's per-column weight fields into kernel operands.
+
+    ``a (..., N, n_g, G)`` aligned mantissas and ``scale (..., N, n_g)``
+    group scales become ``ka (..., K', N)`` / ``kscale (..., n_g, N)`` — the
+    exact shapes :func:`repro.kernels.dsbp_matmul.dsbp_matmul_kernel_call`
+    and the fused kernel take.  A pure permutation (bit-exact), run ONCE at
+    pack time (or at v1-checkpoint upgrade, where the fields may arrive one
+    at a time — ``scale=None`` returns ``kscale=None``); works on numpy and
+    jax arrays.
+    """
+    lead = a.shape[:-3]
+    n, ng, g = a.shape[-3:]
+    ka = a.reshape(*lead, n, ng * g).swapaxes(-1, -2)
+    return ka, None if scale is None else scale.swapaxes(-1, -2)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -62,55 +100,78 @@ class PackedDSBPWeight:
     per-slice container keeps the same logical metadata.
     """
 
-    __slots__ = ("a", "scale", "tscale", "bits", "k", "n", "group_size", "cfg")
+    __slots__ = ("ka", "kscale", "tscale", "bits", "k", "n", "group_size",
+                 "cfg", "version")
 
-    def __init__(self, a, scale, tscale, bits, *, k, n, group_size, cfg):
-        self.a = a
-        self.scale = scale
+    def __init__(self, ka, kscale, tscale, bits, *, k, n, group_size, cfg,
+                 version: int = LAYOUT_VERSION):
+        self.ka = ka
+        self.kscale = kscale
         self.tscale = tscale
         self.bits = bits
         self.k = k
         self.n = n
         self.group_size = group_size
         self.cfg = cfg
+        self.version = version
 
     # ---- pytree protocol ----
 
     def tree_flatten_with_keys(self):
         children = [
-            (GetAttrKey("a"), self.a),
-            (GetAttrKey("scale"), self.scale),
+            (GetAttrKey("ka"), self.ka),
+            (GetAttrKey("kscale"), self.kscale),
             (GetAttrKey("tscale"), self.tscale),
             (GetAttrKey("bits"), self.bits),
         ]
-        aux = (self.k, self.n, self.group_size, self.cfg)
+        aux = (self.k, self.n, self.group_size, self.cfg, self.version)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        k, n, group_size, cfg = aux
-        a, scale, tscale, bits = children
-        return cls(a, scale, tscale, bits, k=k, n=n, group_size=group_size,
-                   cfg=cfg)
+        k, n, group_size, cfg = aux[:4]
+        version = aux[4] if len(aux) > 4 else LAYOUT_VERSION
+        ka, kscale, tscale, bits = children
+        return cls(ka, kscale, tscale, bits, k=k, n=n, group_size=group_size,
+                   cfg=cfg, version=version)
 
     # ---- derived geometry ----
 
     @property
     def n_groups(self) -> int:
-        return self.a.shape[-2]
+        return self.kscale.shape[-2]
 
     @property
     def padded_k(self) -> int:
         """K rounded up to a multiple of the group (zero-filled lanes)."""
-        return self.a.shape[-2] * self.a.shape[-1]
+        return self.ka.shape[-2]
 
     @property
     def nbytes(self) -> int:
         return packed_nbytes(self)
 
+    # ---- legacy (v1) layout views — the macro's per-column storage ----
+
+    @property
+    def a(self) -> jax.Array:
+        """Legacy ``(..., N, n_g, G)`` aligned-mantissa view (bit-exact
+        permutation of :attr:`ka`); consumed by the reference numerics path
+        (``core.quantized.grouped_int_matmul``).  The serving kernels take
+        :attr:`ka` directly — never this view."""
+        lead = self.ka.shape[:-2]
+        kp, n = self.ka.shape[-2:]
+        g = self.group_size
+        return jnp.swapaxes(self.ka, -1, -2).reshape(*lead, n, kp // g, g)
+
+    @property
+    def scale(self) -> jax.Array:
+        """Legacy ``(..., N, n_g)`` group-scale view of :attr:`kscale`."""
+        return jnp.swapaxes(self.kscale, -1, -2)
+
     def __repr__(self):  # pragma: no cover - debugging aid
         return (f"PackedDSBPWeight(k={self.k}, n={self.n}, "
-                f"group={self.group_size}, a={getattr(self.a, 'shape', None)})")
+                f"group={self.group_size}, v{self.version}, "
+                f"ka={getattr(self.ka, 'shape', None)})")
 
     # ---- dequantization (weight-only consumption) ----
 
@@ -120,18 +181,18 @@ class PackedDSBPWeight:
 
         The logical ``k`` is sliced off the padded reduction axis here —
         explicitly, from the container's metadata — instead of trusting the
-        caller's activation width.
+        caller's activation width.  Kernel layout makes this transpose-free:
+        ``ka`` already is ``(..., K', N)``.
         """
-        a = self.a
-        lead = a.shape[:-3]
-        n, ng, g = a.shape[-3:]
-        deq = a.astype(dtype) * self.scale[..., None].astype(dtype)
-        flat = deq.reshape(*lead, n, ng * g)
+        deq = self.ka.astype(dtype) * jnp.repeat(
+            self.kscale.astype(dtype), self.group_size, axis=-2
+        )
         ts = jnp.asarray(self.tscale).astype(dtype)
-        if ts.ndim < flat.ndim:  # per-tensor () or leading (L,) -> broadcast
-            ts = ts.reshape(*ts.shape, *([1] * (flat.ndim - ts.ndim)))
-        flat = (flat / ts)[..., : self.k]
-        return jnp.swapaxes(flat, -1, -2)
+        if ts.ndim >= 2:  # per-channel (..., N, 1) -> (..., 1, N)
+            ts = jnp.swapaxes(ts, -1, -2)
+        if ts.ndim < deq.ndim:  # per-tensor () or leading (L,) -> broadcast
+            ts = ts.reshape(*ts.shape, *([1] * (deq.ndim - ts.ndim)))
+        return (deq / ts)[..., : self.k, :]
 
 
 def key_entry_str(entry) -> str:
@@ -296,3 +357,39 @@ class DSBPKernelMethod(QuantMethod):
         from repro.kernels import ops as kops
 
         return kops.dsbp_matmul_ste(x, w, cfg).astype(x.dtype)
+
+
+@register_quant_method
+class DSBPFusedMethod(QuantMethod):
+    """One-pass Pallas kernel: FP8 quantize + DSBP predict + align + MAC
+    fused into a single GEMM body (DESIGN.md §8).
+
+    The aligned-mantissa intermediate, its group scales and the bits map
+    never leave VMEM, and the power-of-two tensor scales of both operands
+    are folded into the group scales inside the kernel — no pre-multiply or
+    final division pass.  Packed weights feed the kernel their stored
+    kernel-layout ``(K', N)`` mantissas with zero per-call relayout; raw
+    weights pack per call with STE gradients (QAT trains through the fused
+    forward).  Bit-exact vs ``dsbp_matmul_ref`` under the default RNE path
+    (tests/test_fused.py), so swapping methods can never change served
+    tokens.
+    """
+
+    name = "dsbp_fused"
+
+    def pack(self, w, cfg):
+        from . import quantized as Q
+
+        return Q.pack_weights(w, cfg)
+
+    def _apply_packed(self, pw, x, cfg):
+        from repro.kernels import ops as kops  # local import: optional dep
+
+        return kops.dsbp_matmul_fused(
+            x, pw, input_cfg=cfg.input_cfg
+        ).astype(x.dtype)
+
+    def _apply_raw(self, w, x, cfg):
+        from repro.kernels import ops as kops
+
+        return kops.dsbp_matmul_fused_ste(x, w, cfg).astype(x.dtype)

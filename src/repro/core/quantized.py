@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from . import dsbp, energy
 from .dsbp import DSBPConfig
-from .packed import PackedDSBPWeight
+from .packed import PackedDSBPWeight, to_kernel_layout
 
 __all__ = [
     "QuantizedMatmulConfig",
@@ -115,10 +115,13 @@ def pack_weights(w: jax.Array, cfg: QuantizedMatmulConfig | str) -> PackedDSBPWe
     ``cfg`` is a :data:`PRESETS` key or a full config; the container embeds
     it so consumers know which on-the-fly input path pairs with the packed
     weights.  Aligned mantissas are stored as int8 (weight widths are <= 7
-    magnitude bits + sign), the logical (K, N) shape is recorded so the
-    group padding of K is explicit, and leading axes (stacked scan units,
-    MoE experts) are preserved.  Bit-exact vs :func:`quantize_weights`:
-    the int8 narrowing is lossless for every valid weight width.
+    magnitude bits + sign) in **kernel layout** — ``ka (K', N)`` with the
+    reduction axis leading, ``kscale (n_g, N)`` — so the Pallas GEMMs take
+    the stored arrays with zero per-call relayout (DESIGN.md §8).  The
+    logical (K, N) shape is recorded so the group padding of K is explicit,
+    and leading axes (stacked scan units, MoE experts) are preserved.
+    Bit-exact vs :func:`quantize_weights`: the int8 narrowing is lossless
+    for every valid weight width and the relayout is a pure permutation.
     """
     if isinstance(cfg, str):
         cfg = PRESETS[cfg]
@@ -132,9 +135,10 @@ def pack_weights(w: jax.Array, cfg: QuantizedMatmulConfig | str) -> PackedDSBPWe
              for key in ("a", "scale", "tscale", "bits")}
     else:
         q = quantize_weights(wf, wcfg)
+    ka, kscale = to_kernel_layout(q["a"].astype(jnp.int8), q["scale"])
     return PackedDSBPWeight(
-        a=q["a"].astype(jnp.int8),
-        scale=q["scale"],
+        ka=ka,
+        kscale=kscale,
         tscale=q["tscale"],
         bits=q["bits"].astype(jnp.int8),
         k=k,
@@ -160,10 +164,10 @@ def packed_matmul(x: jax.Array, pw: PackedDSBPWeight,
         raise ValueError(
             f"activation K={x.shape[-1]} != packed logical K={pw.k}"
         )
-    if pw.a.ndim != 3:
+    if pw.ka.ndim != 2:
         raise ValueError(
             f"packed_matmul needs a 2-D logical weight; got leading axes "
-            f"{pw.a.shape[:-3]} (vmap over them instead)"
+            f"{pw.ka.shape[:-2]} (vmap over them instead)"
         )
     icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
     batch_shape = x.shape[:-1]

@@ -2,6 +2,8 @@
 
   dsbp_matmul     — group-aligned INT GEMM with per-64-group scales (MXU)
   fp8_quant_align — fused FP8 quantize + DSBP predict + align (VPU)
+  dsbp_fused      — one-pass quantize-align-MAC GEMM (VPU input path feeds
+                    the scale-folded MXU dot in VMEM; the serving default)
   flash_attention — blockwise online-softmax attention for serving
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec) with its jnp oracle in

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: the one-pass quantize-align-MAC DSBP GEMM.
+
+This is the paper's macro datapath as ONE kernel (DESIGN.md §8): the FP8
+quantize + DSBP predict + mantissa align stages
+(``fp8_quant_align.quant_align_tile`` — the same tile math as the
+standalone input-path kernel) run on the activation tile in VMEM, and the
+aligned integers feed the scale-folded MXU dot of
+``dsbp_matmul._kernel_folded`` directly.  Exactly like the FIAU feeds the
+INT MAC array with no intermediate buffer, the int32 ``(M, K)``
+aligned-mantissa intermediate, its ``(M, K/64)`` group scales and the bits
+map never leave VMEM.  The two-kernel path round-trips all three through
+HBM and adds two full-tensor elementwise passes (``x * ts`` before,
+``y / (ts_x · ts_w)`` after); both disappear here because the tensor
+scales are folded into the group scales *inside* the kernel.
+
+Scale folding is exact: the group scales and the per-tensor / per-row FP8
+scales are all powers of two, so ``sx/ts_x`` and ``sw/ts_w`` are exact f32
+values, and multiplying the aligned integer mantissas (|a_x| < 2**11,
+|a_w| < 2**7, exact in f32) by them only adjusts exponents — no mantissa
+bit is ever rounded before the MXU dot.  The kernel is bit-exact vs
+``core.quantized.dsbp_matmul_ref`` under the default RNE path at the
+default full-K reduction block (tests/test_fused.py).
+
+The weight operands are consumed in the container's stored kernel layout
+(``PackedDSBPWeight.ka (K', N)`` int8 / ``.kscale (ng, N)``), so the
+serving path performs zero per-call relayout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dsbp import DSBPConfig
+
+from .fp8_quant_align import quant_align_tile
+
+GROUP = 64
+
+__all__ = ["dsbp_fused_kernel_call", "GROUP"]
+
+
+def _kernel(x_ref, ts_ref, aw_ref, sw_ref, tw_ref, o_ref, *,
+            cfg: DSBPConfig, groups_per_blk: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ts = ts_ref[0, 0]  # per-tensor input scale (power of two)
+    # ---- on-the-fly input path, entirely in VMEM ----
+    a, s, _bits = quant_align_tile(x_ref[...].astype(jnp.float32) * ts, cfg)
+    bm, bk = a.shape
+    bn = aw_ref.shape[1]
+    gpb = groups_per_blk
+    # ---- fold the pow2 tensor scales into the pow2 group scales (exact)
+    # and run the folded MXU dot (dsbp_matmul._kernel_folded) ----
+    ae = (a.reshape(bm, gpb, GROUP) * (s / ts)[:, :, None]).reshape(bm, bk)
+    we = (
+        aw_ref[...].astype(jnp.float32).reshape(gpb, GROUP, bn)
+        * (sw_ref[...] / tw_ref[...])[:, None, :]
+    ).reshape(bk, bn)
+    o_ref[...] += jnp.dot(ae, we, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bn", "bk", "interpret")
+)
+def dsbp_fused_kernel_call(
+    x: jax.Array,
+    ts: jax.Array,
+    aw: jax.Array,
+    sw: jax.Array,
+    tw: jax.Array,
+    cfg: DSBPConfig,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int | None = None,
+    interpret: bool = True,
+):
+    """One-pass DSBP GEMM over a (M, N, K) grid.
+
+    x  (M, K')  f32 raw activations (K' group-padded, NOT pre-scaled)
+    ts ()/(1,1) f32 power-of-two per-tensor input scale
+    aw (K', N)  int8 kernel-layout weight mantissas (``PackedDSBPWeight.ka``)
+    sw (ng, N)  f32 per-(group, col) weight scales (``.kscale``)
+    tw (1, N)   f32 power-of-two per-channel (or broadcast per-tensor)
+                weight scale
+    -> (M, N) f32, final output: the tensor scales are already divided out
+    via in-kernel folding — no post-GEMM elementwise pass.
+
+    M is ragged-friendly (auto-padded to the row block and sliced back).
+    ``bk=None`` (default) puts the whole reduction in one grid step — the
+    bit-exact configuration: cross-group accumulation then happens in the
+    very same reduction shape as ``dsbp_matmul_ref``.  Explicit ``bk``
+    tiles K for VMEM-constrained shapes at the cost of a different (still
+    exact-integer, f32-accumulated) summation order.
+    """
+    m, k = x.shape
+    n = aw.shape[1]
+    ng = k // GROUP
+    assert k % GROUP == 0 and aw.shape[0] == k, (x.shape, aw.shape)
+    assert sw.shape == (ng, n) and tw.shape == (1, n), (sw.shape, tw.shape)
+    bk = k if bk is None else min(bk, k)
+    bm, bn = min(bm, m), min(bn, n)
+    assert n % bn == 0 and k % bk == 0 and bk % GROUP == 0
+    pad_m = (-m) % bm
+    if pad_m:  # zero rows quantize to a=0 -> zero output rows, sliced away
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
+    ts = jnp.asarray(ts, jnp.float32).reshape(1, 1)
+    gpb = bk // GROUP
+    y = pl.pallas_call(
+        functools.partial(_kernel, cfg=cfg, groups_per_blk=gpb),
+        grid=(mp // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((gpb, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=interpret,
+    )(x, ts, aw, sw, tw)
+    return y[:m] if pad_m else y

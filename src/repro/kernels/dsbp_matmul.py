@@ -58,7 +58,8 @@ def _kernel_folded(ax_ref, sx_ref, aw_ref, sw_ref, o_ref, *, groups_per_blk: int
 
     with s̃ the group scales broadcast along their 64 lanes.  This replaces
     bk/64 rank-64 dots + bk/64 scaled adds with ONE rank-bk MXU dot — the
-    §Perf compute-term optimization (see EXPERIMENTS.md).
+    compute-term optimization (DESIGN.md §8; the fused one-pass kernel in
+    ``kernels/dsbp_fused.py`` builds on exactly this dot).
     """
     kk = pl.program_id(2)
 
@@ -92,9 +93,13 @@ def dsbp_matmul_kernel_call(
     interpret: bool = True,
     folded: bool = False,
 ):
-    """Tiled pallas_call; shapes must divide by the block sizes.
+    """Tiled pallas_call; N/K must divide by their block sizes.
 
     ax (M,K) int, sx (M,K//64) f32, aw (K,N) int, sw (K//64,N) f32 -> (M,N) f32.
+
+    M is ragged-friendly: decode batches like B=3 (or any M not dividing
+    the row block) are zero-padded up to a multiple of ``bm`` internally
+    and the output rows sliced back — no caller-side padding.
 
     Operands may be any integer dtype: the input path produces int32 (up to
     11 magnitude bits + sign) while pack-once weights arrive as **int8**
@@ -108,12 +113,17 @@ def dsbp_matmul_kernel_call(
     assert jnp.issubdtype(aw.dtype, jnp.integer), aw.dtype
     assert k % GROUP == 0 and sx.shape == (m, ng) and sw.shape == (ng, n)
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bk % GROUP == 0
+    assert n % bn == 0 and k % bk == 0 and bk % GROUP == 0
+    pad_m = (-m) % bm
+    if pad_m:  # zero mantissa rows contribute 0 and are sliced away
+        ax = jnp.pad(ax, ((0, pad_m), (0, 0)))
+        sx = jnp.pad(sx, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
     gpb = bk // GROUP
     body = _kernel_folded if folded else _kernel
-    return pl.pallas_call(
+    y = pl.pallas_call(
         functools.partial(body, groups_per_blk=gpb),
-        grid=(m // bm, n // bn, k // bk),
+        grid=(mp // bm, n // bn, k // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bm, gpb), lambda i, j, kk: (i, kk)),
@@ -121,6 +131,7 @@ def dsbp_matmul_kernel_call(
             pl.BlockSpec((gpb, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
         interpret=interpret,
     )(ax, sx, aw, sw)
+    return y[:m] if pad_m else y

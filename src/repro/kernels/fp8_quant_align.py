@@ -4,7 +4,12 @@ This is the macro's *input path* (max-exponent logic + MPU + FIAU) as one
 VPU kernel: a f32/bf16 tile comes in from HBM, and aligned integer
 mantissas + per-64-group scales + predicted bitwidths go out.  Fusing the
 three stages means the activations are read exactly once (the memory-term
-optimization for the serving path — see EXPERIMENTS.md §Perf).
+optimization for the serving path — see DESIGN.md §8).
+
+The tile-level math lives in :func:`quant_align_tile` so the standalone
+kernel here and the one-pass GEMM in ``kernels/dsbp_fused.py`` (which runs
+the same stages and feeds the MXU dot without ever writing the aligned
+ints to HBM) share ONE implementation.
 
 Implementation notes (TPU-friendly, no transcendentals):
   * FP8 round-to-nearest-even is done with the same step-quantization as
@@ -29,7 +34,7 @@ from repro.core.formats import get_format
 
 GROUP = 64
 
-__all__ = ["fp8_quant_align_kernel_call", "GROUP"]
+__all__ = ["fp8_quant_align_kernel_call", "quant_align_tile", "GROUP"]
 
 
 def _exp2i(n):
@@ -45,9 +50,20 @@ def _floor_log2(ax):
     return ((bits >> 23) & 0xFF) - 127
 
 
-def _kernel(x_ref, a_ref, s_ref, b_ref, *, cfg: DSBPConfig):
+def quant_align_tile(x: jax.Array, cfg: DSBPConfig):
+    """Tile-level input path: quantize + predict + align one VMEM tile.
+
+    ``x (bm, bk)`` f32, already multiplied by the per-tensor scale, with
+    ``bk`` a multiple of the group (groups never straddle tiles).  Returns
+    ``(a, scale, bits)``: aligned mantissas ``a (bm, bk)`` as
+    *integer-valued f32* (callers cast — the standalone kernel stores int32,
+    the fused GEMM feeds the MXU dot directly), group scales
+    ``scale (bm, bk//G)`` f32 and predicted widths ``bits (bm, bk//G)``
+    int32.  This is the one shared implementation behind both the
+    standalone kernel below and ``kernels/dsbp_fused`` (DESIGN.md §8).
+    """
     f = get_format(cfg.fmt)
-    x = x_ref[...].astype(jnp.float32)
+    x = x.astype(jnp.float32)
     bm, bk = x.shape
     ng = bk // GROUP
 
@@ -93,8 +109,13 @@ def _kernel(x_ref, a_ref, s_ref, b_ref, *, cfg: DSBPConfig):
     else:
         a = jnp.clip(jnp.floor(mag), -lim, lim - 1.0)
 
-    a_ref[...] = a.reshape(bm, bk).astype(a_ref.dtype)
-    s_ref[...] = _exp2i(e_max - (b - 1))
+    return a.reshape(bm, bk), _exp2i(e_max - (b - 1)), b
+
+
+def _kernel(x_ref, a_ref, s_ref, b_ref, *, cfg: DSBPConfig):
+    a, s, b = quant_align_tile(x_ref[...], cfg)
+    a_ref[...] = a.astype(a_ref.dtype)
+    s_ref[...] = s
     b_ref[...] = b
 
 
@@ -108,15 +129,23 @@ def fp8_quant_align_kernel_call(
     interpret: bool = True,
 ):
     """x (M, K) f32 (pre-scaled by the per-tensor scale) ->
-    (a (M,K) int32, scale (M,K//64) f32, bits (M,K//64) int32)."""
+    (a (M,K) int32, scale (M,K//64) f32, bits (M,K//64) int32).
+
+    M is ragged-friendly: any batch/token count is zero-padded up to a
+    multiple of the row block internally and the outputs are sliced back —
+    decode batches like B=3 need no caller-side padding."""
     m, k = x.shape
     assert k % GROUP == 0
     bm, bk = min(bm, m), min(bk, k)
-    assert m % bm == 0 and k % bk == 0 and bk % GROUP == 0
+    assert k % bk == 0 and bk % GROUP == 0
+    pad_m = (-m) % bm
+    if pad_m:  # ragged M: zero rows quantize to a=0 and are sliced away
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    mp = m + pad_m
     ng, bng = k // GROUP, bk // GROUP
-    return pl.pallas_call(
+    a, s, b = pl.pallas_call(
         functools.partial(_kernel, cfg=cfg),
-        grid=(m // bm, k // bk),
+        grid=(mp // bm, k // bk),
         in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
         out_specs=[
             pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
@@ -124,9 +153,12 @@ def fp8_quant_align_kernel_call(
             pl.BlockSpec((bm, bng), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, k), jnp.int32),
-            jax.ShapeDtypeStruct((m, ng), jnp.float32),
-            jax.ShapeDtypeStruct((m, ng), jnp.int32),
+            jax.ShapeDtypeStruct((mp, k), jnp.int32),
+            jax.ShapeDtypeStruct((mp, ng), jnp.float32),
+            jax.ShapeDtypeStruct((mp, ng), jnp.int32),
         ],
         interpret=interpret,
     )(x)
+    if pad_m:
+        a, s, b = a[:m], s[:m], b[:m]
+    return a, s, b

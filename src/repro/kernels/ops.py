@@ -4,10 +4,14 @@ On this CPU container the kernels execute with ``interpret=True`` (the
 kernel body runs in Python op-by-op); on a real TPU set
 ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile them.
 
-Weight handling mirrors the macro (DESIGN.md §2): ``dsbp_matmul_packed``
-is the serving entry point — it consumes a :class:`PackedDSBPWeight`
-produced once offline, so only the input path runs per call.
-``dsbp_matmul`` is the pack-per-call convenience wrapper around it.
+Weight handling mirrors the macro (DESIGN.md §2/§8): ``dsbp_matmul_fused``
+is the serving entry point — ONE kernel runs quantize + predict + align +
+MAC off a :class:`PackedDSBPWeight`'s stored kernel-layout operands, with
+no intermediate tensors and no per-call weight relayout.
+``dsbp_matmul_packed`` is the two-kernel variant (separate input-path and
+GEMM kernels, aligned ints through HBM) kept as the fused path's
+cross-check and the K-tiling fallback; ``dsbp_matmul`` is the
+pack-per-call convenience wrapper.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from repro.core.formats import per_tensor_scale
 from repro.core.packed import PackedDSBPWeight
 from repro.core.quantized import QuantizedMatmulConfig, pack_weights
 
+from . import dsbp_fused as _df
 from . import dsbp_matmul as _dm
 from . import fp8_quant_align as _qa
 from . import flash_attention as _fa
@@ -30,10 +35,48 @@ __all__ = [
     "interpret_default",
     "dsbp_matmul",
     "dsbp_matmul_packed",
+    "dsbp_matmul_fused",
     "dsbp_matmul_ste",
+    "dsbp_matmul_fused_ste",
     "fp8_quant_align",
     "flash_attention",
+    "count_weight_transposes",
 ]
+
+
+def count_weight_transposes(fn, *args, min_size: int) -> int:
+    """Transpose primitives over arrays of >= min_size elements anywhere in
+    ``fn``'s traced computation (pjit/pallas bodies included).
+
+    This is the checkable form of the no-relayout contract (DESIGN.md §8):
+    a packed serving call must never permute a weight-sized array per call
+    — the kernel-layout operands come straight from the container.  Used by
+    tests/test_fused.py and the CI bench gate
+    (``benchmarks.bench_kernels.bench_fused_vs_two_kernel``).
+    """
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+
+    stack = [jax.make_jaxpr(fn)(*args).jaxpr]
+    count = 0
+
+    def push(v):
+        if isinstance(v, ClosedJaxpr):
+            stack.append(v.jaxpr)
+        elif isinstance(v, Jaxpr):
+            stack.append(v)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                push(item)
+
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            if (eqn.primitive.name == "transpose"
+                    and eqn.invars[0].aval.size >= min_size):
+                count += 1
+            for p in eqn.params.values():
+                push(p)
+    return count
 
 
 def interpret_default() -> bool:
@@ -69,29 +112,74 @@ def dsbp_matmul_packed(
     """
     if interpret is None:
         interpret = interpret_default()
-    if pw.a.ndim != 3:
-        raise ValueError(
-            f"dsbp_matmul_packed needs a 2-D logical weight; got leading "
-            f"axes {pw.a.shape[:-3]} (vmap over them instead)"
-        )
-    if x.shape[-1] != pw.k:
-        raise ValueError(
-            f"activation K={x.shape[-1]} != packed logical K={pw.k}"
-        )
+    _check_packed_2d(pw, x, "dsbp_matmul_packed")
     batch = x.shape[:-1]
-    n, ng = pw.n, pw.n_groups
+    n = pw.n
     icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
     xm = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     if pw.padded_k != pw.k:
         xm = jnp.pad(xm, ((0, 0), (0, pw.padded_k - pw.k)))
     qx = fp8_quant_align(xm, icfg, interpret=interpret)
-    aw = pw.a.reshape(n, ng * _dm.GROUP).T  # (K', N) int8
-    sw = pw.scale.T  # (ng, N)
+    # kernel-layout operands straight from the container: no relayout
     y = _dm.dsbp_matmul_kernel_call(
-        qx["a"], qx["scale"], aw, sw, interpret=interpret, folded=folded
+        qx["a"], qx["scale"], pw.ka, pw.kscale, interpret=interpret,
+        folded=folded,
     )
     tw = pw.tscale.reshape(1, -1) if jnp.ndim(pw.tscale) else pw.tscale
     return (y / (qx["tscale"] * tw)).reshape(*batch, n)
+
+
+def _check_packed_2d(pw: PackedDSBPWeight, x: jax.Array, name: str) -> None:
+    if pw.ka.ndim != 2:
+        raise ValueError(
+            f"{name} needs a 2-D logical weight; got leading "
+            f"axes {pw.ka.shape[:-2]} (vmap over them instead)"
+        )
+    if x.shape[-1] != pw.k:
+        raise ValueError(
+            f"activation K={x.shape[-1]} != packed logical K={pw.k}"
+        )
+
+
+@partial(jax.jit, static_argnames=("input_cfg", "interpret", "bm", "bn", "bk"))
+def dsbp_matmul_fused(
+    x: jax.Array,
+    pw: PackedDSBPWeight,
+    input_cfg: DSBPConfig | None = None,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int | None = None,
+):
+    """Fused one-pass DSBP GEMM: x (..., K) @ packed(K, N) -> (..., N) f32.
+
+    The serving hot path (DESIGN.md §8): quantize + predict + align + MAC
+    run in ONE Pallas kernel per output tile — the aligned-int intermediate
+    and its scales never touch HBM, the pow2 tensor scales of both operands
+    fold into the group scales inside the kernel (no pre-multiply / final
+    division pass), and the weight operands are the container's stored
+    kernel-layout arrays (zero per-call relayout).  Bit-exact vs
+    ``dsbp_matmul_ref`` under the default RNE path.  M is ragged-friendly
+    (decode batches like B=3 auto-pad internally).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    _check_packed_2d(pw, x, "dsbp_matmul_fused")
+    batch = x.shape[:-1]
+    icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
+    xm = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if pw.padded_k != pw.k:  # mirror the zero lanes the weights packed with
+        xm = jnp.pad(xm, ((0, 0), (0, pw.padded_k - pw.k)))
+    ts = per_tensor_scale(xm, icfg.fmt)
+    tsw = jnp.asarray(pw.tscale)
+    tw = jnp.broadcast_to(
+        tsw.reshape(1, -1) if tsw.ndim else tsw, (1, pw.n)
+    ).astype(jnp.float32)
+    y = _df.dsbp_fused_kernel_call(
+        xm, ts, pw.ka, pw.kscale, tw, icfg,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y.reshape(*batch, pw.n)
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret", "folded"))
@@ -137,6 +225,21 @@ def _ste_bwd(cfg, res, g):
 
 
 dsbp_matmul_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def dsbp_matmul_fused_ste(x: jax.Array, w: jax.Array, cfg: QuantizedMatmulConfig):
+    """Fused-kernel forward (pack per call), straight-through backward —
+    QAT through the 'dsbp_fused' method sees the exact serving numerics
+    while keeping full-precision gradients."""
+    return dsbp_matmul_fused(x, pack_weights(w, cfg))
+
+
+def _fused_ste_fwd(x, w, cfg):
+    return dsbp_matmul_fused(x, pack_weights(w, cfg)), (x, w)
+
+
+dsbp_matmul_fused_ste.defvjp(_fused_ste_fwd, _ste_bwd)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, interpret=None,

@@ -59,9 +59,11 @@ def packed_like(params_sds):
             return leaf
         *lead, k, n = leaf.shape
         ng = -(-k // 64)
+        # kernel-layout container fields (DESIGN.md §8): ka (..., K', N),
+        # kscale (..., n_g, N)
         return {
-            "a": jax.ShapeDtypeStruct((*lead, n, ng, 64), jnp.int8),
-            "scale": jax.ShapeDtypeStruct((*lead, n, ng), jnp.float32),
+            "ka": jax.ShapeDtypeStruct((*lead, ng * 64, n), jnp.int8),
+            "kscale": jax.ShapeDtypeStruct((*lead, ng, n), jnp.float32),
             "tscale": jax.ShapeDtypeStruct((*lead, n, 1), jnp.float32),
         }
 

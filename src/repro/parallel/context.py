@@ -89,10 +89,11 @@ def gather_unit_params(params):
         # container fields, which flatten with GetAttrKey paths)
         name = key_entry_str(path[-1])
         parent = key_entry_str(path[-2]) if len(path) >= 2 else ""
-        if name in ("a", "scale", "tscale") and parent in _GATHERED:
-            # packed projection: gather the 'data'(ng) dim; keep 'model'
+        if name in ("ka", "kscale", "tscale") and parent in _GATHERED:
+            # packed projection (kernel layout): gather the 'data' reduction
+            # dim; keep the 'model' (N) dim sharded
             spec = [None] * leaf.ndim
-            pos = {"a": -3, "scale": -2, "tscale": -2}[name]
+            pos = {"ka": -1, "kscale": -1, "tscale": -2}[name]
             if leaf.ndim >= -pos and _mesh_fits(mesh, leaf.shape[pos], "model"):
                 spec[pos] = "model"
             return jax.lax.with_sharding_constraint(

@@ -64,17 +64,15 @@ def _param_rule(path, leaf, mesh: Mesh):
     shape = leaf.shape[1:] if stacked else leaf.shape
     lead = (None,) if stacked else ()
 
-    if name in ("a", "scale", "tscale") and len(names) >= 2 and names[-2] in _IN_OUT:
-        # DSBP-packed projection: a (..., N_out, ng, G) int8; scale (..., N,
-        # ng); tscale (..., N, 1).  N_out -> 'model' (TP), ng -> 'data' (FSDP)
+    if name in ("ka", "kscale", "tscale") and len(names) >= 2 and names[-2] in _IN_OUT:
+        # DSBP-packed projection, kernel layout (DESIGN.md §8): ka (..., K',
+        # N_out) int8; kscale (..., ng, N); tscale (..., N, 1).  N_out ->
+        # 'model' (TP), the reduction dims K'/ng -> 'data' (FSDP storage)
         full = leaf.shape
         spec = [None] * len(full)
-        if name == "a" and len(full) >= 3:
-            spec[-3] = "model" if _fits(full[-3], mesh, "model") else None
+        if name in ("ka", "kscale") and len(full) >= 2:
             spec[-2] = "data" if _fits(full[-2], mesh, "data") else None
-        elif name == "scale" and len(full) >= 2:
-            spec[-2] = "model" if _fits(full[-2], mesh, "model") else None
-            spec[-1] = "data" if _fits(full[-1], mesh, "data") else None
+            spec[-1] = "model" if _fits(full[-1], mesh, "model") else None
         elif name == "tscale" and len(full) >= 2:
             spec[-2] = "model" if _fits(full[-2], mesh, "model") else None
         return P(*spec)

@@ -9,6 +9,9 @@ prefill/decode run entirely off that packed tree.  That is the paper's
 offline-weight / on-the-fly-input split: only the activation path quantizes
 per token, and the HBM footprint drops ~3.8x vs f32 (1.9x vs bf16) per
 projection (reported via :func:`packed_nbytes` in ``Engine.pack_report``).
+Projections execute through the fused one-pass quantize-align-MAC kernel by
+default (``quant_method='dsbp_fused'``, DESIGN.md §8), consuming the
+container's kernel-layout operands with zero per-call relayout.
 
 Serving is length-aware end to end (DESIGN.md §7): ragged prompts prefill
 with a per-sequence ``lengths`` vector (pad-masked attention, per-row last
@@ -56,6 +59,11 @@ class ServeConfig:
     # re-quantizing them on every matmul call.
     pack: bool = True
     pack_preset: str | None = None
+    # quantized-linear method for serving.  None defaults to 'dsbp_fused'
+    # (the one-pass quantize-align-MAC kernel, DESIGN.md §8) when the arch
+    # config quantizes but names no method; set 'dsbp_kernel' to fall back
+    # to the two-kernel path (or 'dsbp_ref' for the jnp reference).
+    quant_method: str | None = None
     eos_id: int | None = None    # serve(): slot frees when this is sampled
     prefill_bucket: int = 16     # admission prompts pad up to a multiple of
                                  # this (bounds prefill retraces per shape)
@@ -135,6 +143,14 @@ class Engine:
     """
 
     def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+        # serving default: the fused one-pass kernel (DESIGN.md §8), unless
+        # the arch config or ServeConfig pins a method explicitly.  Token
+        # parity with 'dsbp_kernel' / 'dsbp_ref' is asserted in
+        # tests/test_serving.py, so the swap can never change served tokens.
+        if cfg.quant is not None and (scfg.quant_method or cfg.quant_method) is None:
+            cfg = cfg.replace(quant_method="dsbp_fused")
+        elif scfg.quant_method is not None:
+            cfg = cfg.replace(quant_method=scfg.quant_method)
         self.cfg = cfg
         self.scfg = scfg
         self.pack_report = None

@@ -87,6 +87,33 @@ def test_grouped_matmul_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5)
 
 
+@pytest.mark.parametrize("m", [1, 3, 5])
+def test_grouped_matmul_ragged_m(m):
+    """Decode batches like B=3 must not require caller-side padding of M
+    (the entry point used to assert m % bm == 0)."""
+    rng = np.random.default_rng(m)
+    k, n = 128, 64
+    ax = rng.integers(-2047, 2048, (m, k)).astype(np.int32)
+    aw = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    sx = np.exp2(rng.integers(-4, 4, (m, k // 64))).astype(np.float32)
+    sw = np.exp2(rng.integers(-4, 4, (k // 64, n))).astype(np.float32)
+    ref = grouped_scaled_matmul_ref(
+        jnp.asarray(ax), jnp.asarray(sx), jnp.asarray(aw.astype(np.int32)),
+        jnp.asarray(sw))
+    for folded in (False, True):
+        got = dsbp_matmul_kernel_call(
+            jnp.asarray(ax), jnp.asarray(sx), jnp.asarray(aw),
+            jnp.asarray(sw), folded=folded)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-5)
+    # M > bm with M % bm != 0 exercises the internal zero-pad + slice
+    got = dsbp_matmul_kernel_call(
+        jnp.asarray(np.tile(ax, (5, 1))[: 4 * m + 1]),
+        jnp.asarray(np.tile(sx, (5, 1))[: 4 * m + 1]),
+        jnp.asarray(aw), jnp.asarray(sw), bm=2 * m, folded=True)
+    assert got.shape == (4 * m + 1, n)
+    np.testing.assert_allclose(np.asarray(got[:m]), np.asarray(ref), rtol=3e-5)
+
+
 # ---------------- fp8_quant_align ----------------
 
 @pytest.mark.parametrize("fmt", ["e2m5", "e3m4", "e4m3", "e5m2"])
@@ -111,6 +138,20 @@ def test_quant_align_shapes(shape):
     a_r, s_r, b_r = quant_align_ref(x * ts, cfg)
     a_k, s_k, b_k = fp8_quant_align_kernel_call(x * ts, cfg, bm=32, bk=64)
     np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+
+
+@pytest.mark.parametrize("m", [1, 3, 5])
+def test_quant_align_ragged_m(m):
+    """The input-path kernel pads ragged M internally and slices back."""
+    cfg = DSBPConfig(fmt="e4m3", side="input", k=1.0, b_fix=5)
+    x = jnp.asarray(_x((m, 128), seed=m))
+    ts = per_tensor_scale(x, "e4m3")
+    a_r, s_r, b_r = quant_align_ref(x * ts, cfg)
+    # bm=2 forces the zero-pad path whenever m is odd
+    a_k, s_k, b_k = fp8_quant_align_kernel_call(x * ts, cfg, bm=2, bk=128)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
 
 
 def test_quant_align_trunc_mode():

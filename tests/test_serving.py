@@ -121,6 +121,27 @@ def test_generate_ragged_matches_batch1_packed():
         assert np.array_equal(out[j], solo.generate(p[None, :], 8)[0]), j
 
 
+@pytest.mark.parametrize("arch", ["yi-9b", "recurrentgemma-2b"])
+def test_fused_serving_token_parity_with_kernel_method(arch):
+    """The fused one-pass GEMM is the serving default (DESIGN.md §8); a
+    ragged batch must generate token-for-token what the two-kernel
+    'dsbp_kernel' method generates — across an attention arch and a
+    recurrent one, so the method swap can never silently change served
+    tokens."""
+    cfg = _cfg(arch).replace(quant="precise")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, seed=4)
+    toks, lens = _padded(prompts)
+    eng_fused = Engine(params, cfg, ServeConfig(max_len=64))
+    assert eng_fused.cfg.quant_method == "dsbp_fused"  # the default
+    eng_kernel = Engine(eng_fused.params, cfg,
+                        ServeConfig(max_len=64, quant_method="dsbp_kernel"))
+    assert eng_kernel.cfg.quant_method == "dsbp_kernel"
+    out_f = eng_fused.generate(toks, 6, lengths=lens)
+    out_k = eng_kernel.generate(toks, 6, lengths=lens)
+    np.testing.assert_array_equal(out_f, out_k)
+
+
 # ---------------------------------------------------------------------------
 # Engine.serve: slot scheduler
 # ---------------------------------------------------------------------------
