@@ -1,0 +1,38 @@
+"""CI gate over BENCH_policy.json (DESIGN.md §9): the calibrated per-layer
+DSBP policy must DOMINATE the fixed-bitwidth baseline — equal-or-better
+eval accuracy on BOTH synthetic tasks AND strictly higher modeled
+efficiency — and must actually have demoted layers below the precision
+ceiling (a degenerate all-precise policy that happens to pass is not the
+paper's claim).  Usage:
+  python benchmarks/check_policy_gate.py BENCH_policy.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "policy_vs_fixed")
+    d = row.get("derived", "")
+    assert "error" not in row, row
+    p_eff = float(re.search(r"policy_eff=([0-9.]+)", d).group(1))
+    b_eff = float(re.search(r"base_eff=([0-9.]+)", d).group(1))
+    p_acc = [float(x) for x in
+             re.search(r"policy_acc=([0-9.]+)/([0-9.]+)", d).groups()]
+    b_acc = [float(x) for x in
+             re.search(r"base_acc=([0-9.]+)/([0-9.]+)", d).groups()]
+    dom = re.search(r"dominates=(\d)", d).group(1)
+    demoted = re.search(r"demoted_layers=(\d+)/(\d+)", d)
+    # equal-or-better accuracy on BOTH tasks, strictly higher efficiency
+    assert all(p >= b for p, b in zip(p_acc, b_acc)), d
+    assert p_eff > b_eff, d
+    assert dom == "1", d
+    assert int(demoted.group(1)) > 0, d  # the autotuner actually moved
+    print("policy gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_policy.json")

@@ -50,6 +50,35 @@ def llama_like_weights(shape, seed=1, group=64):
     return w.astype(np.float32)
 
 
+def llama_like_model_params(cfg, seed: int = 0):
+    """Model params with trained-like projection matrices: every DSBP-
+    quantizable projection leaf is replaced by :func:`llama_like_weights`
+    (Fig.-1-style mild per-group spread), so end-to-end policy/eval
+    benchmarks see the weight structure the paper's Table I numbers are
+    measured on rather than raw random-init gaussians."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as M
+    from repro.serve.engine import PROJ_NAMES
+
+    params = M.init(jax.random.PRNGKey(seed), cfg)
+    counter = [seed]
+
+    def swap(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name not in PROJ_NAMES or getattr(leaf, "ndim", 0) < 2 \
+                or leaf.shape[-2] < 64:
+            return leaf
+        counter[0] += 1
+        k, n = leaf.shape[-2:]
+        lead = int(np.prod(leaf.shape[:-2], dtype=int))
+        w = np.stack([llama_like_weights((k, n), seed=counter[0] * 31 + i)
+                      for i in range(lead)])
+        return jnp.asarray(w.reshape(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(swap, params)
+
+
 def fp8_exact_baseline(x, w):
     """The FP8 quantize -> exact-accumulation GEMM the paper's accuracy
     baselines correspond to (75.0% BoolQ etc.): per-tensor E4M3 activations,

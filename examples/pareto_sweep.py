@@ -1,65 +1,93 @@
-"""(k, B_fix) hyperparameter exploration — the paper's Fig. 7 sweep as CSV.
+"""(k, B_fix) hyperparameter exploration — the paper's Fig. 7 sweep,
+rebuilt on the policy subsystem (DESIGN.md §9).
 
-Sweeps the DSBP knobs over Llama-like layer data and emits
-(k, b_fix_in, b_fix_w, avg_I, avg_W, sqnr_db, tflops_per_w) rows, marking
-the Pareto frontier.  This is the offline exploration loop the paper
-describes for choosing Precise/Efficient configurations.
+Where the old sweep quantized ONE synthetic matmul, this one prices every
+candidate against a real model end to end:
 
-  PYTHONPATH=src python examples/pareto_sweep.py > pareto.csv
+  * modeled avg I/W widths + TOPS/W come from ONE calibration pass
+    (``repro.policy.calibrate`` histograms price every candidate by pure
+    arithmetic — no per-candidate model runs);
+  * accuracy is measured through ``serve.Engine`` on the synthetic
+    BoolQ/Winogrande eval (gold labels from the float model, decided items
+    only), i.e. the same harness the autotuner optimizes against.
+
+  PYTHONPATH=src python examples/pareto_sweep.py [--items 48] [--no-eval] \
+      > pareto.csv
 """
+import argparse
 import sys
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.core import energy as E
-from repro.core import quantized as Q
+from repro.configs import smoke_config
 from repro.core.dsbp import DSBPConfig
+from repro.core.quantized import QuantizedMatmulConfig
+from repro.eval import harness
+from repro.policy import (
+    DSBPPolicy,
+    assignment_cost,
+    calibrate,
+    synthetic_calibration_batches,
+)
+from repro.serve.engine import Engine, ServeConfig
+
+sys.path.insert(0, ".")  # benchmarks.common for the trained-like weights
+from benchmarks.common import llama_like_model_params  # noqa: E402
 
 
-def llama_like(shape, seed):
-    rng = np.random.default_rng(seed)
-    x = rng.standard_normal(shape).astype(np.float32)
-    return x * rng.lognormal(0, 1.2, shape[-1]).astype(np.float32)
+def candidate(k, b_in, b_w):
+    return QuantizedMatmulConfig(
+        input_cfg=DSBPConfig(fmt="e4m3", side="input", k=k, b_fix=b_in),
+        weight_cfg=DSBPConfig(fmt="e2m5", side="weight", k=k, b_fix=b_w,
+                              scale_granularity="row"))
 
 
 def main():
-    x = jnp.asarray(llama_like((128, 2048), 0))
-    w = jnp.asarray(np.random.default_rng(1).standard_normal((2048, 128))
-                    .astype(np.float32) * 0.03)
-    exact = np.asarray(x) @ np.asarray(w)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--items", type=int, default=48)
+    ap.add_argument("--no-eval", action="store_true",
+                    help="modeled efficiency only (fast)")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).replace(dtype="float32", remat=False)
+    params = llama_like_model_params(cfg, 0)
+    report = calibrate(params, cfg,
+                       synthetic_calibration_batches(cfg, 2, 2, 32, seed=0))
+
+    tasks, golds = [], []
+    if not args.no_eval:
+        tasks, golds = harness.decided_tasks(params, cfg, args.items)
 
     rows = []
-    for k in (0.0, 0.5, 1.0, 1.5, 2.0):
-        for b_in in (3, 4, 5, 6, 7):
-            for b_w in (3, 4, 5):
-                cfg = Q.QuantizedMatmulConfig(
-                    input_cfg=DSBPConfig(fmt="e4m3", side="input",
-                                         mode="dsbp", k=k, b_fix=b_in),
-                    weight_cfg=DSBPConfig(fmt="e2m5", side="weight", mode="dsbp",
-                                          k=k, b_fix=b_w,
-                                          scale_granularity="row"),
-                )
-                y = np.asarray(Q.dsbp_matmul_ref(x, w, cfg))
-                st = jax.tree.map(float, Q.matmul_stats(x, w, cfg))
-                err = np.abs(y - exact)
-                sqnr = 10 * np.log10((exact**2).mean() / (err**2).mean())
-                eff = E.efficiency_tops_per_w(st["avg_i_bits"],
-                                              st["avg_w_bits"], "fp_dsbp")
-                rows.append((k, b_in, b_w, st["avg_i_bits"], st["avg_w_bits"],
-                             sqnr, eff))
+    for k in (0.5, 1.0, 2.0):
+        for b_in in (2, 3, 4, 6):
+            for b_w in (3, 5, 7):
+                c = candidate(k, b_in, b_w)
+                cost = assignment_cost(report, {p: c for p in report.layers})
+                accs = (float("nan"), float("nan"))
+                if not args.no_eval:
+                    pol = DSBPPolicy.uniform(c, report.layers.keys())
+                    eng = Engine(params, cfg,
+                                 ServeConfig(max_len=256, pack_preset=pol,
+                                             quant_method="dsbp_ref"))
+                    accs = tuple(harness.evaluate(eng, t, g)
+                                 for t, g in zip(tasks, golds))
+                rows.append((k, b_in, b_w, cost["avg_i"], cost["avg_w"],
+                             cost["eff_tops_w"], accs[0], accs[1]))
+                print(f"# {len(rows)} configs done", end="\r", file=sys.stderr)
 
-    pareto = set()
-    for i, r in enumerate(rows):
-        if not any(o[5] >= r[5] and o[6] > r[6] or o[5] > r[5] and o[6] >= r[6]
-                   for o in rows):
-            pareto.add(i)
+    # Pareto frontier on (min task accuracy, modeled efficiency)
+    def acc_of(r):
+        return min(r[6], r[7]) if not args.no_eval else -r[3] * r[4]
 
-    print("k,b_fix_in,b_fix_w,avg_I,avg_W,sqnr_db,tflops_per_w,pareto")
+    pareto = {i for i, r in enumerate(rows)
+              if not any((acc_of(o) >= acc_of(r) and o[5] > r[5]) or
+                         (acc_of(o) > acc_of(r) and o[5] >= r[5])
+                         for o in rows)}
+
+    print("k,b_fix_in,b_fix_w,avg_I,avg_W,eff_tops_w,acc_boolq,acc_wino,pareto")
     for i, r in enumerate(rows):
         print(f"{r[0]},{r[1]},{r[2]},{r[3]:.2f},{r[4]:.2f},{r[5]:.2f},"
-              f"{r[6]:.1f},{int(i in pareto)}")
+              f"{r[6]:.3f},{r[7]:.3f},{int(i in pareto)}")
     print(f"# {len(pareto)} Pareto-optimal of {len(rows)} configs",
           file=sys.stderr)
 

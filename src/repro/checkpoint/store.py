@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.packed import key_entry_str, to_kernel_layout
 
-__all__ = ["save", "restore", "latest_step", "reshard_leaf"]
+__all__ = ["save", "restore", "restore_flat", "latest_step", "reshard_leaf"]
 
 _SEP = "/"
 
@@ -134,6 +134,24 @@ def restore(ckpt_dir: str, tree_like, step: int | None = None, host: int = 0):
             raise ValueError(f"{key}: ckpt shape {arr.shape} != model {np.shape(leaf)}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def restore_flat(ckpt_dir: str, step: int | None = None, host: int = 0):
+    """Restore the raw ``{path-key: np.ndarray}`` mapping of a checkpoint
+    without a ``tree_like`` skeleton; returns (flat dict, step).
+
+    For self-describing artifacts whose structure the caller cannot know
+    before reading — e.g. the DSBP policy blob (``repro.policy.policy``),
+    whose single uint8 leaf has data-dependent length."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(d, f"host{host}.npz"))
+    return {k: data[k] for k in manifest["keys"]}, step
 
 
 def reshard_leaf(shards: list[np.ndarray], axis: int, new_parts: int) -> list[np.ndarray]:

@@ -1,0 +1,32 @@
+"""Synthetic multiple-choice likelihood eval (DESIGN.md §9).
+
+Deterministic BoolQ/Winogrande-style task generators (``tasks.py``) scored
+batch-invariantly through :class:`repro.serve.engine.Engine`
+(``harness.py``).  Gold labels come from the float reference model, so
+"accuracy" measures **behavior preservation under quantization** — the
+fraction of items where the quantized engine ranks the choices the way the
+unquantized model does.  That is the accuracy axis of the paper's
+DSBP-vs-fixed-bitwidth claim, realized without external datasets.
+"""
+from .tasks import MCItem, MCTask, boolq_synthetic, winogrande_synthetic
+from .harness import (
+    decided_subset,
+    decided_tasks,
+    evaluate,
+    gold_labels_and_margins,
+    hard_subset,
+    score_task,
+)
+
+__all__ = [
+    "MCItem",
+    "MCTask",
+    "boolq_synthetic",
+    "winogrande_synthetic",
+    "score_task",
+    "gold_labels_and_margins",
+    "hard_subset",
+    "decided_subset",
+    "decided_tasks",
+    "evaluate",
+]

@@ -1,0 +1,125 @@
+"""Engine-based multiple-choice likelihood scoring (DESIGN.md §9).
+
+Every choice of every item scores through
+:meth:`repro.serve.engine.Engine.score_continuations` — the engine's packed
+weights, quant method and per-layer policy apply exactly as they would in
+serving, and scores are batch-invariant (each row equals scoring it alone),
+so accuracies are reproducible regardless of how items are batched.
+
+Gold labels come from the FLOAT reference model
+(:func:`gold_labels_and_margins`): accuracy is the fraction of items where
+the candidate engine ranks the choices the way the unquantized model does.
+The float margins also grade item difficulty — :func:`hard_subset` keeps the
+items with the smallest float-model margins, where quantization noise
+actually flips decisions (the regime the paper's equal-accuracy comparison
+lives in; items with huge margins are insensitive to any 4+-bit config and
+only dilute the signal).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.engine import Engine, ServeConfig
+
+from .tasks import MCTask
+
+__all__ = ["score_task", "gold_labels_and_margins", "hard_subset",
+           "decided_subset", "decided_tasks", "evaluate", "float_engine",
+           "STANDARD_MARGIN_FLOORS"]
+
+
+def float_engine(params, cfg, max_len: int = 512) -> Engine:
+    """The unquantized reference engine (gold-label oracle)."""
+    return Engine(params, cfg.replace(quant=None, quant_method=None),
+                  ServeConfig(max_len=max_len, pack=False))
+
+
+def score_task(engine: Engine, task: MCTask, batch_items: int = 16) -> np.ndarray:
+    """(n_items, n_choices) continuation log-prob sums."""
+    seqs, plens = [], []
+    for item in task.items:
+        for s, p in item.sequences():
+            seqs.append(s)
+            plens.append(p)
+    nc = task.n_choices
+    out = np.empty(len(seqs), np.float32)
+    step = max(batch_items, 1) * nc  # keep an item's choices in one batch
+    for i in range(0, len(seqs), step):
+        out[i:i + step] = engine.score_continuations(
+            seqs[i:i + step], plens[i:i + step])
+    return out.reshape(len(task.items), nc)
+
+
+def gold_labels_and_margins(params, cfg, task: MCTask,
+                            batch_items: int = 16):
+    """(labels, margins) under the float reference model.
+
+    ``labels[i]`` is the reference argmax choice; ``margins[i]`` is the
+    log-prob gap between the reference's best and second-best choice — the
+    difficulty scale quantization noise competes against."""
+    scores = score_task(float_engine(params, cfg), task, batch_items)
+    order = np.sort(scores, axis=1)
+    return scores.argmax(axis=1), order[:, -1] - order[:, -2]
+
+
+def hard_subset(task: MCTask, margins: np.ndarray, frac: float = 0.5) -> MCTask:
+    """The ``frac`` of items with the smallest float margins (ties broken
+    by item index — deterministic)."""
+    n_keep = max(int(round(len(task.items) * frac)), 1)
+    idx = np.argsort(margins, kind="stable")[:n_keep]
+    return task.subset(sorted(int(i) for i in idx))
+
+
+def decided_subset(task: MCTask, gold: np.ndarray, margins: np.ndarray,
+                   min_margin: float):
+    """(task', gold') restricted to items the reference model actually
+    decides: float margin >= ``min_margin``.
+
+    Items whose two choices the float model scores within less than the
+    quantization noise floor are coin flips — every quantized config
+    (however precise) flips a random subset of them, which only adds
+    measurement noise to the accuracy axis.  Dropping them makes the
+    accuracy comparison between near-lossless configs exact (they all
+    preserve every decided item) while coarse configs still measurably
+    fail (a 4/4 fixed path flips items with margins well above 1 nat).
+    ``min_margin`` should scale with the continuation length (winogrande's
+    multi-token sums accumulate noise ~sqrt(len) faster than boolq's
+    single-token scores)."""
+    keep = [i for i in range(len(task.items)) if margins[i] >= min_margin]
+    if not keep:
+        raise ValueError(f"no items with margin >= {min_margin}")
+    return task.subset(keep), np.asarray(gold)[keep]
+
+
+def evaluate(engine: Engine, task: MCTask, gold: np.ndarray,
+             batch_items: int = 16) -> float:
+    """Fraction of items where the engine agrees with the gold choice."""
+    scores = score_task(engine, task, batch_items)
+    return float(np.mean(scores.argmax(axis=1) == np.asarray(gold)))
+
+
+# per-task decided-item margin floors for the standard suite: boolq scores
+# one token, winogrande sums ~5 — its noise scale is ~sqrt(len) larger
+STANDARD_MARGIN_FLOORS = (1.0, 2.0)
+
+
+def decided_tasks(params, cfg, n_items: int,
+                  margin_floors=STANDARD_MARGIN_FLOORS,
+                  batch_items: int = 16):
+    """The standard two-task decided-item eval suite: (tasks, golds).
+
+    One protocol shared by the autotuner benchmark, the launcher and the
+    Pareto sweep — generate ``n_items`` of boolq/winogrande over the
+    model's vocab, take gold labels + margins from the float reference,
+    and keep the decided items per :func:`decided_subset`."""
+    from .tasks import boolq_synthetic, winogrande_synthetic
+
+    tasks, golds = [], []
+    for t, lo in zip((boolq_synthetic(cfg.vocab_size, n_items),
+                      winogrande_synthetic(cfg.vocab_size, n_items)),
+                     margin_floors):
+        g, m = gold_labels_and_margins(params, cfg, t, batch_items)
+        tt, gg = decided_subset(t, g, m, lo)
+        tasks.append(tt)
+        golds.append(gg)
+    return tasks, golds

@@ -42,19 +42,45 @@ class Quant:
     """Threaded quantization context: a PRESETS key / config (or None) plus
     the quantized-linear method that executes it (DESIGN.md §2).
 
+    ``preset`` may also be the string ``"policy"`` — **per-layer mode**
+    (DESIGN.md §9): no single global config is active; every packed weight
+    executes under the :class:`QuantizedMatmulConfig` embedded in its own
+    container (``pw.cfg``), so one model serves mixed presets chosen by a
+    :class:`~repro.policy.policy.DSBPPolicy`.  Raw (unpacked) weights fall
+    back to the float einsum in that mode — a policy quantizes exactly the
+    projections it packed.
+
     ``method`` is a name from the ``repro.core.packed`` registry
-    ('dense_bf16', 'dsbp_ref', 'dsbp_kernel'); None auto-selects
-    'dsbp_ref' when a config is set, 'dense_bf16' otherwise.
+    ('dense_bf16', 'dsbp_ref', 'dsbp_kernel', 'dsbp_fused'); None
+    auto-selects 'dsbp_ref' when a config (or policy mode) is set,
+    'dense_bf16' otherwise.
     """
 
     def __init__(self, preset: str | None, method: str | None = None):
-        self.cfg = PRESETS[preset] if isinstance(preset, str) else preset
+        self.per_layer = preset == "policy"
+        if self.per_layer:
+            self.cfg = None
+        elif isinstance(preset, str):
+            if preset not in PRESETS:
+                raise ValueError(
+                    f"unknown quant preset {preset!r}; valid: "
+                    f"{sorted(PRESETS)} or 'policy' (per-layer packed configs)")
+            self.cfg = PRESETS[preset]
+        else:
+            self.cfg = preset
         if method is None:
-            method = "dsbp_ref" if self.cfg is not None else "dense_bf16"
+            method = "dsbp_ref" if bool(self) else "dense_bf16"
         self.method = get_quant_method(method)
 
     def __bool__(self):
-        return self.cfg is not None
+        return self.cfg is not None or self.per_layer
+
+    def cfg_for(self, w):
+        """The config one projection executes under: the global preset, or
+        (policy mode) the config its packed container was built with."""
+        if self.per_layer:
+            return w.cfg if isinstance(w, PackedDSBPWeight) else None
+        return self.cfg
 
 
 def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
@@ -64,15 +90,16 @@ def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
     int8 aligned mantissas, ~1.06 B/elem stored/sharded/gathered instead of
     2 bf16 / 4 f32 — the serving memory+collective lever).  Dispatch:
 
-    * quant context active -> its registry method runs the GEMM; packed
-      weights take the true DSBP integer path (on-the-fly input
-      quantization against the stored mantissas, no re-quantization), raw
-      weights the QAT STE path.
+    * quant context active -> its registry method runs the GEMM under
+      ``quant.cfg_for(w)`` (the global preset, or each container's own
+      config in policy mode); packed weights take the true DSBP integer
+      path (on-the-fly input quantization against the stored mantissas, no
+      re-quantization), raw weights the QAT STE path.
     * no quant context -> packed weights dequantize (weight-only
       quantization); raw weights are the plain einsum baseline.
     """
-    if quant is not None and quant.cfg is not None:
-        return quant.method.apply(w, x, quant.cfg)
+    if quant is not None and quant:
+        return quant.method.apply(w, x, quant.cfg_for(w))
     if isinstance(w, PackedDSBPWeight):
         return get_quant_method("dsbp_ref").apply(w, x, None)
     return jnp.einsum("...k,kn->...n", x, w)

@@ -115,12 +115,18 @@ def _unit_seq(unit_params, x, cfg, quant, positions, with_cache: bool,
     return x, auxs
 
 
-def forward(params, batch: dict, cfg: ArchConfig, collect_cache: bool = False):
+def forward(params, batch: dict, cfg: ArchConfig, collect_cache: bool = False,
+            no_drop: bool = False):
+    """Sequence-mode logits.  ``no_drop=True`` disables MoE capacity
+    dropping (as prefill does), making the outputs independent of batch
+    composition — required for batch-invariant likelihood scoring
+    (repro.eval.harness)."""
     quant = Quant(cfg.quant, cfg.quant_method)
     x, positions = embed_tokens(params, batch, cfg)
 
     def unit_body(xc, stacked):
-        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, collect_cache)
+        xx, auxs = _unit_seq(stacked, xc, cfg, quant, positions, collect_cache,
+                             no_drop=no_drop)
         return xx, auxs
 
     body = jax.checkpoint(unit_body) if cfg.remat else unit_body
@@ -128,7 +134,8 @@ def forward(params, batch: dict, cfg: ArchConfig, collect_cache: bool = False):
                                 unroll=cfg.scan_unroll)
     tail_auxs = []
     for p_layer, kind in zip(params["tail"], cfg.tail):
-        x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions)
+        x, aux = blocks.layer_seq(p_layer, x, cfg, kind, quant, positions,
+                                  no_drop=no_drop)
         tail_auxs.append(aux)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _head(params, x, cfg)

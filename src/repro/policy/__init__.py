@@ -1,0 +1,38 @@
+"""DSBP policy subsystem (DESIGN.md §9).
+
+Turns the paper's Fig. 7 exploration loop into a first-class, checkpointable,
+servable artifact:
+
+  calibrate.py  — run calibration batches through the model with a recording
+                  intercept on the quantized-linear-method registry and
+                  collect per-projection DSBP statistics (shift / predicted-
+                  ratio histograms, nonzero fractions, FLOP shares)
+  cost.py       — map a candidate per-layer (k, B_fix, mode) assignment to
+                  modeled throughput / power / TOPS-per-W via core.energy,
+                  weighted by each layer's measured FLOP share
+  search.py     — accuracy-constrained greedy autotuner over per-layer
+                  configs, scored through the eval harness + serve.Engine
+  policy.py     — the DSBPPolicy artifact (layer path -> config + provenance)
+                  with save/load through checkpoint.store
+"""
+from .policy import DSBPPolicy
+from .calibrate import (
+    CalibrationReport,
+    LayerStats,
+    calibrate,
+    synthetic_calibration_batches,
+)
+from .cost import assignment_cost, candidate_ladder, predict_layer_bits
+from .search import autotune
+
+__all__ = [
+    "DSBPPolicy",
+    "CalibrationReport",
+    "LayerStats",
+    "calibrate",
+    "synthetic_calibration_batches",
+    "assignment_cost",
+    "candidate_ladder",
+    "predict_layer_bits",
+    "autotune",
+]

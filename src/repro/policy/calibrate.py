@@ -1,0 +1,300 @@
+"""Activation-statistics calibration for DSBP policies (DESIGN.md §9).
+
+Runs the model over calibration batches with a **recording intercept** on
+the quantized-linear-method registry: a wrapper :class:`QuantMethod` whose
+``apply`` observes every projection's activations before delegating to the
+float baseline method, so the model's numerics during calibration are the
+unquantized reference (the standard post-training-calibration setup — the
+statistics describe the activations the deployed model will actually see).
+
+Per projection path (``units/<pos>/attn/wq``-style keys, shared with the
+checkpoint store and :func:`repro.serve.engine.pack_weights_int8`) the
+recorder collects exactly the sufficient statistics of the DSBP predictor:
+
+  * the per-64-group **raw predicted ratio** r = Σ shift·2^-shift / Σ 2^-shift
+    (Algorithm 1 / Eq. 1 *before* k scaling and B_fix offset) as a fixed-bin
+    histogram — because every candidate (k, B_fix, mode) maps r to a bitwidth
+    by pure arithmetic, one calibration pass prices EVERY candidate;
+  * the per-element shift histogram and nonzero fraction (diagnostics,
+    DESIGN.md §9's "group shift/nz histograms");
+  * the accumulated GEMM FLOPs, so the cost model can weight each layer by
+    its true share of model compute.
+
+The weight-side statistics (offline path) are computed directly from the
+weight tensors in the same pass: a histogram of ceil(r) per weight group —
+the integer Algorithm-1 B_dyn — which prices every weight candidate exactly.
+
+The scanned pattern units share one policy entry per pattern position (their
+packed container carries ONE static config), so the recorder aggregates the
+per-unit activations under the stacked path — the calibration granularity
+equals the servable granularity by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core import dsbp
+from repro.core.dsbp import MAX_SHIFT, DSBPConfig
+from repro.core.formats import decompose, per_tensor_scale
+from repro.core.packed import (
+    PackedDSBPWeight,
+    QuantMethod,
+    get_quant_method,
+    key_entry_str,
+    tree_is_packed,
+)
+from repro.core.quantized import PRESETS, QuantizedMatmulConfig
+from repro.models import blocks
+from repro.models import model as M
+from repro.models.layers import Quant
+from repro.serve.engine import PROJ_NAMES
+
+__all__ = [
+    "LayerStats",
+    "CalibrationReport",
+    "calibrate",
+    "synthetic_calibration_batches",
+    "RATIO_BINS",
+]
+
+# ratio histogram bins over [0, MAX_SHIFT]; 256 bins -> ~0.12 binade
+# resolution, well under the predictor's ceil() quantization step of 1
+RATIO_BINS = 256
+
+
+@dataclasses.dataclass
+class LayerStats:
+    """Calibration statistics for one projection path."""
+
+    path: str
+    k: int                      # logical GEMM reduction width
+    n: int                      # logical GEMM output width
+    # --- input (on-the-fly) side ---
+    ratio_hist: np.ndarray      # (RATIO_BINS,) counts of per-group raw ratios
+    shift_hist: np.ndarray      # (MAX_SHIFT+1,) per-element shift counts (nz)
+    nz: int                     # nonzero FP8 elements observed
+    total: int                  # elements observed
+    groups: int                 # input groups observed
+    tokens: int                 # activation rows observed
+    flops: float                # accumulated 2*m*k*n over calibration
+    # --- weight (offline) side ---
+    w_bdyn_hist: np.ndarray     # (MAX_SHIFT+2,) counts of ceil(r) per group
+    w_groups: int
+    w_nz_frac: float
+
+    @property
+    def nz_frac(self) -> float:
+        return self.nz / max(self.total, 1)
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """All layers' statistics + run provenance."""
+
+    layers: dict[str, LayerStats]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(s.flops for s in self.layers.values())
+
+    def flop_share(self, path: str) -> float:
+        return self.layers[path].flops / max(self.total_flops, 1.0)
+
+
+def _bin_edges() -> np.ndarray:
+    return np.linspace(0.0, float(MAX_SHIFT), RATIO_BINS + 1)
+
+
+def bin_centers() -> np.ndarray:
+    e = _bin_edges()
+    return (e[:-1] + e[1:]) / 2.0
+
+
+def _group_ratios(x2d: jnp.ndarray, cfg: DSBPConfig):
+    """(per-group raw ratio, per-element shift, nz mask) of one 2-D tensor
+    under the probe FP8 format — the shared field-extraction front half of
+    :func:`repro.core.dsbp.dsbp_quantize`."""
+    f = cfg.format
+    if cfg.scale_granularity == "row":
+        tscale = dsbp.per_row_scale(x2d, f)
+    else:
+        tscale = per_tensor_scale(x2d, f)
+    fields = decompose(x2d * tscale, f)
+    e_unb = dsbp.group_reshape(fields["e_unb"], cfg.group_size)
+    m_int = dsbp.group_reshape(fields["m_int"], cfg.group_size)
+    shift, _, nz = dsbp.group_shifts(e_unb, m_int)
+    ratio = dsbp.predict_bdyn(shift, nz)
+    return ratio, shift, nz
+
+
+class _RecordingMethod(QuantMethod):
+    """The registry intercept: observe, then run the float baseline."""
+
+    name = "calibrate_record"
+
+    def __init__(self, recorder):
+        self.recorder = recorder
+        self.inner = get_quant_method("dense_bf16")
+
+    def apply(self, w, x, cfg):
+        self.recorder.observe(w, x)
+        return self.inner.apply(w, x, cfg)
+
+
+class _Recorder:
+    def __init__(self, input_probe: DSBPConfig):
+        self.input_probe = input_probe
+        self.id2path: dict[int, tuple[str, tuple]] = {}
+        self.stats: dict[str, dict] = {}
+
+    # -- path registration (id -> path of the CURRENT unit's leaves) --
+
+    def register(self, prefix: str, tree) -> None:
+        # reset per registration: per-unit sliced trees are freed between
+        # units, and CPython reuses ids — a stale mapping could misattribute
+        # a later (unregistered) weight to a freed leaf's path.  The shape
+        # is kept alongside and re-checked at observe time as a second
+        # guard against id collisions within one registration window.
+        self.id2path = {}
+
+        def visit(path, leaf):
+            name = key_entry_str(path[-1]) if path else ""
+            if (name in PROJ_NAMES and getattr(leaf, "ndim", 0) == 2
+                    and leaf.shape[-2] >= self.input_probe.group_size):
+                key = prefix + "/" + "/".join(key_entry_str(p) for p in path)
+                self.id2path[id(leaf)] = (key, tuple(leaf.shape))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, tree)
+
+    def _entry(self, path: str, k: int, n: int) -> dict:
+        if path not in self.stats:
+            self.stats[path] = {
+                "k": k, "n": n,
+                "ratio_hist": np.zeros(RATIO_BINS, np.int64),
+                "shift_hist": np.zeros(MAX_SHIFT + 1, np.int64),
+                "nz": 0, "total": 0, "groups": 0, "tokens": 0, "flops": 0.0,
+            }
+        return self.stats[path]
+
+    # -- the observation itself --
+
+    def observe(self, w, x) -> None:
+        entry = self.id2path.get(id(w))
+        if entry is None or isinstance(w, PackedDSBPWeight):
+            return
+        path, shape = entry
+        if tuple(getattr(w, "shape", ())) != shape:
+            return  # id reuse by a different (unregistered) array
+        k, n = w.shape[-2:]
+        xm = jnp.reshape(x, (-1, x.shape[-1])).astype(jnp.float32)
+        ratio, shift, nz = _group_ratios(xm, self.input_probe)
+        ratio, shift, nz = (np.asarray(a) for a in (ratio, shift, nz))
+        ent = self._entry(path, k, n)
+        ent["ratio_hist"] += np.histogram(ratio, bins=_bin_edges())[0]
+        ent["shift_hist"] += np.bincount(
+            shift[nz].ravel(), minlength=MAX_SHIFT + 1)[: MAX_SHIFT + 1]
+        ent["nz"] += int(nz.sum())
+        ent["total"] += int(nz.size)
+        ent["groups"] += int(ratio.size)
+        ent["tokens"] += int(xm.shape[0])
+        ent["flops"] += 2.0 * xm.shape[0] * k * n
+
+
+def _weight_stats(leaf, cfg: DSBPConfig):
+    """Offline weight-side statistics: histogram of the integer Algorithm-1
+    B_dyn = ceil(r) per group, over all leading axes (stacked units /
+    experts fold into the same policy entry)."""
+    k, n = leaf.shape[-2:]
+    wf = jnp.reshape(jnp.asarray(leaf, jnp.float32), (-1, k, n))
+    hist = np.zeros(MAX_SHIFT + 2, np.int64)
+    nz_sum = 0
+    total = 0
+    for i in range(wf.shape[0]):
+        ratio, _, nz = _group_ratios(wf[i].T, cfg)
+        bdyn = np.ceil(np.asarray(ratio)).astype(np.int64)
+        hist += np.bincount(bdyn.ravel(), minlength=MAX_SHIFT + 2)[: MAX_SHIFT + 2]
+        nz_sum += int(np.asarray(nz).sum())
+        total += int(np.asarray(nz).size)
+    return hist, int(hist.sum()), nz_sum / max(total, 1)
+
+
+def synthetic_calibration_batches(cfg: ArchConfig, n_batches: int = 2,
+                                  batch: int = 2, seq: int = 32,
+                                  seed: int = 0) -> list[np.ndarray]:
+    """Deterministic token batches over the model's vocab (fixed seed)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (batch, seq))
+            for _ in range(n_batches)]
+
+
+def calibrate(params, cfg: ArchConfig, batches,
+              probe: QuantizedMatmulConfig | str = "precise") -> CalibrationReport:
+    """Collect per-projection DSBP statistics over ``batches``.
+
+    ``params`` must be the RAW (unpacked) tree — calibration prices every
+    candidate config, so it reads the float weights.  ``probe`` fixes the
+    FP8 storage formats / scale granularities under which the group fields
+    are extracted (all PRESETS share e4m3-in / e2m5-row-scaled-weights, so
+    one probe prices them all).  The stack is unrolled unit-by-unit in
+    Python (instead of ``lax.scan``) so the intercept observes concrete
+    per-unit activations; the per-unit statistics aggregate under the
+    stacked ``units/<pos>/...`` path — the same granularity the packed
+    container can serve.
+    """
+    if tree_is_packed(params):
+        raise ValueError("calibrate() needs the raw float tree, not packed "
+                         "weights — pack AFTER choosing a policy")
+    if cfg.frontend != "none":
+        raise NotImplementedError(
+            f"calibration drives plain token batches; frontend={cfg.frontend!r}")
+    probe = PRESETS[probe] if isinstance(probe, str) else probe
+    recorder = _Recorder(probe.input_cfg)
+    quant = Quant(probe, method="dense_bf16")
+    quant.method = _RecordingMethod(recorder)
+
+    n_tokens = 0
+    for b in batches:
+        batch_d = {"tokens": jnp.asarray(b)}
+        x, positions = M.embed_tokens(params, batch_d, cfg)
+        n_tokens += int(np.prod(np.shape(b)))
+        for u in range(cfg.n_units):
+            for li, kind in enumerate(cfg.pattern):
+                p_layer = jax.tree.map(lambda a: a[u], params["units"][li])
+                recorder.register(f"units/{li}", p_layer)
+                x, _ = blocks.layer_seq(p_layer, x, cfg, kind, quant,
+                                        positions, no_drop=True)
+        for i, kind in enumerate(cfg.tail):
+            recorder.register(f"tail/{i}", params["tail"][i])
+            x, _ = blocks.layer_seq(params["tail"][i], x, cfg, kind, quant,
+                                    positions, no_drop=True)
+
+    # offline weight side, off the stacked/main tree under the same keys
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    by_path = {"/".join(key_entry_str(p) for p in path): leaf
+               for path, leaf in flat}
+    layers: dict[str, LayerStats] = {}
+    for path, ent in recorder.stats.items():
+        leaf = by_path[path]
+        w_hist, w_groups, w_nz = _weight_stats(leaf, probe.weight_cfg)
+        layers[path] = LayerStats(
+            path=path, k=ent["k"], n=ent["n"],
+            ratio_hist=ent["ratio_hist"], shift_hist=ent["shift_hist"],
+            nz=ent["nz"], total=ent["total"], groups=ent["groups"],
+            tokens=ent["tokens"], flops=ent["flops"],
+            w_bdyn_hist=w_hist, w_groups=w_groups, w_nz_frac=w_nz,
+        )
+    meta = {
+        "arch": cfg.name,
+        "n_batches": len(batches) if hasattr(batches, "__len__") else None,
+        "n_tokens": n_tokens,
+        "probe_fmt": (probe.input_cfg.fmt, probe.weight_cfg.fmt),
+        "n_layers": len(layers),
+    }
+    return CalibrationReport(layers=layers, meta=meta)

@@ -1,0 +1,164 @@
+"""Candidate-assignment cost model (DESIGN.md §9).
+
+Maps a per-layer ``(k, B_fix, mode)`` assignment to modeled macro
+throughput / power / TOPS-per-W using ``core.energy``, weighted by each
+layer's measured FLOP share from the calibration report.
+
+The key property the calibration statistics buy: the DSBP predictor's
+per-group bitwidth is a pure function of the **raw ratio** r (inputs:
+``clip(ceil(k·r + B_fix), 1, 11)``; weights: ``round_to_valid(k·⌈r⌉ +
+B_fix)``), so the recorded ratio histograms price EVERY candidate config
+without re-running the model — the Fig. 7 design-space walk becomes
+arithmetic over histograms.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dsbp, energy as E
+from repro.core.dsbp import DSBPConfig
+from repro.core.quantized import PRESETS, QuantizedMatmulConfig
+
+from .calibrate import CalibrationReport, LayerStats, bin_centers
+
+__all__ = [
+    "predict_layer_bits",
+    "assignment_cost",
+    "candidate_ladder",
+    "input_bitwidth_ladder",
+    "resolve_cfg",
+]
+
+
+def resolve_cfg(cfg: QuantizedMatmulConfig | str) -> QuantizedMatmulConfig:
+    if isinstance(cfg, str):
+        if cfg not in PRESETS:
+            raise ValueError(f"unknown preset {cfg!r}; valid: {sorted(PRESETS)}")
+        return PRESETS[cfg]
+    return cfg
+
+
+def _np_round_to_valid_weight(b_raw: np.ndarray) -> np.ndarray:
+    # the ONE implementation of the macro's valid-width rounding lives in
+    # core.dsbp; evaluate it on numpy and bring the result back
+    return np.asarray(dsbp.round_to_valid_weight(np.asarray(b_raw)))
+
+
+def _np_round_to_valid_input(b_raw: np.ndarray) -> np.ndarray:
+    return np.asarray(dsbp.round_to_valid_input(np.asarray(b_raw)))
+
+
+def _avg_input_bits(stats: LayerStats, icfg: DSBPConfig) -> float:
+    """Histogram-predicted average aligned input width incl. sign bit."""
+    if icfg.mode == "fixed":
+        return float(_np_round_to_valid_input(np.asarray([icfg.b_fix]))[0]) + 1.0
+    r = bin_centers()
+    if icfg.predictor == "algorithm1":
+        raw = icfg.k * np.ceil(r) + icfg.b_fix
+    else:  # 'mpu', Eq. (1)
+        raw = icfg.k * r + icfg.b_fix
+    b = _np_round_to_valid_input(raw)
+    h = stats.ratio_hist.astype(np.float64)
+    return float((b * h).sum() / max(h.sum(), 1.0)) + 1.0
+
+
+def _avg_weight_bits(stats: LayerStats, wcfg: DSBPConfig) -> float:
+    """Exact average aligned weight width incl. sign bit, off the integer
+    B_dyn = ceil(r) histogram (the weight predictor is integer-exact)."""
+    if wcfg.mode == "fixed":
+        return float(_np_round_to_valid_weight(np.asarray([wcfg.b_fix]))[0]) + 1.0
+    bdyn = np.arange(stats.w_bdyn_hist.size, dtype=np.float64)
+    b = _np_round_to_valid_weight(wcfg.k * bdyn + wcfg.b_fix)
+    h = stats.w_bdyn_hist.astype(np.float64)
+    return float((b * h).sum() / max(h.sum(), 1.0)) + 1.0
+
+
+def predict_layer_bits(stats: LayerStats,
+                       cfg: QuantizedMatmulConfig | str) -> tuple[float, float]:
+    """(avg input bits, avg weight bits) — Table I's "Avg. I/W" for one
+    layer under one candidate, predicted from calibration statistics."""
+    cfg = resolve_cfg(cfg)
+    return _avg_input_bits(stats, cfg.input_cfg), _avg_weight_bits(stats, cfg.weight_cfg)
+
+
+def assignment_cost(report: CalibrationReport, assignment: dict) -> dict:
+    """Modeled cost of a per-layer assignment {path: config-or-preset}.
+
+    Every calibrated layer runs at its assigned widths on the macro model:
+    time_l = flops_l / Tput(I_l, W_l), energy_l = time_l * P(mode_l).  The
+    aggregate TOPS/W is total FLOPs / total energy — for a uniform
+    assignment this equals ``energy.efficiency_tops_per_w`` at the
+    flop-weighted widths of that config (tests/test_policy.py).
+    """
+    per_layer = {}
+    t_total = 0.0
+    e_total = 0.0
+    f_total = 0.0
+    wi_sum = 0.0
+    ww_sum = 0.0
+    for path, stats in report.layers.items():
+        cfg = resolve_cfg(assignment[path])
+        avg_i, avg_w = predict_layer_bits(stats, cfg)
+        tput = E.throughput_ops(avg_i, avg_w)
+        p = E.power_w(avg_i, avg_w, cfg.mode)
+        t = stats.flops / tput
+        per_layer[path] = {
+            "avg_i": avg_i, "avg_w": avg_w, "mode": cfg.mode,
+            "time_s": t, "energy_j": t * p,
+            "eff_tops_w": E.efficiency_tops_per_w(avg_i, avg_w, cfg.mode),
+            "flop_share": report.flop_share(path),
+        }
+        t_total += t
+        e_total += t * p
+        f_total += stats.flops
+        wi_sum += avg_i * stats.flops
+        ww_sum += avg_w * stats.flops
+    return {
+        "time_s": t_total,
+        "energy_j": e_total,
+        "eff_tops_w": f_total / max(e_total, 1e-30) / 1e12,
+        "avg_i": wi_sum / max(f_total, 1.0),
+        "avg_w": ww_sum / max(f_total, 1.0),
+        "per_layer": per_layer,
+    }
+
+
+def _dsbp_cfg(k: float, b_in: int, b_w: int) -> QuantizedMatmulConfig:
+    return QuantizedMatmulConfig(
+        input_cfg=DSBPConfig(fmt="e4m3", side="input", k=k, b_fix=b_in),
+        weight_cfg=DSBPConfig(fmt="e2m5", side="weight", k=k, b_fix=b_w,
+                              scale_granularity="row"),
+    )
+
+
+def candidate_ladder() -> list[tuple[str, QuantizedMatmulConfig]]:
+    """The autotuner's per-layer config ladder, most precise first.
+
+    Table I's published Precise/Efficient points plus two interpolants /
+    one aggressive extrapolant, all on the paper's (k, B_fix) axes."""
+    return [
+        ("precise", PRESETS["precise"]),            # k=1, 6/5
+        ("balanced", _dsbp_cfg(1.5, 5, 4)),
+        ("efficient", PRESETS["efficient"]),        # k=2, 4/4
+        ("aggressive", _dsbp_cfg(2.0, 3, 3)),
+    ]
+
+
+def input_bitwidth_ladder(b_fixes=(6, 4, 3, 2), k: float = 1.0,
+                          b_w: int = 7) -> list[tuple[str, QuantizedMatmulConfig]]:
+    """Input-side demotion ladder: weights pinned near-lossless (``b_w=7``
+    keeps the full E2M5 mantissa after alignment), inputs walk B_fix down.
+
+    This is the ladder that matches the paper's asymmetry — the weight path
+    is offline and cheap to keep precise; the on-the-fly input path is
+    where the MPU's per-group prediction buys throughput (Tput ∝ 1/(I·W),
+    so halving I alone nearly doubles modeled throughput)."""
+    return [(f"i{b}_w{b_w}", _dsbp_cfg_iw(k, b, b_w)) for b in b_fixes]
+
+
+def _dsbp_cfg_iw(k: float, b_in: int, b_w: int) -> QuantizedMatmulConfig:
+    return QuantizedMatmulConfig(
+        input_cfg=DSBPConfig(fmt="e4m3", side="input", k=k, b_fix=b_in),
+        weight_cfg=DSBPConfig(fmt="e2m5", side="weight", k=1.0, b_fix=b_w,
+                              scale_granularity="row"),
+    )

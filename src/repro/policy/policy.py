@@ -1,0 +1,146 @@
+"""The DSBP policy artifact: per-layer GEMM configs + provenance.
+
+A :class:`DSBPPolicy` assigns one
+:class:`~repro.core.quantized.QuantizedMatmulConfig` to each quantizable
+projection of a model, keyed by the projection's pytree path (the same
+``units/<pos>/attn/wq`` strings the checkpoint store and the sharding rules
+use, via ``core.packed.key_entry_str``).  Scanned pattern units share one
+stacked weight container per pattern position, so a policy entry at
+``units/<pos>/...`` covers every unit at that position — exactly the
+granularity the packed representation can express (the config is static aux
+data of the container).
+
+The artifact is checkpointable through ``checkpoint.store``: it serializes
+to a single JSON blob carried as a uint8 array leaf, so policies get the
+store's atomic-publish / latest-step semantics and live next to the packed
+weights they were tuned for.  Provenance (calibration summary, autotuner
+trace, eval accuracies) rides along in ``meta``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.dsbp import DSBPConfig
+from repro.core.quantized import PRESETS, QuantizedMatmulConfig
+
+__all__ = ["DSBPPolicy", "POLICY_LEAF"]
+
+# the single array leaf a serialized policy checkpoint carries
+POLICY_LEAF = "dsbp_policy_json"
+
+
+def _cfg_to_dict(cfg: QuantizedMatmulConfig) -> dict:
+    return {
+        "input_cfg": dataclasses.asdict(cfg.input_cfg),
+        "weight_cfg": dataclasses.asdict(cfg.weight_cfg),
+    }
+
+
+def _cfg_from_dict(d: dict) -> QuantizedMatmulConfig:
+    return QuantizedMatmulConfig(
+        input_cfg=DSBPConfig(**d["input_cfg"]),
+        weight_cfg=DSBPConfig(**d["weight_cfg"]),
+    )
+
+
+@dataclasses.dataclass
+class DSBPPolicy:
+    """Per-layer-path quantization assignment + provenance metadata.
+
+    ``layers`` maps projection path keys to full configs; ``default`` (a
+    config or a PRESETS name) covers quantizable projections the mapping
+    does not name; ``meta`` is free-form JSON-able provenance.
+    """
+
+    layers: dict[str, QuantizedMatmulConfig] = dataclasses.field(default_factory=dict)
+    default: QuantizedMatmulConfig | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if isinstance(self.default, str):
+            self.default = PRESETS[self.default]
+        self.layers = {
+            k: (PRESETS[v] if isinstance(v, str) else v)
+            for k, v in self.layers.items()
+        }
+
+    # ---- lookup ----
+
+    def config_for(self, path_key: str) -> QuantizedMatmulConfig | None:
+        """Config for one projection path; ``default`` when unnamed."""
+        return self.layers.get(path_key, self.default)
+
+    def replace_layer(self, path_key: str, cfg: QuantizedMatmulConfig) -> "DSBPPolicy":
+        layers = dict(self.layers)
+        layers[path_key] = cfg
+        return DSBPPolicy(layers=layers, default=self.default, meta=dict(self.meta))
+
+    @classmethod
+    def uniform(cls, cfg: QuantizedMatmulConfig | str,
+                layer_keys=(), meta: dict | None = None) -> "DSBPPolicy":
+        """One config everywhere — the degenerate policy equal to a global
+        preset (token parity asserted in tests/test_policy.py)."""
+        cfg = PRESETS[cfg] if isinstance(cfg, str) else cfg
+        return cls(layers={k: cfg for k in layer_keys}, default=cfg,
+                   meta=dict(meta or {}))
+
+    # ---- serialization ----
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": 1,
+            "layers": {k: _cfg_to_dict(v) for k, v in sorted(self.layers.items())},
+            "default": None if self.default is None else _cfg_to_dict(self.default),
+            "meta": self.meta,
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "DSBPPolicy":
+        d = json.loads(blob)
+        return cls(
+            layers={k: _cfg_from_dict(v) for k, v in d["layers"].items()},
+            default=None if d["default"] is None else _cfg_from_dict(d["default"]),
+            meta=d.get("meta", {}),
+        )
+
+    def to_tree(self) -> dict:
+        """The policy as a one-leaf pytree for ``checkpoint.store.save``."""
+        blob = np.frombuffer(self.to_json().encode("utf-8"), np.uint8).copy()
+        return {POLICY_LEAF: blob}
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "DSBPPolicy":
+        return cls.from_json(bytes(np.asarray(tree[POLICY_LEAF])).decode("utf-8"))
+
+    def save(self, ckpt_dir: str, step: int = 0) -> str:
+        """Atomic save under ``<ckpt_dir>/step_<N>`` via checkpoint.store."""
+        from repro.checkpoint import store
+
+        return store.save(ckpt_dir, step, self.to_tree())
+
+    @classmethod
+    def load(cls, ckpt_dir: str, step: int | None = None) -> "DSBPPolicy":
+        from repro.checkpoint import store
+
+        flat, _ = store.restore_flat(ckpt_dir, step=step)
+        return cls.from_tree(flat)
+
+    # ---- introspection ----
+
+    def summary(self) -> str:
+        """One line per layer: path, mode, (k, b_in/b_w)."""
+        lines = []
+        for key in sorted(self.layers):
+            c = self.layers[key]
+            ic, wc = c.input_cfg, c.weight_cfg
+            lines.append(
+                f"{key:40s} {c.mode:8s} k={ic.k:g} "
+                f"b_fix={ic.b_fix}/{wc.b_fix} fmt={ic.fmt}/{wc.fmt}"
+            )
+        return "\n".join(lines)
+
+    def __len__(self) -> int:
+        return len(self.layers)

@@ -1,0 +1,163 @@
+"""Accuracy-constrained greedy policy autotuner (DESIGN.md §9).
+
+The paper's Fig. 7 loop explores a single (k, B_fix) point for the whole
+model; production FP8 deployments instead assign precision **per layer**
+from calibration data.  :func:`autotune` does that walk:
+
+  1. start every calibrated projection at the most precise ladder rung and
+     measure baseline accuracy on the eval tasks through a real
+     policy-packed :class:`~repro.serve.engine.Engine`;
+  2. order layers by modeled time share (FLOPs / modeled throughput at the
+     precise widths) — most bit-hungry first, where demotion buys the most;
+  3. per layer, try ladder rungs from cheapest upward and keep the first
+     whose end-to-end accuracy stays within ``max_drop`` of baseline on
+     EVERY task; repack only the touched container between trials (the
+     pack-once representation makes each trial an O(one-layer) update);
+  4. return a :class:`~repro.policy.policy.DSBPPolicy` carrying the chosen
+     per-layer configs plus full provenance (trace, accuracies, modeled
+     cost) in ``meta``.
+
+Accuracy is measured end to end — packed weights, the serving quant method,
+the real engine scoring path — not proxied by SQNR, so the returned policy's
+eval numbers are exactly what serving reproduces.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.packed import PackedDSBPWeight, key_entry_str
+from repro.core.quantized import pack_weights
+from repro.eval import harness
+from repro.serve.engine import Engine, ServeConfig, pack_weights_int8
+
+from .calibrate import CalibrationReport
+from .cost import assignment_cost, candidate_ladder, resolve_cfg
+from .policy import DSBPPolicy
+
+__all__ = ["autotune"]
+
+
+def _replace_container(tree, path_key: str, new_pw: PackedDSBPWeight):
+    """Swap ONE packed container leaf (containers are pytree nodes, so the
+    walk must stop at them, not descend into their fields)."""
+    is_pw = lambda x: isinstance(x, PackedDSBPWeight)
+
+    def sub(path, leaf):
+        key = "/".join(key_entry_str(p) for p in path)
+        return new_pw if key == path_key else leaf
+
+    return jax.tree_util.tree_map_with_path(sub, tree, is_leaf=is_pw)
+
+
+def _raw_leaves_by_path(params) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return {"/".join(key_entry_str(p) for p in path): leaf
+            for path, leaf in flat}
+
+
+def autotune(params, cfg, report: CalibrationReport, tasks,
+             *, ladder=None, max_drop: float = 0.0, max_len: int = 256,
+             min_accuracy=None, quant_method: str | None = None,
+             batch_items: int = 16, log=None) -> DSBPPolicy:
+    """Greedy accuracy-constrained per-layer search; returns the policy.
+
+    ``params`` is the RAW float tree (gold labels need it); ``report`` a
+    :func:`~repro.policy.calibrate.calibrate` result; ``tasks`` a list of
+    :class:`~repro.eval.tasks.MCTask`.  ``max_drop`` is the allowed
+    accuracy drop vs the most-precise-rung baseline (0.0 = equal-or-better
+    on every task); ``min_accuracy`` (per-task floors, optional) tightens
+    that further — e.g. pass a fixed-bitwidth baseline's measured
+    accuracies to certify the result against it.  ``quant_method`` pins the
+    serving method for the trial engines (None = the serving default,
+    dsbp_fused).
+    """
+    log = log or (lambda *_: None)
+    ladder = list(ladder or candidate_ladder())
+    names = [n for n, _ in ladder]
+    rungs = [resolve_cfg(c) for _, c in ladder]
+    paths = sorted(report.layers)
+    if not paths:
+        raise ValueError("calibration report names no quantizable layers")
+    raw = _raw_leaves_by_path(params)
+
+    def engine_for(tree):
+        return Engine(tree, cfg.replace(quant="policy"),
+                      ServeConfig(max_len=max_len, pack=False,
+                                  quant_method=quant_method))
+
+    def accuracies(tree):
+        eng = engine_for(tree)
+        return [harness.evaluate(eng, t, g, batch_items)
+                for t, g in zip(tasks, golds)]
+
+    golds = []
+    for t in tasks:
+        gold, _ = harness.gold_labels_and_margins(params, cfg, t, batch_items)
+        golds.append(gold)
+
+    # rung 0 everywhere: the precision ceiling and the accuracy constraint.
+    # Projections outside the calibration report (e.g. MoE expert weights,
+    # which are weight-only consumers with no dense() input path) pack at
+    # the ceiling via `default`, so a policy-vs-preset comparison quantizes
+    # the same set of leaves.
+    assignment = {p: rungs[0] for p in paths}
+    packed, _ = pack_weights_int8(
+        params, DSBPPolicy(layers=dict(assignment), default=rungs[0]))
+    acc0 = accuracies(packed)
+    floor = [a - max_drop for a in acc0]
+    if min_accuracy is not None:
+        floor = [max(f, m) for f, m in zip(floor, min_accuracy)]
+        if any(a < f for a, f in zip(acc0, floor)):
+            raise ValueError(
+                f"the {names[0]}-everywhere baseline scores {acc0}, below "
+                f"the requested min_accuracy floor {list(min_accuracy)} — "
+                f"no demotion can certify against it; raise the ceiling "
+                f"rung or lower the floor")
+    log(f"baseline ({names[0]} everywhere): acc={acc0} floor={floor}")
+
+    # most bit-hungry first: modeled time share at the precise rung
+    base_cost = assignment_cost(report, assignment)
+    order = sorted(paths, key=lambda p: -base_cost["per_layer"][p]["time_s"])
+
+    trace = []
+    acc_now = acc0
+    for path in order:
+        chosen = 0
+        trials = []
+        # cheapest rung first; first one inside the constraint wins
+        for ri in range(len(rungs) - 1, 0, -1):
+            trial_pw = pack_weights(raw[path], rungs[ri])
+            trial_tree = _replace_container(packed, path, trial_pw)
+            acc = accuracies(trial_tree)
+            ok = all(a >= f for a, f in zip(acc, floor))
+            trials.append({"rung": names[ri],
+                           "acc": [round(a, 4) for a in acc], "accepted": ok})
+            log(f"{path}: {names[ri]} acc={acc} {'OK' if ok else 'reject'}")
+            if ok:
+                chosen = ri
+                packed = trial_tree
+                assignment[path] = rungs[ri]
+                acc_now = acc
+                break
+        trace.append({"layer": path, "chosen": names[chosen],
+                      "trials": trials})
+
+    modeled = assignment_cost(report, assignment)
+    policy = DSBPPolicy(
+        layers=dict(assignment),
+        default=rungs[0],  # uncalibrated projections stay at the ceiling
+        meta={
+            "arch": cfg.name,
+            "ladder": names,
+            "max_drop": max_drop,
+            "baseline_acc": [round(a, 4) for a in acc0],
+            "final_acc": [round(a, 4) for a in acc_now],
+            "tasks": [t.name for t in tasks],
+            "rungs": {p: names[rungs.index(assignment[p])] for p in paths},
+            "modeled": {k: modeled[k] for k in
+                        ("time_s", "energy_j", "eff_tops_w", "avg_i", "avg_w")},
+            "calibration": report.meta,
+            "trace": trace,
+        },
+    )
+    return policy

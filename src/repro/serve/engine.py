@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.packed import packed_nbytes, tree_is_packed
+from repro.core.packed import key_entry_str, packed_nbytes, tree_is_packed
 from repro.core.quantized import PRESETS, pack_weights
 from repro.models import model as M
 
@@ -56,9 +56,12 @@ class ServeConfig:
     seed: int = 0
     # pack projections once at Engine.__init__ when a preset is configured
     # (cfg.quant, overridable via pack_preset); False serves raw weights,
-    # re-quantizing them on every matmul call.
+    # re-quantizing them on every matmul call.  pack_preset accepts a
+    # PRESETS name, a full QuantizedMatmulConfig, or a
+    # repro.policy.DSBPPolicy (per-layer configs — mixed presets in one
+    # model; serving then runs in the 'policy' quant mode, DESIGN.md §9).
     pack: bool = True
-    pack_preset: str | None = None
+    pack_preset: object | None = None
     # quantized-linear method for serving.  None defaults to 'dsbp_fused'
     # (the one-pass quantize-align-MAC kernel, DESIGN.md §8) when the arch
     # config quantizes but names no method; set 'dsbp_kernel' to fall back
@@ -77,29 +80,55 @@ class Request:
     max_new_tokens: int = 32
 
 
-def pack_weights_int8(params, preset: str = "precise"):
+def pack_weights_int8(params, preset="precise"):
     """Offline DSBP pass over every projection matrix, run ONCE: returns a
     pytree where 2-D+ projection leaves become
     :class:`~repro.core.packed.PackedDSBPWeight` containers (int8 aligned
     mantissas, f32 group scales, per-channel tscale, logical (K, N) shape),
-    plus bit statistics for the energy model."""
-    cfg = PRESETS[preset] if isinstance(preset, str) else preset
-    g = cfg.weight_cfg.group_size
-    stats = {"bits_sum": 0.0, "groups": 0}
+    plus bit statistics for the energy model.
+
+    ``preset`` is a :data:`~repro.core.quantized.PRESETS` name, a full
+    :class:`~repro.core.quantized.QuantizedMatmulConfig` (one config for
+    every projection), or a :class:`~repro.policy.policy.DSBPPolicy` —
+    per-layer configs keyed by projection path (``units/0/attn/wq``-style,
+    DESIGN.md §9), so one model carries mixed presets; projections the
+    policy does not cover stay raw."""
+    policy = preset if hasattr(preset, "config_for") else None
+    cfg0 = None
+    if policy is None:
+        if isinstance(preset, str):
+            if preset not in PRESETS:
+                raise ValueError(
+                    f"unknown quant preset {preset!r}: valid presets are "
+                    f"{sorted(PRESETS)}; pass a repro.policy.DSBPPolicy for "
+                    f"per-layer configs (serving then runs with "
+                    f"quant='policy')")
+            cfg0 = PRESETS[preset]
+        else:
+            cfg0 = preset
+    stats = {"bits_sum": 0.0, "groups": 0, "layers": 0}
 
     def pack(path, leaf):
         name = str(getattr(path[-1], "key", ""))
-        if name not in PROJ_NAMES or getattr(leaf, "ndim", 0) < 2 \
-                or leaf.shape[-2] < g:
+        if name not in PROJ_NAMES or getattr(leaf, "ndim", 0) < 2:
+            return leaf
+        if policy is not None:
+            cfg = policy.config_for("/".join(key_entry_str(p) for p in path))
+            if cfg is None:
+                return leaf
+        else:
+            cfg = cfg0
+        if leaf.shape[-2] < cfg.weight_cfg.group_size:
             return leaf
         pw = pack_weights(leaf, cfg)
         stats["bits_sum"] += float(jnp.sum(pw.bits.astype(jnp.int32) + 1))
         stats["groups"] += int(np.prod(pw.bits.shape))
+        stats["layers"] += 1
         return pw
 
     packed = jax.tree_util.tree_map_with_path(pack, params)
     avg_w_bits = stats["bits_sum"] / max(stats["groups"], 1)
-    return packed, {"avg_w_bits": avg_w_bits}
+    return packed, {"avg_w_bits": avg_w_bits, "layers_packed": stats["layers"]}
 
 
 def _cache_insert(pool, src, rows, slots):
@@ -143,6 +172,13 @@ class Engine:
     """
 
     def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+        preset = scfg.pack_preset if scfg.pack_preset is not None else cfg.quant
+        # a DSBPPolicy pack spec flips serving into the per-layer 'policy'
+        # quant mode: each packed container executes under its own embedded
+        # config (models/layers.Quant.cfg_for, DESIGN.md §9)
+        if hasattr(preset, "config_for") or (
+                cfg.quant == "policy" and tree_is_packed(params)):
+            cfg = cfg.replace(quant="policy")
         # serving default: the fused one-pass kernel (DESIGN.md §8), unless
         # the arch config or ServeConfig pins a method explicitly.  Token
         # parity with 'dsbp_kernel' / 'dsbp_ref' is asserted in
@@ -155,17 +191,24 @@ class Engine:
         self.scfg = scfg
         self.pack_report = None
         self.last_stats: dict | None = None
-        preset = scfg.pack_preset or cfg.quant
         if scfg.pack and preset is not None and not tree_is_packed(params):
+            if preset == "policy":
+                raise ValueError(
+                    "cfg.quant='policy' needs weights already packed under a "
+                    "DSBPPolicy, or the policy itself via "
+                    "ServeConfig.pack_preset")
             raw_nbytes = packed_nbytes(params)
             params, stats = pack_weights_int8(params, preset)
             self.pack_report = {
-                "preset": preset,
+                "preset": (f"policy[{len(preset)} layers]"
+                           if hasattr(preset, "config_for") else preset),
                 "raw_nbytes": raw_nbytes,
                 "packed_nbytes": packed_nbytes(params),
                 "avg_w_bits": stats["avg_w_bits"],
+                "layers_packed": stats["layers_packed"],
             }
         self.params = params
+        self._score_jit = None  # built lazily by score_continuations
         # donate the cache: KV buffers update in place every step instead of
         # being copied (tests/test_serving.py asserts the aliasing)
         self._decode = jax.jit(
@@ -209,6 +252,53 @@ class Engine:
             rng, sub = jax.random.split(rng)
             tok = self._sample(logits[:, -1], sub)
         return np.stack(outs, axis=1)
+
+    # ------------------------------------------------------------------
+    # likelihood scoring (multiple-choice eval, repro.eval.harness)
+    # ------------------------------------------------------------------
+
+    def score_continuations(self, sequences, prompt_lens) -> np.ndarray:
+        """Sum of continuation log-probs under the engine's weights.
+
+        ``sequences`` — list of 1-D token arrays (context + continuation);
+        ``prompt_lens`` — per-sequence context length.  Returns (B,) f32:
+        Σ_p log P(tok_p | tok_<p) over p in [prompt_len, len).  Sequences
+        right-pad to a shared bucketed length and run one ``M.forward``
+        with MoE capacity dropping disabled, so each row's score equals
+        scoring it alone at batch size 1 (batch invariance,
+        tests/test_policy.py) — the contract the eval harness and the
+        policy autotuner rely on.
+        """
+        cfg, scfg = self.cfg, self.scfg
+        if cfg.frontend in ("audio_codebooks", "vlm_patches"):
+            raise NotImplementedError(
+                "score_continuations() takes plain token sequences; "
+                f"unsupported for the {cfg.frontend} frontend")
+        seqs = [np.asarray(s, np.int64) for s in sequences]
+        lens = np.asarray([len(s) for s in seqs], np.int32)
+        plens = np.asarray(prompt_lens, np.int32)
+        if np.any(plens >= lens):
+            raise ValueError("every sequence needs >= 1 continuation token")
+        bucket = scfg.prefill_bucket
+        L = max(-(-int(lens.max()) // bucket) * bucket, bucket)
+        toks = np.zeros((len(seqs), L), np.int64)
+        for i, s in enumerate(seqs):
+            toks[i, : lens[i]] = s
+        if self._score_jit is None:
+            def _score(p, toks, plens, slens):
+                logits = M.forward(p, {"tokens": toks}, cfg, no_drop=True)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                tgt = toks[:, 1:]
+                lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None],
+                                         axis=-1)[..., 0]
+                pos = jnp.arange(1, toks.shape[1])
+                mask = (pos[None] >= plens[:, None]) & (pos[None] < slens[:, None])
+                return jnp.sum(lp * mask, axis=1)
+
+            self._score_jit = jax.jit(_score)
+        return np.asarray(self._score_jit(
+            self.params, jnp.asarray(toks), jnp.asarray(plens),
+            jnp.asarray(lens)))
 
     # ------------------------------------------------------------------
     # continuous batching

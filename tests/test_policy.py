@@ -1,0 +1,311 @@
+"""DSBP policy subsystem (DESIGN.md §9): artifact round-trips, policy-packed
+serving parity, calibration determinism, cost-model consistency, eval
+batch-invariance, and the autotuner end to end."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.checkpoint import store
+from repro.core import energy as E
+from repro.core.dsbp import DSBPConfig
+from repro.core.packed import PackedDSBPWeight
+from repro.core.quantized import PRESETS, QuantizedMatmulConfig
+from repro.eval import boolq_synthetic, harness, winogrande_synthetic
+from repro.models import model as M
+from repro.policy import (
+    DSBPPolicy,
+    assignment_cost,
+    autotune,
+    calibrate,
+    predict_layer_bits,
+    synthetic_calibration_batches,
+)
+from repro.policy.cost import input_bitwidth_ladder
+from repro.serve.engine import Engine, ServeConfig, pack_weights_int8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("yi-9b").replace(dtype="float32", remat=False)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    report = calibrate(
+        params, cfg, synthetic_calibration_batches(cfg, 1, 2, 16, seed=0))
+    return cfg, params, report
+
+
+def _mixed_policy(report) -> DSBPPolicy:
+    keys = sorted(report.layers)
+    cfgs = [PRESETS["precise"], PRESETS["efficient"]]
+    return DSBPPolicy(layers={k: cfgs[i % 2] for i, k in enumerate(keys)},
+                      meta={"origin": "test"})
+
+
+# ---------------- artifact round-trips ----------------
+
+def test_policy_json_roundtrip(setup):
+    _, _, report = setup
+    pol = _mixed_policy(report)
+    pol.default = PRESETS["e5m3_fixed"]
+    back = DSBPPolicy.from_json(pol.to_json())
+    assert back.layers == pol.layers
+    assert back.default == pol.default
+    assert back.meta == pol.meta
+    # config_for: exact hit vs default fallback
+    k = sorted(pol.layers)[0]
+    assert back.config_for(k) == pol.layers[k]
+    assert back.config_for("units/9/nope") == PRESETS["e5m3_fixed"]
+
+
+def test_policy_checkpoint_roundtrip(tmp_path, setup):
+    """DSBPPolicy save/load through checkpoint.store: atomic step dirs,
+    latest-step resolution, provenance preserved."""
+    _, _, report = setup
+    pol = _mixed_policy(report)
+    pol.meta["final_acc"] = [1.0, 0.97]
+    d = str(tmp_path / "pol")
+    pol.save(d, step=1)
+    stale = DSBPPolicy.uniform("precise", sorted(pol.layers))
+    stale.save(d, step=0)
+    back = DSBPPolicy.load(d)  # newest step wins (step 1)
+    assert back.layers == pol.layers
+    assert back.meta["final_acc"] == [1.0, 0.97]
+    back0 = DSBPPolicy.load(d, step=0)
+    assert back0.layers == stale.layers
+    assert store.latest_step(d) == 1
+
+
+def test_restore_flat_matches_save(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.uint8), "b": {"c": np.ones((2, 3))}}
+    store.save(str(tmp_path), 4, tree)
+    flat, step = store.restore_flat(str(tmp_path))
+    assert step == 4
+    np.testing.assert_array_equal(flat["a"], tree["a"])
+    np.testing.assert_array_equal(flat["b/c"], tree["b"]["c"])
+
+
+# ---------------- packing ----------------
+
+def test_pack_weights_int8_unknown_preset_valueerror(setup):
+    _, params, _ = setup
+    with pytest.raises(ValueError) as ei:
+        pack_weights_int8(params, "not_a_preset")
+    msg = str(ei.value)
+    for name in PRESETS:
+        assert name in msg
+    assert "DSBPPolicy" in msg
+
+
+def test_policy_packing_embeds_per_layer_configs(setup):
+    """A mixed policy really packs different configs into different
+    containers, and uncovered projections stay raw."""
+    _, params, report = setup
+    keys = sorted(report.layers)
+    pol = DSBPPolicy(layers={keys[0]: PRESETS["precise"],
+                             keys[1]: PRESETS["efficient"]})  # no default
+    packed, stats = pack_weights_int8(params, pol)
+    assert stats["layers_packed"] == 2
+    flat = jax.tree_util.tree_flatten_with_path(
+        packed, is_leaf=lambda x: isinstance(x, PackedDSBPWeight))[0]
+    from repro.core.packed import key_entry_str
+    by_path = {"/".join(key_entry_str(p) for p in path): leaf
+               for path, leaf in flat}
+    assert by_path[keys[0]].cfg == PRESETS["precise"]
+    assert by_path[keys[1]].cfg == PRESETS["efficient"]
+    for k in keys[2:]:
+        assert not isinstance(by_path[k], PackedDSBPWeight)
+
+
+# ---------------- serving parity ----------------
+
+def test_uniform_policy_token_parity(setup):
+    """A uniform policy serves token-for-token what the same config as a
+    global preset serves — the degenerate case that anchors policy mode."""
+    cfg, params, report = setup
+    pol = DSBPPolicy.uniform("precise", sorted(report.layers))
+    eng_p = Engine(params, cfg, ServeConfig(max_len=48, pack_preset=pol))
+    eng_g = Engine(params, cfg.replace(quant="precise"),
+                   ServeConfig(max_len=48))
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (3, 8))
+    lengths = np.asarray([8, 5, 3])
+    got = eng_p.generate(prompts, 6, lengths=lengths)
+    ref = eng_g.generate(prompts, 6, lengths=lengths)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_uniform_policy_score_parity(setup):
+    cfg, params, report = setup
+    pol = DSBPPolicy.uniform("efficient", sorted(report.layers))
+    eng_p = Engine(params, cfg, ServeConfig(max_len=64, pack_preset=pol))
+    eng_g = Engine(params, cfg.replace(quant="efficient"),
+                   ServeConfig(max_len=64))
+    rng = np.random.default_rng(2)
+    seqs = [rng.integers(0, cfg.vocab_size, (n,)) for n in (10, 7, 12)]
+    plens = [6, 3, 8]
+    np.testing.assert_allclose(eng_p.score_continuations(seqs, plens),
+                               eng_g.score_continuations(seqs, plens),
+                               rtol=0, atol=0)
+
+
+def test_mixed_policy_serves_ragged(setup):
+    """A genuinely mixed per-layer policy runs the full continuous-batching
+    path (pack at __init__, slot scheduler, fused default method)."""
+    cfg, params, report = setup
+    pol = _mixed_policy(report)
+    eng = Engine(params, cfg,
+                 ServeConfig(max_len=48, batch_size=2, pack_preset=pol))
+    assert eng.cfg.quant == "policy"
+    assert eng.pack_report["layers_packed"] == len(report.layers)
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in (5, 9, 3, 7)]
+    out = eng.serve(reqs, max_new_tokens=4)
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(v) == 4 for v in out.values())
+    # ragged serve == each request alone (batch invariance of policy mode)
+    for uid in (0, 2):
+        solo = Engine(params, cfg,
+                      ServeConfig(max_len=48, batch_size=1, pack_preset=pol))
+        alone = solo.serve([reqs[uid]], max_new_tokens=4)
+        np.testing.assert_array_equal(out[uid], alone[0])
+
+
+# ---------------- calibration ----------------
+
+def test_calibration_deterministic_under_fixed_seeds(setup):
+    cfg, params, report = setup
+    rep2 = calibrate(
+        params, cfg, synthetic_calibration_batches(cfg, 1, 2, 16, seed=0))
+    assert sorted(report.layers) == sorted(rep2.layers)
+    for k, s in report.layers.items():
+        s2 = rep2.layers[k]
+        np.testing.assert_array_equal(s.ratio_hist, s2.ratio_hist)
+        np.testing.assert_array_equal(s.shift_hist, s2.shift_hist)
+        np.testing.assert_array_equal(s.w_bdyn_hist, s2.w_bdyn_hist)
+        assert (s.nz, s.total, s.groups, s.tokens, s.flops) == \
+               (s2.nz, s2.total, s2.groups, s2.tokens, s2.flops)
+
+
+def test_calibration_covers_projections_with_flop_shares(setup):
+    cfg, params, report = setup
+    # yi smoke: one pattern position x (4 attn + 3 ffn projections)
+    assert sorted(report.layers) == [
+        "units/0/attn/wk", "units/0/attn/wo", "units/0/attn/wq",
+        "units/0/attn/wv", "units/0/ffn/w1", "units/0/ffn/w2",
+        "units/0/ffn/w3"]
+    shares = [report.flop_share(p) for p in report.layers]
+    assert abs(sum(shares) - 1.0) < 1e-9
+    # w1 (d -> ff) carries more FLOPs than wk (d -> kv heads)
+    assert report.layers["units/0/ffn/w1"].flops > \
+           report.layers["units/0/attn/wk"].flops
+
+
+def test_calibration_rejects_packed_tree(setup):
+    cfg, params, _ = setup
+    packed, _ = pack_weights_int8(params, "precise")
+    with pytest.raises(ValueError, match="raw float tree"):
+        calibrate(packed, cfg, synthetic_calibration_batches(cfg, 1, 1, 16))
+
+
+# ---------------- cost model ----------------
+
+def test_uniform_fixed_cost_matches_closed_form(setup):
+    """For a uniform fixed-mode assignment the aggregate TOPS/W equals the
+    closed-form macro efficiency at those widths (the Table I numbers)."""
+    _, _, report = setup
+    for preset, (i, w, eff) in {"e5m3_fixed": (4, 4, 77.9),
+                                "e5m7_fixed": (8, 8, 20.4)}.items():
+        c = assignment_cost(report, {p: preset for p in report.layers})
+        assert (c["avg_i"], c["avg_w"]) == (i, w)
+        np.testing.assert_allclose(
+            c["eff_tops_w"], E.efficiency_tops_per_w(i, w, "fp_fixed"),
+            rtol=1e-9)
+        np.testing.assert_allclose(c["eff_tops_w"], eff, rtol=0.05)
+
+
+def test_predict_layer_bits_orders_with_b_fix(setup):
+    """More B_fix -> more predicted bits; fixed mode is exact b_fix+1."""
+    _, _, report = setup
+    stats = report.layers[sorted(report.layers)[0]]
+    fixed = QuantizedMatmulConfig(
+        input_cfg=DSBPConfig(fmt="e4m3", side="input", k=0.0, b_fix=5,
+                             mode="fixed"),
+        weight_cfg=DSBPConfig(fmt="e2m5", side="weight", k=0.0, b_fix=3,
+                              mode="fixed", scale_granularity="row"))
+    i, w = predict_layer_bits(stats, fixed)
+    assert (i, w) == (6.0, 4.0)
+    ladder = input_bitwidth_ladder((6, 3, 1))
+    bits = [predict_layer_bits(stats, c)[0] for _, c in ladder]
+    assert bits[0] > bits[1] > bits[2]
+    ws = {round(predict_layer_bits(stats, c)[1], 6) for _, c in ladder}
+    assert len(ws) == 1  # the ladder demotes inputs only
+
+
+# ---------------- eval harness ----------------
+
+def test_task_generators_deterministic():
+    a = boolq_synthetic(512, 8, seed=7)
+    b = boolq_synthetic(512, 8, seed=7)
+    assert a.items == b.items
+    w1 = winogrande_synthetic(512, 8, seed=7)
+    w2 = winogrande_synthetic(512, 8, seed=7)
+    assert w1.items == w2.items
+    assert all(it.choices[0] != it.choices[1] for it in w1.items)
+    # winogrande choices share the suffix
+    sl = w1.meta["suffix_len"]
+    assert all(it.choices[0][-sl:] == it.choices[1][-sl:] for it in w1.items)
+
+
+def test_score_continuations_batch_invariant(setup):
+    cfg, params, report = setup
+    pol = DSBPPolicy.uniform("precise", sorted(report.layers))
+    eng = Engine(params, cfg, ServeConfig(max_len=64, pack_preset=pol))
+    rng = np.random.default_rng(5)
+    seqs = [rng.integers(0, cfg.vocab_size, (n,)) for n in (9, 4, 13, 6)]
+    plens = [5, 2, 9, 3]
+    batched = eng.score_continuations(seqs, plens)
+    solo = np.concatenate([
+        eng.score_continuations([s], [p]) for s, p in zip(seqs, plens)])
+    np.testing.assert_allclose(batched, solo, rtol=0, atol=1e-5)
+
+
+def test_gold_labels_and_decided_subset(setup):
+    cfg, params, _ = setup
+    task = boolq_synthetic(cfg.vocab_size, 12, seed=3)
+    gold, margins = harness.gold_labels_and_margins(params, cfg, task)
+    gold2, margins2 = harness.gold_labels_and_margins(params, cfg, task)
+    np.testing.assert_array_equal(gold, gold2)
+    np.testing.assert_allclose(margins, margins2)
+    assert margins.min() >= 0
+    med = float(np.median(margins))
+    sub, gsub = harness.decided_subset(task, gold, margins, med)
+    assert 0 < len(sub.items) <= len(task.items)
+    assert len(gsub) == len(sub.items)
+    # float engine scores itself perfectly on its own labels
+    acc = harness.evaluate(harness.float_engine(params, cfg), sub, gsub)
+    assert acc == 1.0
+
+
+# ---------------- the autotuner end to end ----------------
+
+def test_autotune_produces_serving_policy(setup):
+    """Greedy search returns a policy that (a) respects the accuracy floor
+    by construction, (b) strictly improves modeled efficiency over the
+    precision ceiling, (c) serves end-to-end through Engine.serve."""
+    cfg, params, report = setup
+    task = boolq_synthetic(cfg.vocab_size, 16, seed=9)
+    ladder = input_bitwidth_ladder((6, 2))
+    pol = autotune(params, cfg, report, [task], ladder=ladder,
+                   max_drop=1.0,  # accept every demotion: exercises the walk
+                   quant_method="dsbp_ref", batch_items=8)
+    assert sorted(pol.layers) == sorted(report.layers)
+    assert pol.meta["rungs"]  # provenance present
+    assert all(r == "i2_w7" for r in pol.meta["rungs"].values())
+    ceiling = assignment_cost(
+        report, {p: ladder[0][1] for p in report.layers})["eff_tops_w"]
+    assert pol.meta["modeled"]["eff_tops_w"] > ceiling
+    # round-trip the artifact, then serve with it
+    back = DSBPPolicy.from_json(pol.to_json())
+    eng = Engine(params, cfg,
+                 ServeConfig(max_len=48, batch_size=2, pack_preset=back))
+    out = eng.serve([np.arange(5) % cfg.vocab_size], max_new_tokens=3)
+    assert len(out[0]) == 3
