@@ -1,0 +1,116 @@
+"""Self-speculative decoding benchmark (DESIGN.md §10).
+
+Serves the same ragged request mix through the non-speculative engine
+(PR 2's slot scheduler, fused serving default) and the speculative one
+(draft ``SPEC_K`` tokens per pool step with the packed tree's MSB-slice
+view, verify in one batched target forward) at pool sizes B in {1, 4, 8},
+on trained-like weights (``llama_like_model_params`` — acceptance depends
+on the weight distribution, so random-init gaussians would understate it).
+
+Throughput is the engines' decode-phase tok/s (``last_stats['decode_tps']``
+— admission prefills excluded; their cost is identical for both engines and
+scales with prompt shapes, not with the decode policy under test).  Reports
+per B: spec vs base decode tok/s, the speedup, mean accepted length, and
+exact-token parity; plus the per-phase rates of one round (draft / verify /
+sequential decode tok/s).  The CI gate (``check_spec_gate.py``) asserts the
+speculative engine beats the baseline end to end at B=1 — the underfilled
+regime speculative decoding exists for, where one verify pass re-uses the
+step cost the sequential baseline pays per token — with exact parity and
+real acceptance everywhere, and archives the B=4/8 trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.serve.engine import Engine, ServeConfig
+
+from .common import llama_like_model_params
+
+__all__ = ["bench_spec_decode"]
+
+BATCHES = (1, 4, 8)
+NEW_TOKENS = 16
+SPEC_K = 3
+DRAFT_BITS = 6
+
+
+def _ragged_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(8, 25, n)
+    return [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lens]
+
+
+def _timed_serve(eng, reqs):
+    eng.serve(reqs, max_new_tokens=2)  # warm every admission prefill shape
+    out = eng.serve(reqs, max_new_tokens=NEW_TOKENS)
+    return out, eng.last_stats
+
+
+def _phase_rates(params, cfg):
+    """(draft, verify, sequential-decode) tok/s of one B=4 round.  ``cfg``
+    is the engine's RESOLVED config (serving method pinned), so verify and
+    decode run the real serving path; the draft runs the MSB-slice view
+    through the jnp integer path, the speculative default."""
+    from repro.spec.draft import draft_params
+
+    b, t = 4, SPEC_K + 1
+    _, cache, length = M.prefill(
+        params, {"tokens": jnp.zeros((b, 8), jnp.int32)}, cfg, max_len=64)
+    pos = jnp.full((b,), length, jnp.int32)
+    tok = {"tokens": jnp.zeros((b, 1), jnp.int32)}
+    toks = {"tokens": jnp.zeros((b, t), jnp.int32)}
+    dcfg = cfg.replace(quant_method="dsbp_ref")
+
+    draft_fn = jax.jit(lambda p, c: M.decode_step(
+        draft_params(p, DRAFT_BITS), tok, c, pos, dcfg))
+    verify_fn = jax.jit(lambda p, c: M.verify_step(p, toks, c, pos, cfg))
+    decode_fn = jax.jit(lambda p, c: M.decode_step(p, tok, c, pos, cfg))
+
+    def rate(fn, tokens):
+        jax.block_until_ready(fn(params, cache))
+        best = float("inf")  # min-of-reps: robust to scheduler noise
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(params, cache))
+            best = min(best, time.perf_counter() - t0)
+        return tokens / best
+
+    return (rate(draft_fn, b), rate(verify_fn, b * t), rate(decode_fn, b))
+
+
+def bench_spec_decode():
+    cfg = smoke_config("yi-9b").replace(remat=False, quant="precise")
+    params = llama_like_model_params(cfg, 0)
+    parts = []
+    us_round = 0.0
+    packed = cfg_resolved = None
+    for b in BATCHES:
+        base = Engine(params if packed is None else packed, cfg,
+                      ServeConfig(max_len=64, batch_size=b))
+        packed = base.params  # pack once; both engines serve the same tree
+        cfg_resolved = base.cfg  # serving method pinned (dsbp_fused)
+        spec = Engine(packed, cfg, ServeConfig(
+            max_len=64, batch_size=b, spec_k=SPEC_K,
+            spec_draft_bits=DRAFT_BITS))
+        reqs = _ragged_requests(cfg, 2 * b)
+        out_b, st_b = _timed_serve(base, reqs)
+        out_s, st_s = _timed_serve(spec, reqs)
+        parity = all(np.array_equal(out_b[i], out_s[i]) for i in out_b)
+        us_round = (st_s["decode_time_s"] / max(st_s["spec_rounds"], 1)) * 1e6
+        parts.append(
+            f"B{b}: spec={st_s['decode_tps']:.1f} base={st_b['decode_tps']:.1f}"
+            f" tok/s (x{st_s['decode_tps'] / st_b['decode_tps']:.2f}) "
+            f"acc={st_s['mean_accepted']:.2f}/{SPEC_K + 1} parity={int(parity)}"
+        )
+    d_tps, v_tps, s_tps = _phase_rates(packed, cfg_resolved)
+    parts.append(
+        f"phase@B4: draft={d_tps:.0f} verify={v_tps:.0f} decode={s_tps:.0f} "
+        f"tok/s (spec_k={SPEC_K} draft_bits={DRAFT_BITS})"
+    )
+    return us_round, " ; ".join(parts)

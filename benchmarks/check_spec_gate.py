@@ -1,0 +1,45 @@
+"""CI gate over BENCH_spec.json (DESIGN.md §10): speculative serving must
+(1) stay token-for-token identical to the non-speculative stream at every
+pool size, (2) actually speculate (mean accepted length well above the
+1-token floor at spec_k >= 2), (3) beat the non-speculative baseline's
+end-to-end decode tok/s at B=1 — the underfilled regime speculative
+decoding exists for — while staying within noise of it at the larger pools,
+and (4) show the verify batching that pays for it: one verify pass must be
+cheaper per token than sequential decode.  Usage:
+  python benchmarks/check_spec_gate.py BENCH_spec.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "serving_speculative_decode")
+    d = row.get("derived", "")
+    assert "error" not in row, row
+    per_b = re.findall(
+        r"B(\d+): spec=([0-9.]+) base=([0-9.]+) tok/s \(x([0-9.]+)\) "
+        r"acc=([0-9.]+)/(\d+) parity=(\d)", d)
+    assert len(per_b) == 3, d
+    ratios = {}
+    for b, spec, base, ratio, acc, kmax, parity in per_b:
+        assert parity == "1", f"B{b} lost token parity: {d}"
+        assert float(acc) >= 1.5, f"B{b} barely accepts drafts: {d}"
+        assert int(kmax) >= 3, d  # spec_k >= 2
+        ratios[int(b)] = float(ratio)
+    # the headline: end-to-end decode tok/s above the baseline where decode
+    # is launch-bound (B=1); the batched pools must stay within noise
+    assert ratios[1] > 1.2, d
+    assert ratios[4] > 0.5 and ratios[8] > 0.5, d
+    ph = re.search(r"draft=(\d+) verify=(\d+) decode=(\d+) tok/s", d)
+    assert ph, d
+    verify, decode = float(ph.group(2)), float(ph.group(3))
+    assert verify > 1.2 * decode, d  # verify batching is real
+    print("speculative decoding gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_spec.json")

@@ -12,7 +12,7 @@ import json
 import sys
 import traceback
 
-from . import bench_kernels, bench_paper, bench_policy, bench_serving
+from . import bench_kernels, bench_paper, bench_policy, bench_serving, bench_spec
 
 BENCHES = [
     ("fig6_bitwidth_accuracy", bench_paper.bench_fig6_bitwidth_accuracy),
@@ -28,6 +28,7 @@ BENCHES = [
     ("kernel_flash_attention", bench_kernels.bench_flash_attention_kernel),
     ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),
     ("serving_ragged_continuous_batching", bench_serving.bench_serving_ragged),
+    ("serving_speculative_decode", bench_spec.bench_spec_decode),
     ("policy_vs_fixed", bench_policy.bench_policy_vs_fixed),
 ]
 

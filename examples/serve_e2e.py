@@ -1,11 +1,15 @@
 """End-to-end serving driver: ragged continuous batching with pack-once DSBP
 int8 weights (the macro's offline weight path).
 
-Three engines over the same checkpoint serve the SAME ragged prompt mix:
+Four engines over the same checkpoint serve the SAME ragged prompt mix:
   float    — no quantization (baseline numerics)
   per-call — DSBP preset, raw weights re-quantized inside every matmul
   packed   — DSBP preset, weights packed ONCE at Engine init (the paper's
              offline/on-the-fly split); must match per-call token-for-token
+  spec     — the packed engine serving speculatively (DESIGN.md §10):
+             draft --spec-k tokens per pool step with the MSB-slice view of
+             the same containers, verify in one batched target forward;
+             must match the packed engine token-for-token
 
 Each request additionally must match its own batch-size-1 generation
 (length-aware batching: ragged prompts cannot perturb each other).
@@ -27,7 +31,9 @@ def _timed_serve(eng, prompts, n_new):
     eng.serve(prompts, max_new_tokens=2)  # warm every admission prefill shape
     t0 = time.monotonic()
     out = eng.serve(prompts, max_new_tokens=n_new)
-    return out, time.monotonic() - t0
+    # wall incl. admission prefills + decode-phase tok/s (prefill excluded —
+    # speculation changes the decode policy, not the prompt cost)
+    return out, time.monotonic() - t0, eng.last_stats["decode_tps"]
 
 
 def main():
@@ -37,6 +43,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--spec-draft-bits", type=int, default=6)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch).replace(remat=False, d_model=256, d_ff=512,
@@ -55,6 +63,10 @@ def main():
     eng_percall = Engine(params, cfg_q, ServeConfig(
         max_len=128, batch_size=args.batch, pack=False))
     eng_packed = Engine(params, cfg_q, scfg)
+    # same packed tree, speculative scheduler: zero extra weight HBM
+    eng_spec = Engine(eng_packed.params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, spec_k=args.spec_k,
+        spec_draft_bits=args.spec_draft_bits))
 
     rep = eng_packed.pack_report
     print(f"weights: {rep['raw_nbytes']/1e6:.1f} MB f32 -> "
@@ -62,10 +74,12 @@ def main():
           f"({rep['raw_nbytes']/rep['packed_nbytes']:.2f}x smaller), "
           f"avg W bits {rep['avg_w_bits']:.2f}")
 
-    out_f, dt_f = _timed_serve(eng_f, prompts, args.new_tokens)
-    out_c, dt_c = _timed_serve(eng_percall, prompts, args.new_tokens)
-    out_p, dt_p = _timed_serve(eng_packed, prompts, args.new_tokens)
+    out_f, dt_f, _ = _timed_serve(eng_f, prompts, args.new_tokens)
+    out_c, dt_c, _ = _timed_serve(eng_percall, prompts, args.new_tokens)
+    out_p, dt_p, tps_p = _timed_serve(eng_packed, prompts, args.new_tokens)
+    out_s, dt_s, tps_s = _timed_serve(eng_spec, prompts, args.new_tokens)
     st = eng_packed.last_stats
+    st_s = eng_spec.last_stats
 
     # batch-invariance: each request == its own batch-1 greedy generation
     eng_1 = Engine(eng_packed.params, cfg_q, ServeConfig(max_len=128, batch_size=1))
@@ -74,19 +88,31 @@ def main():
         for i, p in enumerate(prompts)
     )
     exact = all((out_p[i] == out_c[i]).all() for i in out_p)
+    spec_exact = all(np.array_equal(out_p[i], out_s[i]) for i in out_p)
     agree = np.mean([float((out_f[i] == out_p[i]).mean()) for i in out_p])
     print(f"served {len(prompts)} ragged requests (lens {lens.tolist()}) on "
           f"{args.batch} slots, occupancy {st['occupancy']*100:.0f}%")
     print(f"packed == per-call quantized (token-for-token): {exact}")
+    print(f"speculative == non-speculative packed (token-for-token): "
+          f"{spec_exact}")
     print(f"ragged batch == batch-size-1 per request: {solo_ok}")
     print(f"float vs DSBP token agreement: {agree*100:.1f}%")
-    print(f"decode wall: float {dt_f:.2f}s | quantize-per-call {dt_c:.2f}s | "
-          f"pack-once {dt_p:.2f}s ({dt_c/dt_p:.2f}x vs per-call)")
+    print(f"serve wall: float {dt_f:.2f}s | quantize-per-call {dt_c:.2f}s | "
+          f"pack-once {dt_p:.2f}s ({dt_c/dt_p:.2f}x vs per-call) | "
+          f"spec {dt_s:.2f}s")
+    print(f"speculation: k={args.spec_k} @ {args.spec_draft_bits}b draft, "
+          f"{st_s['spec_rounds']} rounds vs {st['decode_steps']} pool steps, "
+          f"mean accepted {st_s['mean_accepted']:.2f}/{args.spec_k + 1}, "
+          f"decode-phase {tps_s:.0f} vs {tps_p:.0f} tok/s "
+          f"({tps_s / tps_p:.2f}x)")
     for uid in list(out_p)[:2]:
         print(f"  req{uid} float : {out_f[uid][:12]}")
         print(f"  req{uid} packed: {out_p[uid][:12]}")
     if not exact:
         raise SystemExit("packed serving diverged from per-call DSBP serving")
+    if not spec_exact:
+        raise SystemExit("speculative serving diverged from the "
+                         "non-speculative token stream")
     if not solo_ok:
         raise SystemExit("ragged batch diverged from batch-size-1 serving")
 

@@ -57,6 +57,7 @@ __all__ = [
     "PackedDSBPWeight",
     "LAYOUT_VERSION",
     "to_kernel_layout",
+    "draft_view",
     "QuantMethod",
     "register_quant_method",
     "get_quant_method",
@@ -193,6 +194,58 @@ class PackedDSBPWeight:
         if ts.ndim < deq.ndim:  # per-tensor () or leading (L,) -> broadcast
             ts = ts.reshape(*ts.shape, *([1] * (deq.ndim - ts.ndim)))
         return (deq / ts)[..., : self.k, :]
+
+
+def draft_view(pw: PackedDSBPWeight, draft_bits: int) -> PackedDSBPWeight:
+    """MSB-slice view of a packed container: the top ``draft_bits`` magnitude
+    bits of every aligned mantissa, as a new :class:`PackedDSBPWeight`
+    (DESIGN.md §10).
+
+    The macro's precision-scalable INT MAC array decomposes a B_g-bit
+    aligned weight into 2b column slices fused by shift-and-add, so the top
+    slices of the stored container already ARE a functional low-bit model.
+    This derives that model in software: per group, drop the bottom
+    ``s_g = max(B_g - draft_bits, 0)`` bits with an arithmetic right shift
+    (the 2's-complement slice semantics: value = top_slices·2^s + remainder,
+    0 <= remainder < 2^s) and multiply the group scale by exactly the
+    dropped power of two:
+
+        a'·σ' = (a >> s_g) · (σ · 2^s_g)  =  floor(a / 2^s_g)·2^s_g · σ
+
+    The rescale is EXACT — group scales are powers of two and 2^s_g is an
+    exact f32 product (the same argument DESIGN.md §8 uses for in-kernel
+    scale folding) — so the only approximation is the mantissa truncation
+    itself; groups already at B_g <= draft_bits pass through bit-identically
+    (draft_bits=7 returns the container's exact numerics).  The result is a
+    plain v2 container: it dispatches through ``packed_matmul`` /
+    ``dsbp_matmul_packed`` / ``dsbp_matmul_fused`` unchanged, at the
+    narrower weight width.  Derived with cheap elementwise int8/f32 ops, so
+    callers trace it INSIDE their jitted step — the view lives in
+    temporaries, never as a second weight tree in HBM.
+    """
+    if not 1 <= int(draft_bits) <= 7:
+        raise ValueError(f"draft_bits must be in [1, 7], got {draft_bits}")
+    from .formats import exp2i  # local import: packed.py stays dependency-light
+
+    shift = jnp.maximum(pw.bits.astype(jnp.int32) - draft_bits, 0)
+    # bits is stored per-column (..., N, n_g); the kernel-layout operands
+    # need it per-group-row: (..., n_g, N) for kscale, (..., K', N) for ka
+    shift_k = jnp.swapaxes(shift, -1, -2)
+    ka = jnp.right_shift(  # arithmetic for signed ints: floor(a / 2^s)
+        pw.ka, jnp.repeat(shift_k, pw.group_size, axis=-2).astype(jnp.int8)
+    )
+    kscale = pw.kscale * exp2i(shift_k)
+    return PackedDSBPWeight(
+        ka=ka,
+        kscale=kscale,
+        tscale=pw.tscale,
+        bits=jnp.minimum(pw.bits, jnp.int8(draft_bits)),
+        k=pw.k,
+        n=pw.n,
+        group_size=pw.group_size,
+        cfg=pw.cfg,
+        version=pw.version,
+    )
 
 
 def key_entry_str(entry) -> str:

@@ -6,6 +6,12 @@
 ``--ragged`` draws mixed-length prompts (2 per slot) and runs them through
 the ``Engine.serve`` slot scheduler — per-request generations, slot reuse
 and occupancy stats — instead of one uniform ``generate`` batch.
+
+``--spec-k K`` serves speculatively (DESIGN.md §10): each pool step drafts
+K tokens per slot with the MSB-slice view of the packed weights
+(``--spec-draft-bits``), verifies them in one batched target forward and
+commits the longest matching greedy prefix.  Token-for-token identical to
+the non-speculative stream; implies the slot-scheduler (--ragged) path.
 """
 from __future__ import annotations
 
@@ -32,7 +38,14 @@ def main():
     ap.add_argument("--preset", default="precise")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length prompts through the slot scheduler")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative serving: draft tokens per pool step "
+                         "(0 = off; implies the --ragged scheduler path)")
+    ap.add_argument("--spec-draft-bits", type=int, default=4,
+                    help="aligned-mantissa bits of the MSB-slice draft view")
     args = ap.parse_args()
+    if args.spec_k:
+        args.ragged = True  # speculation lives in the serve() scheduler
 
     cfg = (smoke_config(args.arch) if args.smoke
            else get_config(args.arch).replace(dtype="bfloat16")).replace(remat=False)
@@ -41,7 +54,9 @@ def main():
     params = M.init(jax.random.PRNGKey(0), cfg)
 
     eng = Engine(params, cfg, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 8, batch_size=args.batch))
+        max_len=args.prompt_len + args.new_tokens + args.spec_k + 8,
+        batch_size=args.batch, spec_k=args.spec_k,
+        spec_draft_bits=args.spec_draft_bits))
     if eng.pack_report:
         rep = eng.pack_report
         print(f"packed weights: {rep['raw_nbytes']/1e6:.1f} -> "
@@ -61,6 +76,11 @@ def main():
               f"in {dt:.2f}s ({tps:.1f} tok/s, "
               f"occupancy {st['occupancy']*100:.0f}%, "
               f"{st['decode_steps']} pool steps)")
+        if args.spec_k:
+            print(f"speculation: {st['spec_rounds']} rounds, mean accepted "
+                  f"{st['mean_accepted']:.2f}/{args.spec_k + 1} "
+                  f"(hist {st['accepted_hist']}, per-slot "
+                  f"{[round(a, 2) for a in st['slot_mean_accepted']]})")
         for uid in list(out)[:2]:
             print(f"  req{uid}: {out[uid].tolist()}")
         return

@@ -17,7 +17,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_attention", "decode_attention"]
+__all__ = ["blockwise_attention", "decode_attention", "verify_attention"]
 
 NEG_INF = -1e30
 
@@ -100,6 +100,53 @@ def blockwise_attention(
     out = jax.lax.map(q_block, (jnp.arange(nq), blocks))
     out = out.transpose(1, 2, 0, 3, 4).reshape(b, hq, nq * bq, d)
     return out[:, :, :sq].astype(jnp.promote_types(q.dtype, jnp.bfloat16))
+
+
+@partial(jax.jit, static_argnames=("window",))
+def verify_attention(
+    q: jax.Array,        # (B, Hq, T, D)  T speculated tokens per row
+    k_new: jax.Array,    # (B, Hkv, T, D) their keys (NOT yet in the cache)
+    v_new: jax.Array,    # (B, Hkv, T, D)
+    k_cache: jax.Array,  # (B, Hkv, S_c, D) history (entries < pos valid)
+    v_cache: jax.Array,  # (B, Hkv, S_c, D)
+    pos: jax.Array,      # () or (B,) absolute position of q[:, :, 0]
+    window: int = 0,
+):
+    """Multi-token decode: T queries per row attend over the cached history
+    plus the T fresh keys, causally among themselves (DESIGN.md §10).
+
+    The fresh K/V ride as a separate operand instead of being written first:
+    on a ring cache (S_c = window) the T new entries would overwrite slots
+    whose OLD content earlier queries still need (query j's window reaches
+    back to pos+j-window+1, which the write at pos+j' (j' > j) would evict
+    as position pos+j'-S_c).  Ring entry r holds absolute position
+    ``(pos-1) - ((pos-1-r) mod S_c)``; new key j sits at position pos+j.
+    """
+    b, hq, t, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    qg = (q * d**-0.5).reshape(b, hkv, rep, t, d)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    qpos = posb[:, None] + jnp.arange(t)[None, :]  # (B, T) absolute positions
+    r = jnp.arange(s)
+    last = posb[:, None] - 1
+    p_old = last - ((last - r[None, :]) % s)  # (B, S_c) cached abs positions
+    valid_old = (p_old >= 0)[:, None, :]  # causal vs old is automatic
+    j = jnp.arange(t)
+    valid_new = j[None, None, :] <= j[None, :, None]  # key j <= query j'
+    if window:
+        valid_old &= p_old[:, None, :] > qpos[:, :, None] - window
+        valid_new = valid_new & (j[None, None, :] > j[None, :, None] - window)
+    lg_old = jnp.einsum("bhrtd,bhkd->bhrtk", qg, k_cache).astype(jnp.float32)
+    lg_new = jnp.einsum("bhrtd,bhkd->bhrtk", qg, k_new).astype(jnp.float32)
+    lg_old = jnp.where(valid_old[:, None, None], lg_old, NEG_INF)
+    lg_new = jnp.where(
+        jnp.broadcast_to(valid_new, (b, t, t))[:, None, None], lg_new, NEG_INF
+    )
+    p = jax.nn.softmax(jnp.concatenate([lg_old, lg_new], axis=-1), axis=-1)
+    out = jnp.einsum("bhrtk,bhkd->bhrtd", p[..., :s], v_cache.astype(jnp.float32))
+    out += jnp.einsum("bhrtk,bhkd->bhrtd", p[..., s:], v_new.astype(jnp.float32))
+    return out.reshape(b, hq, t, d).astype(q.dtype)
 
 
 @partial(jax.jit, static_argnames=("window",))

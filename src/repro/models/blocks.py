@@ -12,14 +12,17 @@ from repro.parallel.context import anchor_batch, gather_unit_params
 from . import moe as moe_mod
 from . import recurrent as rec
 from . import ssd as ssd_mod
-from .attention import blockwise_attention, decode_attention
+from .attention import blockwise_attention, decode_attention, verify_attention
 from .layers import Quant, dense, init_dense, init_norm, rms_norm, rope
 
 __all__ = [
     "init_layer",
     "layer_seq",
     "layer_decode",
+    "layer_verify",
     "init_layer_cache",
+    "rollback_kv_cache",
+    "select_state_step",
     "KIND_HAS_KV",
 ]
 
@@ -228,6 +231,91 @@ def _ring_decode_attention(q, k_cache, v_cache, valid):
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def _attn_verify(params, x, cfg, kind, quant, cache, posb):
+    """T-token verify attention: queries at positions pos..pos+T-1 attend
+    over the cached history plus themselves (causal), then ALL T fresh K/V
+    entries are written into the (possibly ring) cache — the caller rolls
+    back the entries past the accepted prefix (DESIGN.md §10)."""
+    b, t, _ = x.shape
+    positions = posb[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    y = rms_norm(params["norm1"], x, cfg.norm_eps)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
+    window = cfg.window if kind == "attn_local" else 0
+    o = verify_attention(q, k, v, cache["k"], cache["v"], posb, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    s_c = cache["k"].shape[2]
+    slots = positions % s_c  # distinct while T <= S_c (engine contract)
+    bidx = jnp.arange(b)[:, None]
+    ck = cache["k"].at[bidx, :, slots].set(
+        k.transpose(0, 2, 1, 3).astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, :, slots].set(
+        v.transpose(0, 2, 1, 3).astype(cache["v"].dtype))
+    return x, {"k": ck, "v": cv}
+
+
+def layer_verify(params, x, cfg, kind, cache, pos, quant=None):
+    """T tokens through one layer in verify mode. x: (B, T, d); pos: () or
+    (B,) absolute position of token 0 per row.  Returns
+    (x, new_cache, steps): ``new_cache`` is the cache advanced by all T
+    tokens; ``steps`` holds what rollback needs — per-step recurrent states
+    for rglru/ssd (selected by :func:`select_state_step`), nothing for
+    attention (KV rollback is a slot-mask select, :func:`rollback_kv_cache`).
+    """
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    params = gather_unit_params(params)
+    x = anchor_batch(x)
+    if kind in ("attn_full", "attn_local"):
+        x, cache = _attn_verify(params, x, cfg, kind, quant, cache, posb)
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, cache, {}
+    if kind == "rglru":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, cache, steps = rec.rglru_verify(params["rec"], y, cfg, quant, cache)
+        x = x + o
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, cache, steps
+    if kind == "ssd":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, cache, steps = ssd_mod.ssd_verify(params["ssd"], y, cfg, quant, cache)
+        return x + o, cache, steps
+    raise ValueError(kind)  # pragma: no cover
+
+
+def rollback_kv_cache(old, new, keep, pos, n_new):
+    """Roll a verify-advanced KV cache back to its accepted-prefix state.
+
+    ``new`` holds ``n_new`` fresh entries per row at ring slots
+    ``(pos + j) % S_c``; row b accepts the first ``keep[b]`` (>= 1) of them.
+    Slots written only by rejected entries are restored from ``old``
+    bit-for-bit — on a ring cache those slots still alias live history that
+    the next decode step must see (slot r reads as position
+    pos' - ((pos' - r) mod S_c), so a stale rejected write would be
+    misread as an older position's K/V).
+    """
+    b, s = old["k"].shape[0], old["k"].shape[2]
+    keep = jnp.broadcast_to(jnp.asarray(keep, jnp.int32), (b,))
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    slots = (posb[:, None] + jnp.arange(n_new)[None, :]) % s  # (B, n_new)
+    kept = jnp.arange(n_new)[None, :] < keep[:, None]
+    mask = jnp.zeros((b, s), bool).at[jnp.arange(b)[:, None], slots].max(kept)
+    m = mask[:, None, :, None]
+    return {"k": jnp.where(m, new["k"], old["k"]),
+            "v": jnp.where(m, new["v"], old["v"])}
+
+
+def select_state_step(steps, keep):
+    """Per-row state after the accepted prefix: entry ``keep[b]-1`` of every
+    per-step leaf (B, T, ...) collected by a verify pass."""
+    def sel(leaf):
+        idx = (jnp.asarray(keep, jnp.int32) - 1).reshape(
+            -1, *([1] * (leaf.ndim - 1)))
+        return jnp.take_along_axis(leaf, idx, axis=1)[:, 0]
+
+    return jax.tree.map(sel, steps)
 
 
 def layer_decode(params, x, cfg, kind, cache, pos, quant=None):

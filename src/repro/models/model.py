@@ -23,7 +23,8 @@ from repro.configs import ArchConfig
 from . import blocks
 from .layers import Quant, init_norm, rms_norm
 
-__all__ = ["init", "forward", "loss_fn", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "verify_step", "rollback_cache"]
 
 
 def _dtype(cfg):
@@ -254,19 +255,25 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
     return logits, {"units": new_units, "tail": new_tail}, fill_len
 
 
+def _embed_step(params, token_batch: dict, cfg: ArchConfig):
+    """Token embedding for decode/verify steps: (B, T) -> (B, T, d) (audio:
+    (B, T, K) codebook ids summed) — the step-mode twin of
+    :func:`embed_tokens`, without its position vector."""
+    emb = params["embed"]
+    if cfg.frontend == "audio_codebooks":
+        tok = token_batch["tokens"]
+        offs = jnp.arange(cfg.n_codebooks, dtype=tok.dtype) * cfg.padded_vocab_size
+        return jnp.take(emb, tok + offs[None, None, :], axis=0).sum(axis=2)
+    return jnp.take(emb, token_batch["tokens"], axis=0)
+
+
 def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
     """One token for every sequence. token_batch['tokens']: (B, 1) (or
     (B,1,K) audio). pos: int32 absolute position — a scalar (uniform batch)
     or a (B,) vector so ragged slots advance independently (continuous
     batching). Returns (logits (B,1,V), new_cache)."""
     quant = Quant(cfg.quant, cfg.quant_method)
-    emb = params["embed"]
-    if cfg.frontend == "audio_codebooks":
-        tok = token_batch["tokens"]
-        offs = jnp.arange(cfg.n_codebooks, dtype=tok.dtype) * cfg.padded_vocab_size
-        x = jnp.take(emb, tok + offs[None, None, :], axis=0).sum(axis=2)
-    else:
-        x = jnp.take(emb, token_batch["tokens"], axis=0)
+    x = _embed_step(params, token_batch, cfg)
 
     def unit_body(carry, stacked):
         xc = carry
@@ -293,3 +300,94 @@ def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _head(params, x, cfg)
     return logits, {"units": list(new_unit_caches), "tail": new_tail}
+
+
+# ---------------- speculative verification (DESIGN.md §10) ----------------
+
+def verify_step(params, token_batch: dict, cache, pos, cfg: ArchConfig,
+                collect_rollback: bool = False):
+    """T tokens per sequence through the cached stack in ONE forward —
+    the multi-token decode contract speculative decoding verifies with.
+
+    token_batch['tokens']: (B, T) (or (B, T, K) audio) — token j of row b
+    sits at absolute position ``pos[b] + j``; attention attends over the
+    cached history plus the new tokens causally, recurrent kinds advance
+    their state T steps with the decode-step op chain.  ``pos``: () or (B,)
+    int32.  T must not exceed any layer's cache length S_c (ring slots must
+    stay distinct within one call).
+
+    Returns ``(logits (B, T, V), new_cache)`` — equal to T chained
+    :func:`decode_step` calls, with ``new_cache`` advanced by ALL T tokens —
+    plus, with ``collect_rollback=True``, a third ``rollback`` pytree for
+    :func:`rollback_cache` (per-step recurrent states; nothing for KV
+    layers).
+    """
+    quant = Quant(cfg.quant, cfg.quant_method)
+    x = _embed_step(params, token_batch, cfg)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+
+    def unit_body(carry, stacked):
+        xc = carry
+        p_stack, c_stack = stacked
+        new_caches, steps = [], []
+        for i, kind in enumerate(cfg.pattern):
+            xc, nc, st = blocks.layer_verify(
+                {k: v for k, v in p_stack[i].items()}, xc, cfg, kind,
+                c_stack[i], posb, quant,
+            )
+            new_caches.append(nc)
+            steps.append(st)
+        return xc, (tuple(new_caches), tuple(steps))
+
+    x, (new_unit_caches, unit_steps) = jax.lax.scan(
+        unit_body, x, (tuple(params["units"]), tuple(cache["units"])),
+        unroll=cfg.scan_unroll,
+    )
+    new_tail, tail_steps = [], []
+    for i, kind in enumerate(cfg.tail):
+        x, nc, st = blocks.layer_verify(
+            params["tail"][i], x, cfg, kind, cache["tail"][i], posb, quant
+        )
+        new_tail.append(nc)
+        tail_steps.append(st)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    new_cache = {"units": list(new_unit_caches), "tail": new_tail}
+    if collect_rollback:
+        return logits, new_cache, {"units": list(unit_steps),
+                                   "tail": tail_steps}
+    return logits, new_cache
+
+
+def rollback_cache(old_cache, new_cache, rollback, keep, pos,
+                   cfg: ArchConfig, n_new: int):
+    """Roll a :func:`verify_step`-advanced cache back to the accepted-prefix
+    state: row b keeps its first ``keep[b]`` (>= 1, <= n_new) verified
+    tokens and the result is bit-identical to having verified only those.
+
+    KV layers select per ring slot between the fresh write and the old
+    content (:func:`blocks.rollback_kv_cache`); recurrent layers select the
+    per-step state at ``keep-1`` from the verify pass's ``rollback`` pytree
+    (:func:`blocks.select_state_step`).  ``old_cache`` is the cache that was
+    PASSED to verify_step; ``n_new`` its token count T.
+    """
+    keep = jnp.asarray(keep, jnp.int32)
+    new_units = []
+    for li, kind in enumerate(cfg.pattern):
+        if blocks.KIND_HAS_KV[kind]:
+            # stacked unit caches carry a leading unit axis (R, B, ...)
+            new_units.append(jax.vmap(
+                lambda o, n: blocks.rollback_kv_cache(o, n, keep, pos, n_new)
+            )(old_cache["units"][li], new_cache["units"][li]))
+        else:
+            new_units.append(jax.vmap(
+                lambda s: blocks.select_state_step(s, keep)
+            )(rollback["units"][li]))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        if blocks.KIND_HAS_KV[kind]:
+            new_tail.append(blocks.rollback_kv_cache(
+                old_cache["tail"][i], new_cache["tail"][i], keep, pos, n_new))
+        else:
+            new_tail.append(blocks.select_state_step(rollback["tail"][i], keep))
+    return {"units": new_units, "tail": new_tail}

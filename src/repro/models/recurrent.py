@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from .layers import Quant, dense, init_dense
 
-__all__ = ["init_rglru_block", "rglru_block", "rglru_decode_step", "rglru_scan"]
+__all__ = ["init_rglru_block", "rglru_block", "rglru_decode_step",
+           "rglru_verify", "rglru_scan", "conv_states_per_step"]
 
 _C = 8.0
 
@@ -125,6 +126,60 @@ def rglru_block(params, x, cfg, quant: Quant | None = None, state=None,
     y, h_last = hh.astype(u.dtype), hh[:, -1]
     out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
     return out, {"h": h_last, "conv": new_conv}
+
+
+def conv_states_per_step(conv_state, x):
+    """Per-step conv contexts of a T-token run: entry t is the (K-1)-deep
+    trailing context AFTER consuming input t — exactly the ``conv`` state a
+    decode step at position t would carry out.  x: (B, T, r); conv_state:
+    (B, K-1, r).  Returns (B, T, K-1, r); entry T-1 equals the sequence
+    path's ``new_state``."""
+    k1 = conv_state.shape[1]
+    xp = jnp.concatenate([conv_state, x], axis=1)  # (B, T+K-1, r)
+    idx = jnp.arange(x.shape[1])[:, None] + 1 + jnp.arange(k1)[None, :]
+    return xp[:, idx]
+
+
+def rglru_verify(params, x, cfg, quant: Quant | None = None, state=None):
+    """T-token verify pass: the decode recurrence advanced T steps in one
+    call, with every intermediate state captured for rollback (DESIGN.md
+    §10).  x: (B, T, d); state: {'h': (B, r), 'conv': (B, K-1, r)}.
+
+    The projections / conv / gates run batched over the T tokens (the
+    FLOP-heavy part of the block); the diagonal recurrence itself runs as a
+    SEQUENTIAL ``lax.scan`` — the same f32 ``h = a·h + b`` op chain as
+    :func:`rglru_decode_step`, so the per-step states are bit-identical to
+    T chained decode steps (the rollback contract), unlike the associative
+    scan of :func:`rglru_block` whose tree-order float sums may differ in
+    the last bit.
+
+    Returns (y (B, T, d), new_state, steps) with ``steps`` the per-step
+    states {'h': (B, T, r) f32, 'conv': (B, T, K-1, r)}.
+    """
+    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
+    u_in = dense(params["w_in"], x, quant)
+    u, _ = causal_conv1d(params["conv_w"], u_in, state["conv"])
+    a, b = _gates(params, u)  # (B, T, r) f32
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, state["h"].astype(jnp.float32),
+        (a.swapaxes(0, 1), b.swapaxes(0, 1)),
+    )
+    hs = hs.swapaxes(0, 1)  # (B, T, r)
+    y = hs.astype(u.dtype)
+    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype),
+                quant)
+    # conv contexts gather from the PRE-conv inputs — the values a decode
+    # step's causal_conv1d carries forward
+    conv_steps = conv_states_per_step(state["conv"], u_in)
+    steps = {"h": hs, "conv": conv_steps}
+    new_state = {"h": hs[:, -1], "conv": conv_steps[:, -1]}
+    return out, new_state, steps
 
 
 def rglru_decode_step(params, x, state, cfg, quant: Quant | None = None):

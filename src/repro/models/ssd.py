@@ -19,10 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from .layers import Quant, dense, init_dense
-from .recurrent import causal_conv1d
+from .recurrent import causal_conv1d, conv_states_per_step
 
-__all__ = ["init_ssd_block", "ssd_block", "ssd_decode_step", "init_ssd_state",
-           "ssd_chunked", "ssd_naive"]
+__all__ = ["init_ssd_block", "ssd_block", "ssd_decode_step", "ssd_verify",
+           "init_ssd_state", "ssd_chunked", "ssd_naive"]
 
 
 def init_ssd_block(key, cfg, dtype):
@@ -187,6 +187,54 @@ def ssd_decode_step(params, x, state, cfg, quant: Quant | None = None):
     y = y.reshape(-1, 1, din) * jax.nn.silu(z.astype(jnp.float32))
     out = dense(params["w_out"], y.astype(x.dtype), quant)
     return out, {"h": h, "conv": new_conv}
+
+
+def ssd_verify(params, x, cfg, quant: Quant | None = None, state=None):
+    """T-token verify pass: the SSM recurrence advanced T steps in one call
+    with every intermediate state captured for rollback (DESIGN.md §10).
+    x: (B, T, d); state: {'h': (B, H, P, N) f32, 'conv': (B, K-1, C)}.
+
+    Projections, conv and gates run batched over the T tokens; the state
+    recurrence is a SEQUENTIAL ``lax.scan`` over the same f32 op chain as
+    :func:`ssd_decode_step` (NOT the chunked parallel form), so the
+    per-step states are bit-identical to T chained decode steps.
+
+    Returns (y (B, T, d), new_state, steps) with ``steps`` the per-step
+    states {'h': (B, T, H, P, N) f32, 'conv': (B, T, K-1, C)}.
+    """
+    din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
+    hp = cfg.ssm_headdim
+    zxbcdt = dense(params["w_in"], x, quant)
+    z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, _ = causal_conv1d(params["conv_w"], conv_in, state["conv"])
+    conv_steps = conv_states_per_step(state["conv"], conv_in)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out, [din, din + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(*xs.shape[:-1], nh, hp)  # (B, T, H, P)
+
+    def step(h, inp):
+        xh_t, b_t, dt_t = inp  # (B,H,P), (B,N), (B,H)
+        dec = jnp.exp(dt_t * a[None])
+        upd = jnp.einsum("bn,bhp->bhpn", b_t, xh_t * dt_t[..., None])
+        h = dec[:, :, None, None] * h + upd
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, state["h"],
+        (xh.swapaxes(0, 1), bmat.swapaxes(0, 1), dt.swapaxes(0, 1)),
+    )
+    hs = hs.swapaxes(0, 1)  # (B, T, H, P, N) f32
+    y = jnp.einsum("btn,bthpn->bthp", cmat, hs)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:-1], din) * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    steps = {"h": hs, "conv": conv_steps}
+    new_state = {"h": hs[:, -1], "conv": conv_steps[:, -1]}
+    return out, new_state, steps
 
 
 def init_ssd_state(batch: int, cfg, dtype):

@@ -14,6 +14,9 @@ servable artifact:
                   configs, scored through the eval harness + serve.Engine
   policy.py     — the DSBPPolicy artifact (layer path -> config + provenance)
                   with save/load through checkpoint.store
+  spec_bits.py  — per-layer draft-bitwidth pricing for self-speculative
+                  decoding (ServeConfig.spec_draft_bits artifacts,
+                  DESIGN.md §10)
 """
 from .policy import DSBPPolicy
 from .calibrate import (
@@ -24,6 +27,7 @@ from .calibrate import (
 )
 from .cost import assignment_cost, candidate_ladder, predict_layer_bits
 from .search import autotune
+from .spec_bits import price_draft_bits
 
 __all__ = [
     "DSBPPolicy",
@@ -35,4 +39,5 @@ __all__ = [
     "candidate_ladder",
     "predict_layer_bits",
     "autotune",
+    "price_draft_bits",
 ]

@@ -26,6 +26,7 @@ not copied per token).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -38,7 +39,7 @@ from repro.core.quantized import PRESETS, pack_weights
 from repro.models import model as M
 
 __all__ = ["ServeConfig", "Request", "Engine", "pack_weights_int8",
-           "packed_nbytes"]
+           "packed_nbytes", "sample_tokens"]
 
 # projection leaf names that carry a DSBP-quantizable GEMM (the sharding
 # contract of models/layers.py keys these same names)
@@ -70,6 +71,28 @@ class ServeConfig:
     eos_id: int | None = None    # serve(): slot frees when this is sampled
     prefill_bucket: int = 16     # admission prompts pad up to a multiple of
                                  # this (bounds prefill retraces per shape)
+    # --- self-speculative decoding (DESIGN.md §10) ---
+    # spec_k > 0 turns serve() speculative: per pool step, draft spec_k
+    # tokens per slot with the MSB-slice view of the packed weights, verify
+    # them in ONE batched target forward, commit the longest matching greedy
+    # prefix (1..spec_k+1 tokens) and roll the cache back past it.  Greedy
+    # only (temperature must be 0).  Committed tokens are always the target
+    # model's own argmax over verify logits, which match sequential decode
+    # logits to float round-off (~2e-5 relative: batched reductions order
+    # sums differently), so the served stream equals the non-speculative
+    # one token-for-token unless a decode position has an exact near-tie at
+    # that tolerance — asserted empirically across archs in tests/test_spec
+    # and the CI spec gate.
+    spec_k: int = 0
+    # aligned-mantissa width of the draft view: an int, or a per-layer
+    # artifact {path: bits, 'default': bits} priced from calibration stats
+    # (repro.policy.spec_bits.price_draft_bits)
+    spec_draft_bits: object = 4
+    # quantized-linear method for the DRAFT forward ('dsbp_ref' = the jnp
+    # integer path; None inherits the serving method).  The draft is an
+    # approximation by construction — verification pins the numerics — so
+    # it may run the cheapest backend available.
+    spec_draft_method: str | None = "dsbp_ref"
 
 
 @dataclasses.dataclass
@@ -129,6 +152,25 @@ def pack_weights_int8(params, preset="precise"):
     packed = jax.tree_util.tree_map_with_path(pack, params)
     avg_w_bits = stats["bits_sum"] / max(stats["groups"], 1)
     return packed, {"avg_w_bits": avg_w_bits, "layers_packed": stats["layers"]}
+
+
+def sample_tokens(logits, cfg: ArchConfig, temperature: float = 0.0,
+                  rng=None):
+    """THE token-selection implementation: greedy argmax (temperature 0) or
+    categorical sampling over (possibly audio-codebook-stacked) padded-vocab
+    logits.  ``logits``: (B, V).  Shared by ``Engine.generate``,
+    ``Engine.serve`` and the speculative verify loop, so every path commits
+    exactly the same greedy choices."""
+    if cfg.frontend == "audio_codebooks":
+        logits = logits.reshape(
+            logits.shape[0], cfg.n_codebooks, cfg.padded_vocab_size)
+    if temperature <= 0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+    if cfg.frontend == "audio_codebooks":
+        return tok.reshape(tok.shape[0], -1)
+    return tok
 
 
 def _cache_insert(pool, src, rows, slots):
@@ -215,6 +257,34 @@ class Engine:
             lambda p, tok, cache, pos: M.decode_step(p, tok, cache, pos, cfg),
             donate_argnums=(2,),
         )
+        self._spec = None
+        self.spec_report = None
+        if scfg.spec_k:
+            if scfg.temperature > 0:
+                raise ValueError(
+                    "speculative serving uses greedy token-match acceptance; "
+                    "set temperature=0 (temperature sampling acceptance is "
+                    "not implemented)")
+            if cfg.window and 0 < cfg.window <= scfg.spec_k:
+                raise ValueError(
+                    f"spec_k={scfg.spec_k} needs spec_k+1 <= window "
+                    f"({cfg.window}): a verify pass must not wrap its own "
+                    f"tokens around the SWA ring cache")
+            from repro.spec.decode import build_spec_round  # local: optional
+
+            self._spec = jax.jit(
+                build_spec_round(cfg, scfg.spec_k, scfg.spec_draft_bits,
+                                 scfg.spec_draft_method),
+                donate_argnums=(1,),
+            )
+            # the draft view is derived inside the jitted round — no second
+            # weight tree is ever stored (asserted in tests/test_spec.py)
+            self.spec_report = {
+                "spec_k": scfg.spec_k,
+                "draft_bits": scfg.spec_draft_bits,
+                "draft_method": scfg.spec_draft_method,
+                "extra_weight_nbytes": 0,
+            }
 
     # ------------------------------------------------------------------
     # batch API
@@ -240,8 +310,7 @@ class Engine:
         pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
         rng = jax.random.PRNGKey(scfg.seed)
         outs = []
-        rng, sub = jax.random.split(rng)  # never sample with a key we split
-        tok = self._sample(logits[:, -1], sub)
+        tok, rng = self._sample_next(logits[:, -1], rng)
         for _ in range(n_new):
             outs.append(np.asarray(tok))
             step_tok = {"tokens": tok[:, None]}
@@ -249,8 +318,7 @@ class Engine:
                 step_tok = {"tokens": tok.reshape(-1, 1, cfg.n_codebooks)}
             logits, cache = self._decode(self.params, step_tok, cache, pos)
             pos = pos + 1
-            rng, sub = jax.random.split(rng)
-            tok = self._sample(logits[:, -1], sub)
+            tok, rng = self._sample_next(logits[:, -1], rng)
         return np.stack(outs, axis=1)
 
     # ------------------------------------------------------------------
@@ -321,11 +389,15 @@ class Engine:
         nreq = len(queue)
         if len({r.uid for r in queue}) != nreq:
             raise ValueError("request uids must be unique (results key on uid)")
+        # a speculative verify pass may write up to spec_k positions past
+        # the last committed token before rolling them back — reserve room
+        headroom = scfg.spec_k
         for r in queue:
-            if len(r.tokens) + r.max_new_tokens > scfg.max_len:
+            if len(r.tokens) + r.max_new_tokens + headroom > scfg.max_len:
                 raise ValueError(
                     f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
-                    f"{r.max_new_tokens} exceeds max_len {scfg.max_len}")
+                    f"{r.max_new_tokens}{f' + spec_k {headroom}' if headroom else ''}"
+                    f" exceeds max_len {scfg.max_len}")
         B = scfg.batch_size
         pool = M.init_cache(cfg, B, scfg.max_len)
         active: list[Request | None] = [None] * B
@@ -334,24 +406,43 @@ class Engine:
         out: dict = {}
         rng = jax.random.PRNGKey(scfg.seed)
         stats = {"decode_steps": 0, "occupied_lanes": 0, "admissions": 0,
-                 "prefill_tokens": 0, "decode_tokens": 0}
+                 "prefill_tokens": 0, "decode_tokens": 0,
+                 # wall time of the decode/speculation phase alone (admission
+                 # prefills excluded), so decode throughput is measurable
+                 # independently of prefill shapes: decode_tps in last_stats
+                 "decode_time_s": 0.0}
+        if self._spec is not None:
+            stats.update(
+                spec_rounds=0, draft_tokens=0,
+                # accepted-length histogram over occupied lanes: index j =
+                # rounds that committed j tokens (1..spec_k+1)
+                accepted_hist=np.zeros(scfg.spec_k + 2, np.int64),
+            )
+            slot_accepted = np.zeros(B, np.int64)
+            slot_rounds = np.zeros(B, np.int64)
 
         while queue or any(s is not None for s in active):
             free = [i for i in range(B) if active[i] is None]
             if queue and free:
-                rng, sub = jax.random.split(rng)
-                pool = self._admit(pool, queue, free, active, tok, pos, out,
-                                   stats, sub)
+                pool, rng = self._admit(pool, queue, free, active, tok, pos,
+                                        out, stats, rng)
             if not any(s is not None for s in active):
                 continue  # every admitted request finished at its 1st token
+            stats["decode_steps"] += 1
+            stats["occupied_lanes"] += sum(s is not None for s in active)
+            t_step = time.perf_counter()
+            if self._spec is not None:
+                pool = self._spec_advance(pool, active, tok, pos, out, stats,
+                                          slot_accepted, slot_rounds)
+                stats["decode_time_s"] += time.perf_counter() - t_step
+                continue
             logits, pool = self._decode(
                 self.params, {"tokens": jnp.asarray(tok)[:, None]}, pool,
                 jnp.asarray(pos),
             )
-            rng, sub = jax.random.split(rng)
-            nxt = np.asarray(self._sample(logits[:, -1], sub))
-            stats["decode_steps"] += 1
-            stats["occupied_lanes"] += sum(s is not None for s in active)
+            nxt, rng = self._sample_next(logits[:, -1], rng)
+            nxt = np.asarray(nxt)  # device sync: the step's wall cost lands here
+            stats["decode_time_s"] += time.perf_counter() - t_step
             for i in range(B):
                 r = active[i]
                 if r is None:
@@ -367,13 +458,58 @@ class Engine:
             stats,
             requests=nreq,
             occupancy=stats["occupied_lanes"] / max(stats["decode_steps"] * B, 1),
+            decode_tps=stats["decode_tokens"] / max(stats["decode_time_s"],
+                                                    1e-9),
         )
+        if self._spec is not None:
+            self.last_stats["accepted_hist"] = stats["accepted_hist"].tolist()
+            self.last_stats["mean_accepted"] = (
+                float(np.dot(stats["accepted_hist"],
+                             np.arange(scfg.spec_k + 2)))
+                / max(int(stats["accepted_hist"].sum()), 1))
+            self.last_stats["slot_mean_accepted"] = [
+                float(a) / max(int(n), 1)
+                for a, n in zip(slot_accepted, slot_rounds)]
         return {uid: np.asarray(toks, np.int64) for uid, toks in out.items()}
+
+    def _spec_advance(self, pool, active, tok, pos, out, stats,
+                      slot_accepted, slot_rounds):
+        """One speculation round for the whole pool: draft -> verify ->
+        accept -> rollback inside the jitted ``self._spec``, then commit the
+        accepted greedy tokens per occupied slot (every committed token is
+        the target model's own argmax — the non-speculative stream)."""
+        target, keep, pool = self._spec(
+            self.params, pool, jnp.asarray(tok), jnp.asarray(pos))
+        target, keep = np.asarray(target), np.asarray(keep)
+        stats["spec_rounds"] += 1
+        stats["draft_tokens"] += self.scfg.spec_k * sum(
+            s is not None for s in active)
+        for i in range(len(active)):
+            r = active[i]
+            if r is None:
+                continue  # idle lane: rolled-back writes are overwritten at
+                # the slot's next admission prefill
+            kp = int(keep[i])
+            stats["accepted_hist"][kp] += 1
+            slot_accepted[i] += kp
+            slot_rounds[i] += 1
+            committed = 0
+            for j in range(kp):
+                t = int(target[i, j])
+                out[r.uid].append(t)
+                committed += 1
+                stats["decode_tokens"] += 1
+                if self._done(t, out[r.uid], r):
+                    active[i] = None  # tokens past EOS/budget are dropped
+                    break
+            pos[i] += committed
+            tok[i] = int(target[i, committed - 1])
+        return pool
 
     def _admit(self, pool, queue, free, active, tok, pos, out, stats, rng):
         """Admit up to len(free) queued requests: one ragged group prefill
         (padded to a bucket multiple, per-row lengths), then copy each row's
-        cache into its slot."""
+        cache into its slot.  Returns (pool, advanced rng)."""
         scfg = self.scfg
         group = [queue.popleft() for _ in range(min(len(free), len(queue)))]
         lens = np.asarray([len(r.tokens) for r in group], np.int32)
@@ -386,7 +522,8 @@ class Engine:
             self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
             max_len=scfg.max_len, lengths=lens,
         )
-        first = np.asarray(self._sample(logits[:, -1], rng))
+        first, rng = self._sample_next(logits[:, -1], rng)
+        first = np.asarray(first)
         stats["admissions"] += len(group)
         stats["prefill_tokens"] += int(lens.sum())
         rows, slots = [], []
@@ -403,7 +540,7 @@ class Engine:
             pos[slot] = int(lens[j])
         if rows:
             pool = _cache_insert(pool, cache, rows, slots)
-        return pool
+        return pool, rng
 
     def _done(self, t: int, emitted: list, r: Request) -> bool:
         eos = self.scfg.eos_id
@@ -416,13 +553,11 @@ class Engine:
         return Request(uid=i, tokens=np.asarray(r, np.int64), max_new_tokens=max_new)
 
     def _sample(self, logits, rng):
-        cfg = self.cfg
-        if cfg.frontend == "audio_codebooks":
-            logits = logits.reshape(logits.shape[0], cfg.n_codebooks, cfg.padded_vocab_size)
-        if self.scfg.temperature <= 0:
-            tok = jnp.argmax(logits, axis=-1)
-        else:
-            tok = jax.random.categorical(rng, logits / self.scfg.temperature, axis=-1)
-        if cfg.frontend == "audio_codebooks":
-            return tok.reshape(tok.shape[0], -1)
-        return tok
+        return sample_tokens(logits, self.cfg, self.scfg.temperature, rng)
+
+    def _sample_next(self, logits, rng):
+        """Split-then-sample: every draw gets a fresh subkey (never a key
+        that is later split) — the one RNG discipline shared by generate()
+        and serve().  Returns (tokens, advanced rng)."""
+        rng, sub = jax.random.split(rng)
+        return self._sample(logits, sub), rng

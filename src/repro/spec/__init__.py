@@ -1,0 +1,25 @@
+"""Self-speculative decoding from one packed container (DESIGN.md §10).
+
+The macro's precision-scalable INT MAC array already *contains* a low-bit
+model: the top 2b column slices of every packed weight.  This package turns
+that observation into a serving-speed subsystem:
+
+  draft.py   — derive the MSB-slice "draft model" in place from the packed
+               tree (:func:`repro.core.packed.draft_view` per container;
+               zero extra weight HBM — the view is traced inside the jitted
+               step, never stored)
+  decode.py  — one jitted speculation round: draft k tokens with the
+               low-bit view, verify all of them in ONE batched target
+               forward (:func:`repro.models.model.verify_step`), accept the
+               longest matching greedy prefix, roll the cache back past it
+
+``serve.Engine`` integrates the round into the slot scheduler via
+``ServeConfig.spec_k`` / ``spec_draft_bits``; committed tokens always come
+from the target model's own logits, so speculative serving is
+token-for-token the non-speculative greedy stream.
+"""
+from .draft import draft_params, resolve_draft_bits
+from .decode import build_spec_round, greedy_accept
+
+__all__ = ["draft_params", "resolve_draft_bits", "build_spec_round",
+           "greedy_accept"]

@@ -1,0 +1,97 @@
+"""The speculation round: draft -> verify -> accept -> rollback, as one
+pure function the serving engine jits with the cache donated (DESIGN.md §10).
+
+Per round, for every slot b at position ``pos[b]`` with last committed
+token ``tok[b]``:
+
+  draft    γ = spec_k sequential decode steps with the MSB-slice draft view
+           (derived in place from the packed tree, scratch cache discarded)
+           propose d_1..d_γ;
+  verify   ONE target forward over the γ+1 inputs [tok, d_1..d_γ]
+           (:func:`repro.models.model.verify_step`) yields target greedy
+           tokens t_0..t_γ — exactly what γ+1 non-speculative decode steps
+           would have sampled;
+  accept   the longest prefix with d_j == t_{j-1} (m matches) commits the
+           m+1 tokens t_0..t_m: every committed token is the target's own
+           greedy choice over verify logits, so the stream equals the
+           non-speculative one regardless of draft quality — up to float
+           round-off between the batched verify pass and sequential decode
+           (~2e-5 relative; an exact near-tie at that tolerance could
+           argmax differently — asserted empirically in tests/test_spec);
+  rollback the cache keeps the m+1 accepted inputs and is restored
+           bit-for-bit past them (:func:`repro.models.model.rollback_cache`).
+
+The round always commits at least one token (t_0 needs no draft to be
+right), so throughput is bounded below by non-speculative decoding up to
+the draft overhead, and above by (γ+1)× per verify pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+from .draft import DEFAULT_DRAFT_BITS, draft_params
+
+__all__ = ["greedy_accept", "build_spec_round"]
+
+
+def greedy_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
+    """Accepted-prefix sizes for greedy token-match acceptance.
+
+    ``draft (B, γ)`` are the proposed tokens; ``target (B, γ+1)`` the
+    verify pass's greedy tokens.  Returns ``keep (B,)`` in [1, γ+1]: 1 +
+    the number of leading positions where ``draft[:, j] == target[:, j]``
+    (the target token at slot j is the successor the draft guessed at
+    j+1) — i.e. how many verified tokens commit this round.
+    """
+    match = (draft == target[:, : draft.shape[1]]).astype(jnp.int32)
+    return 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+
+
+def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
+                     draft_method: str | None = "dsbp_ref"):
+    """Build the round function ``(params, cache, tok, pos) -> (target
+    (B, γ+1), keep (B,), new_cache)`` for ``jax.jit`` (donate the cache).
+
+    ``draft_method`` picks the quantized-linear method the DRAFT forward
+    executes under (the truncated containers dispatch through any of them);
+    the default 'dsbp_ref' runs the jnp integer path — the draft is an
+    approximation by construction, so it may use the cheapest backend
+    available while the verify pass keeps the serving method.  None
+    inherits the target's method.
+    """
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    dcfg = cfg
+    if draft_method is not None and cfg.quant is not None:
+        dcfg = cfg.replace(quant_method=draft_method)
+
+    def spec_round(params, cache, tok, pos):
+        # the shared greedy-selection helper (same argmax the scheduler's
+        # non-speculative path commits); local import — serve.engine builds
+        # this round lazily, and module-load order must not cycle
+        from repro.serve.engine import sample_tokens
+
+        dp = draft_params(params, draft_bits)  # traced: no persistent HBM
+        dcache, t = cache, tok
+        drafts = []
+        for j in range(spec_k):
+            lg, dcache = M.decode_step(
+                dp, {"tokens": t[:, None]}, dcache, pos + j, dcfg)
+            t = sample_tokens(lg[:, -1], dcfg).astype(tok.dtype)
+            drafts.append(t)
+        draft = jnp.stack(drafts, axis=1)                     # (B, γ)
+        toks = jnp.concatenate([tok[:, None], draft], axis=1)  # (B, γ+1)
+        logits, new_cache, rollback = M.verify_step(
+            params, {"tokens": toks}, cache, pos, cfg, collect_rollback=True)
+        b, t_v, v = logits.shape
+        target = sample_tokens(
+            logits.reshape(b * t_v, v), cfg).reshape(b, t_v).astype(tok.dtype)
+        keep = greedy_accept(draft, target)
+        cache_rb = M.rollback_cache(
+            cache, new_cache, rollback, keep, pos, cfg, spec_k + 1)
+        return target, keep, cache_rb
+
+    return spec_round

@@ -1,0 +1,59 @@
+"""Draft-model derivation: the packed tree's MSB-slice view (DESIGN.md §10).
+
+The draft model is not a second checkpoint — it is the SAME
+:class:`~repro.core.packed.PackedDSBPWeight` containers with their aligned
+mantissas truncated to the top ``draft_bits`` magnitude bits and the group
+scales rescaled by exactly the dropped power of two
+(:func:`repro.core.packed.draft_view`).  :func:`draft_params` applies that
+view across a parameter tree; callers trace it INSIDE their jitted
+speculation round, so the truncated arrays live only as step-local
+temporaries — the draft adds zero persistent weight HBM (asserted via
+``Engine.pack_report`` / ``spec_report`` in tests/test_spec.py).
+
+``draft_bits`` is an int (uniform) or a per-layer artifact: a dict mapping
+projection path keys (``units/<pos>/attn/wq``, the same keys DSBPPolicy and
+the checkpoint store use) to widths, with an optional ``"default"`` entry —
+:func:`repro.policy.spec_bits.price_draft_bits` produces one from
+calibration statistics.
+"""
+from __future__ import annotations
+
+from repro.core.packed import PackedDSBPWeight, draft_view, key_entry_str
+
+import jax
+
+__all__ = ["resolve_draft_bits", "draft_params", "DEFAULT_DRAFT_BITS"]
+
+DEFAULT_DRAFT_BITS = 4
+
+
+def resolve_draft_bits(spec, path_key: str) -> int:
+    """Draft width for one projection path under an int / dict spec."""
+    if isinstance(spec, dict):
+        bits = spec.get(path_key, spec.get("default", DEFAULT_DRAFT_BITS))
+    else:
+        bits = spec
+    bits = int(bits)
+    if not 1 <= bits <= 7:
+        raise ValueError(f"draft bits for {path_key!r} must be in [1, 7], "
+                         f"got {bits}")
+    return bits
+
+
+def draft_params(params, draft_bits=DEFAULT_DRAFT_BITS):
+    """The packed tree's MSB-slice view: every
+    :class:`~repro.core.packed.PackedDSBPWeight` leaf becomes its
+    ``draft_view`` at the resolved per-layer width; raw (unpacked) leaves
+    pass through untouched — the draft then equals the target there, which
+    only raises acceptance.  Pure elementwise derivation; call it inside
+    jit so XLA materializes the view as temporaries of the step.
+    """
+    is_pw = lambda x: isinstance(x, PackedDSBPWeight)
+
+    def view(path, leaf):
+        if not is_pw(leaf):
+            return leaf
+        key = "/".join(key_entry_str(p) for p in path)
+        return draft_view(leaf, resolve_draft_bits(draft_bits, key))
+
+    return jax.tree_util.tree_map_with_path(view, params, is_leaf=is_pw)

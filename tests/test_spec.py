@@ -1,0 +1,447 @@
+"""Self-speculative decoding (DESIGN.md §10).
+
+Core contracts: ``M.verify_step`` (a k-token masked mini-prefill over the
+ring/SWA/ragged cache machinery) matches k sequential ``decode_step`` calls
+across every layer family; rollback restores the cache to the
+accepted-prefix state (rejected writes bit-identical to the pre-verify
+contents); the MSB-slice draft view is an exact power-of-two rescale that
+dispatches through every packed GEMM path and adds zero weight HBM; and
+speculative serving is token-for-token the non-speculative greedy stream.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.packed import PackedDSBPWeight, draft_view, packed_nbytes
+from repro.core.quantized import PRESETS, dsbp_matmul_ref, pack_weights, packed_matmul
+from repro.models import model as M
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.spec import draft_params, greedy_accept, resolve_draft_bits
+
+ARCHS = ["yi-9b", "mixtral-8x7b", "recurrentgemma-2b", "mamba2-370m"]
+
+
+def _cfg(arch="yi-9b", **kw):
+    return smoke_config(arch).replace(remat=False, **kw)
+
+
+def _prefilled(cfg, lens=(5, 11, 8), max_len=32, seed=0):
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    lens = np.asarray(lens, np.int32)
+    toks = np.zeros((len(lens), int(lens.max())), np.int64)
+    for j, l in enumerate(lens):
+        toks[j, :l] = rng.integers(0, cfg.vocab_size, l)
+    _, cache, _ = M.prefill(params, {"tokens": jnp.asarray(toks)}, cfg,
+                            max_len=max_len, lengths=lens)
+    return params, cache, jnp.asarray(lens, jnp.int32), rng
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree)
+
+
+# ---------------------------------------------------------------------------
+# verify_step == k sequential decode steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_verify_step_matches_sequential_decode(arch):
+    """Logits and the fully-advanced cache of one verify_step equal T
+    chained decode_step calls, at ragged per-row positions (covers full
+    attention, SWA, MoE, RG-LRU and SSD)."""
+    cfg = _cfg(arch)
+    params, cache, pos, rng = _prefilled(cfg)
+    T = 4
+    steps = rng.integers(0, cfg.vocab_size, (3, T))
+    c_seq, lgs = cache, []
+    for t in range(T):
+        lg, c_seq = M.decode_step(
+            params, {"tokens": jnp.asarray(steps[:, t : t + 1])}, c_seq,
+            pos + t, cfg)
+        lgs.append(np.asarray(lg[:, 0]))
+    lgs = np.stack(lgs, axis=1)
+    vlg, c_ver = M.verify_step(params, {"tokens": jnp.asarray(steps)}, cache,
+                               pos, cfg)
+    scale = max(float(np.abs(lgs).max()), 1.0)
+    assert float(np.abs(np.asarray(vlg) - lgs).max()) < 2e-5 * scale
+    for a, b in zip(_leaves(c_seq), _leaves(c_ver)):
+        err = float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        assert err < 2e-5 * max(float(jnp.abs(a).max()), 1.0)
+
+
+def test_verify_step_ring_cache_wraparound():
+    """SWA ring cache shorter than the context: verify tokens cross the
+    pos % S_c boundary, overwriting the oldest slots — earlier queries must
+    still see the pre-write history (the fresh K/V ride as a separate
+    operand, DESIGN.md §10)."""
+    cfg = _cfg("mixtral-8x7b", window=8)
+    params, cache, pos, rng = _prefilled(cfg, lens=[6, 14, 10], max_len=16)
+    assert cache["units"][0]["k"].shape[-2] == 8  # ring: S_c = window
+    T = 5  # positions 14..18 wrap slot 8..2 for the longest row
+    steps = rng.integers(0, cfg.vocab_size, (3, T))
+    c_seq, lgs = cache, []
+    for t in range(T):
+        lg, c_seq = M.decode_step(
+            params, {"tokens": jnp.asarray(steps[:, t : t + 1])}, c_seq,
+            pos + t, cfg)
+        lgs.append(np.asarray(lg[:, 0]))
+    lgs = np.stack(lgs, axis=1)
+    vlg, c_ver = M.verify_step(params, {"tokens": jnp.asarray(steps)}, cache,
+                               pos, cfg)
+    scale = max(float(np.abs(lgs).max()), 1.0)
+    assert float(np.abs(np.asarray(vlg) - lgs).max()) < 2e-5 * scale
+    for a, b in zip(_leaves(c_seq), _leaves(c_ver)):
+        err = float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        assert err < 2e-5 * max(float(jnp.abs(a).max()), 1.0)
+
+
+def test_verify_step_single_token_equals_decode_step():
+    """T=1 verify is the decode contract (same math, same cache layout)."""
+    cfg = _cfg("yi-9b")
+    params, cache, pos, rng = _prefilled(cfg)
+    tok = rng.integers(0, cfg.vocab_size, (3, 1))
+    lg_d, c_d = M.decode_step(params, {"tokens": jnp.asarray(tok)}, cache,
+                              pos, cfg)
+    lg_v, c_v = M.verify_step(params, {"tokens": jnp.asarray(tok)}, cache,
+                              pos, cfg)
+    scale = max(float(jnp.abs(lg_d).max()), 1.0)
+    assert float(jnp.abs(lg_d - lg_v).max()) < 2e-5 * scale
+    for a, b in zip(_leaves(c_d), _leaves(c_v)):
+        err = float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        assert err < 2e-5 * max(float(jnp.abs(a).max()), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# rollback: the accepted-prefix cache state
+# ---------------------------------------------------------------------------
+
+def _kv_slot_masks(cache_shape_s, pos, keep, T):
+    """Per-row boolean slot masks (accepted, touched) for a KV cache of
+    length S — an independent numpy oracle of the rollback geometry."""
+    b = len(pos)
+    accepted = np.zeros((b, cache_shape_s), bool)
+    touched = np.zeros((b, cache_shape_s), bool)
+    for i in range(b):
+        for j in range(T):
+            slot = (int(pos[i]) + j) % cache_shape_s
+            touched[i, slot] = True
+            if j < int(keep[i]):
+                accepted[i, slot] = True
+    return accepted, touched
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "recurrentgemma-2b", "mamba2-370m"])
+def test_rollback_restores_rejected_writes_bitwise(arch):
+    """Rolled-back KV slots written only by rejected tokens equal the
+    pre-verify cache bit-for-bit; accepted slots equal the verify pass's
+    writes bit-for-bit; recurrent states equal the per-step state at the
+    accepted prefix (ragged per-row keep)."""
+    cfg = _cfg(arch)
+    params, cache, pos, rng = _prefilled(cfg)
+    T = 4
+    steps = rng.integers(0, cfg.vocab_size, (3, T))
+    _, full, rb = M.verify_step(params, {"tokens": jnp.asarray(steps)}, cache,
+                                pos, cfg, collect_rollback=True)
+    keep = jnp.asarray([1, 3, 2], jnp.int32)
+    rolled = M.rollback_cache(cache, full, rb, keep, pos, cfg, T)
+
+    def check_kv(old, new, got):
+        s = old["k"].shape[-2]
+        acc, touched = _kv_slot_masks(s, np.asarray(pos), np.asarray(keep), T)
+        for f in ("k", "v"):
+            o, n, g = (np.asarray(old[f]), np.asarray(new[f]),
+                       np.asarray(got[f]))
+            lead = (slice(None),) if o.ndim == 5 else ()
+            for i in range(3):
+                for r in range(s):
+                    src = n if acc[i, r] else o
+                    np.testing.assert_array_equal(
+                        g[lead + (i, slice(None), r)],
+                        src[lead + (i, slice(None), r)],
+                        err_msg=f"{f} row {i} slot {r}")
+
+    from repro.models import blocks
+    for li, kind in enumerate(cfg.pattern):
+        if blocks.KIND_HAS_KV[kind]:
+            check_kv(cache["units"][li], full["units"][li],
+                     rolled["units"][li])
+        else:
+            # recurrent: state at step keep-1 of the SAME pass, bit-for-bit
+            sel = jax.vmap(lambda s: blocks.select_state_step(s, keep))(
+                rb["units"][li])
+            for a, b in zip(_leaves(sel), _leaves(rolled["units"][li])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for i, kind in enumerate(cfg.tail):
+        if blocks.KIND_HAS_KV[kind]:
+            check_kv(cache["tail"][i], full["tail"][i], rolled["tail"][i])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_rollback_equals_prefix_verify(arch):
+    """rollback(keep) vs verifying only the accepted prefix: bit-identical
+    on the attention-free SSD stack (pure sequential-scan states), within
+    float round-off everywhere (softmax reduction width differs across T)."""
+    cfg = _cfg(arch)
+    params, cache, pos, rng = _prefilled(cfg, seed=3)
+    T = 4
+    steps = rng.integers(0, cfg.vocab_size, (3, T))
+    _, full, rb = M.verify_step(params, {"tokens": jnp.asarray(steps)}, cache,
+                                pos, cfg, collect_rollback=True)
+    for keep in (1, 2, 3, T):
+        rolled = M.rollback_cache(cache, full, rb,
+                                  jnp.full((3,), keep, jnp.int32), pos, cfg, T)
+        _, ref = M.verify_step(
+            params, {"tokens": jnp.asarray(steps[:, :keep])}, cache, pos, cfg)
+        for a, b in zip(_leaves(rolled), _leaves(ref)):
+            if cfg.is_attention_free:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            else:
+                err = float(jnp.abs(
+                    a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+                assert err < 2e-5 * max(float(jnp.abs(a).max()), 1.0), keep
+    # keep == T is a no-op: the fully-advanced cache, bit-for-bit
+    rolled = M.rollback_cache(cache, full, rb, jnp.full((3,), T, jnp.int32),
+                              pos, cfg, T)
+    for a, b in zip(_leaves(rolled), _leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollback_continuation_matches_prefix_state():
+    """Decoding the next token from a rolled-back cache equals decoding
+    from a cache that only ever saw the accepted prefix — the functional
+    form of the accepted-prefix contract, on the SWA ring cache."""
+    cfg = _cfg("mixtral-8x7b", window=8)
+    params, cache, pos, rng = _prefilled(cfg, lens=[6, 14, 10], max_len=16)
+    T, keep = 4, 2
+    steps = rng.integers(0, cfg.vocab_size, (3, T))
+    _, full, rb = M.verify_step(params, {"tokens": jnp.asarray(steps)}, cache,
+                                pos, cfg, collect_rollback=True)
+    rolled = M.rollback_cache(cache, full, rb, jnp.full((3,), keep, jnp.int32),
+                              pos, cfg, T)
+    _, pref = M.verify_step(params, {"tokens": jnp.asarray(steps[:, :keep])},
+                            cache, pos, cfg)
+    nxt = rng.integers(0, cfg.vocab_size, (3, 1))
+    lg_a, _ = M.decode_step(params, {"tokens": jnp.asarray(nxt)}, rolled,
+                            pos + keep, cfg)
+    lg_b, _ = M.decode_step(params, {"tokens": jnp.asarray(nxt)}, pref,
+                            pos + keep, cfg)
+    scale = max(float(jnp.abs(lg_b).max()), 1.0)
+    assert float(jnp.abs(lg_a - lg_b).max()) < 2e-5 * scale
+    assert np.array_equal(np.asarray(jnp.argmax(lg_a, -1)),
+                          np.asarray(jnp.argmax(lg_b, -1)))
+
+
+# ---------------------------------------------------------------------------
+# the MSB-slice draft view
+# ---------------------------------------------------------------------------
+
+def test_draft_view_is_exact_pow2_rescale():
+    """Truncation drops exactly the bottom B_g - d bits: a' == a >> s with
+    the group scale multiplied by exactly 2^s, bits clamped to d, and the
+    view at d=7 (every valid weight width) is the container itself."""
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal((128, 64)) * 0.05).astype(np.float32)
+    pw = pack_weights(jnp.asarray(w), PRESETS["precise"])
+    for d in (2, 4):
+        dv = draft_view(pw, d)
+        s = np.maximum(np.asarray(pw.bits, np.int32) - d, 0)  # (N, n_g)
+        sk = np.repeat(s.T, pw.group_size, axis=0)            # (K', N)
+        np.testing.assert_array_equal(
+            np.asarray(dv.ka), np.asarray(pw.ka, np.int32) >> sk)
+        np.testing.assert_array_equal(
+            np.asarray(dv.kscale), np.asarray(pw.kscale) * np.exp2(s.T))
+        assert int(np.asarray(dv.bits).max()) <= d
+        # 2's-complement slice range: floor-shift reaches -2^d, tops 2^d - 1
+        ka = np.asarray(dv.ka, np.int32)
+        assert ka.min() >= -(2 ** d) and ka.max() <= 2 ** d - 1
+        # the rescale is exact: a'·σ' differs from a·σ only by the dropped
+        # remainder, < 2^s per aligned unit -> <= (2^s - 1)·σ per element
+        deq = np.asarray(pw.dequantize())
+        deq_d = np.asarray(dv.dequantize())
+        rem = (np.exp2(s) - 1.0) * np.asarray(pw.scale)       # (N, n_g)
+        lim = np.repeat(rem, pw.group_size, axis=1).T         # (K', N)
+        lim = lim / np.asarray(pw.tscale).reshape(1, -1)
+        assert np.all(np.abs(deq_d - deq) <= lim + 1e-12)
+    dv7 = draft_view(pw, 7)
+    np.testing.assert_array_equal(np.asarray(dv7.ka), np.asarray(pw.ka))
+    np.testing.assert_array_equal(np.asarray(dv7.kscale),
+                                  np.asarray(pw.kscale))
+    with pytest.raises(ValueError):
+        draft_view(pw, 0)
+
+
+def test_draft_view_dispatches_through_every_packed_gemm_path():
+    """The truncated view is a plain v2 container: the jnp reference path
+    and both Pallas entries (two-kernel + fused) consume it unchanged and
+    agree bit-for-bit at the narrower weight width."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(1)
+    w = (rng.standard_normal((128, 64)) * 0.05).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((5, 128)).astype(np.float32))
+    pw = pack_weights(jnp.asarray(w), PRESETS["precise"])
+    dv = draft_view(pw, 4)
+    y_ref = packed_matmul(x, dv)
+    y_two = kops.dsbp_matmul_packed(x, dv)
+    y_fused = kops.dsbp_matmul_fused(x, dv)
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_two))
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_fused))
+    # and it differs from the full-width result (it IS a narrower model)
+    assert not np.array_equal(np.asarray(y_ref),
+                              np.asarray(packed_matmul(x, pw)))
+
+
+def test_draft_params_tree_and_per_layer_bits():
+    """draft_params truncates every packed leaf at its resolved width (int
+    or per-layer dict artifact), leaves raw leaves alone, and preserves the
+    tree's byte count (the view is the same container shape)."""
+    cfg = _cfg("yi-9b").replace(quant="precise")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_len=32))
+    bits = {"units/0/attn/wq": 7, "default": 2}
+    dp = draft_params(eng.params, bits)
+    is_pw = lambda x: isinstance(x, PackedDSBPWeight)
+    flat = jax.tree_util.tree_flatten_with_path(dp, is_leaf=is_pw)[0]
+    from repro.core.packed import key_entry_str
+    seen = 0
+    for path, leaf in flat:
+        if not is_pw(leaf):
+            continue
+        seen += 1
+        key = "/".join(key_entry_str(p) for p in path)
+        assert int(np.asarray(leaf.bits).max()) <= resolve_draft_bits(bits, key)
+    assert seen > 0
+    assert packed_nbytes(dp) == packed_nbytes(eng.params)
+    with pytest.raises(ValueError):
+        resolve_draft_bits({"default": 9}, "units/0/attn/wq")
+
+
+def test_spec_engine_adds_zero_weight_hbm():
+    """The draft view is derived inside the jitted round: the speculative
+    engine stores the SAME packed tree (no second copy, identical pack
+    report) and reports zero extra weight bytes."""
+    cfg = _cfg("yi-9b").replace(quant="precise")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    base = Engine(params, cfg, ServeConfig(max_len=48, quant_method="dsbp_ref"))
+    spec = Engine(base.params, cfg,
+                  ServeConfig(max_len=48, quant_method="dsbp_ref", spec_k=2))
+    assert spec.params is base.params  # the same tree object, not a copy
+    assert packed_nbytes(spec.params) == packed_nbytes(base.params)
+    assert spec.spec_report["extra_weight_nbytes"] == 0
+    assert base.spec_report is None
+
+
+# ---------------------------------------------------------------------------
+# acceptance + scheduler integration
+# ---------------------------------------------------------------------------
+
+def test_greedy_accept_prefix_semantics():
+    draft = jnp.asarray([[7, 8, 9], [7, 8, 9], [1, 8, 9], [7, 8, 2]])
+    target = jnp.asarray([[7, 8, 9, 4], [7, 8, 1, 4], [7, 8, 9, 4],
+                          [7, 8, 9, 4]])
+    np.testing.assert_array_equal(np.asarray(greedy_accept(draft, target)),
+                                  [4, 3, 1, 3])
+
+
+@pytest.mark.parametrize("arch,quant", [("yi-9b", "precise"),
+                                        ("recurrentgemma-2b", "precise"),
+                                        ("mamba2-370m", "precise"),
+                                        ("yi-9b", None)])
+def test_spec_serving_token_parity(arch, quant):
+    """Speculative serving == non-speculative greedy serving token-for-token
+    on a ragged mix with slot reuse, for packed DSBP and float engines."""
+    cfg = _cfg(arch).replace(quant=quant)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (l,))
+               for l in [5, 11, 8, 3, 14]]
+    method = "dsbp_ref" if quant else None
+    base = Engine(params, cfg,
+                  ServeConfig(max_len=64, batch_size=2, quant_method=method))
+    out_b = base.serve(prompts, max_new_tokens=6)
+    spec = Engine(base.params, cfg,
+                  ServeConfig(max_len=64, batch_size=2, quant_method=method,
+                              spec_k=3, spec_draft_bits=4))
+    out_s = spec.serve(prompts, max_new_tokens=6)
+    for i in out_b:
+        np.testing.assert_array_equal(out_b[i], out_s[i], err_msg=str(i))
+    st = spec.last_stats
+    assert st["spec_rounds"] <= base.last_stats["decode_steps"]
+    assert 1.0 <= st["mean_accepted"] <= 4.0
+    assert sum(st["accepted_hist"]) > 0 and st["accepted_hist"][0] == 0
+    assert len(st["slot_mean_accepted"]) == 2
+    assert st["decode_tokens"] == base.last_stats["decode_tokens"]
+
+
+def test_spec_serving_eos_truncates_mid_round():
+    """Accepted tokens past an EOS are dropped and the slot frees exactly
+    at the EOS — identical to the non-speculative early-termination path."""
+    cfg = _cfg("yi-9b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)) for l in [5, 11, 8]]
+    free_run = Engine(params, cfg, ServeConfig(max_len=64, batch_size=2)
+                      ).serve(prompts, max_new_tokens=6)
+    eos = int(free_run[0][2])
+    base = Engine(params, cfg,
+                  ServeConfig(max_len=64, batch_size=2, eos_id=eos))
+    out_b = base.serve(prompts, max_new_tokens=6)
+    spec = Engine(params, cfg,
+                  ServeConfig(max_len=64, batch_size=2, eos_id=eos,
+                              spec_k=3, spec_draft_bits=7))
+    out_s = spec.serve(prompts, max_new_tokens=6)
+    for i in out_b:
+        np.testing.assert_array_equal(out_b[i], out_s[i], err_msg=str(i))
+    assert out_s[0].tolist() == free_run[0][:3].tolist()  # stopped AT eos
+
+
+def test_spec_serving_respects_budgets_and_validation():
+    cfg = _cfg("yi-9b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    p = [rng.integers(0, cfg.vocab_size, (6,)),
+         rng.integers(0, cfg.vocab_size, (9,))]
+    eng = Engine(params, cfg, ServeConfig(max_len=64, batch_size=2, spec_k=2))
+    out = eng.serve([Request(uid="a", tokens=p[0], max_new_tokens=2),
+                     Request(uid="b", tokens=p[1], max_new_tokens=5)])
+    assert len(out["a"]) == 2 and len(out["b"]) == 5
+    with pytest.raises(ValueError):  # budget + spec headroom overflows cache
+        eng.serve([Request(uid="x", tokens=p[0], max_new_tokens=57)])
+    with pytest.raises(ValueError):  # greedy-only acceptance
+        Engine(params, cfg, ServeConfig(max_len=64, spec_k=2, temperature=1.0))
+    with pytest.raises(ValueError):  # verify must not wrap its own tokens
+        Engine(params, _cfg("mixtral-8x7b", window=2),
+               ServeConfig(max_len=64, spec_k=2))
+
+
+def test_spec_serving_per_layer_draft_bits_artifact():
+    """A calibration-priced per-layer draft-bits dict serves through the
+    scheduler with exact token parity (the DESIGN.md §10 pricing loop)."""
+    from repro.policy import calibrate, price_draft_bits, \
+        synthetic_calibration_batches
+
+    cfg = _cfg("yi-9b").replace(quant="precise")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rep = calibrate(params, cfg.replace(quant=None),
+                    synthetic_calibration_batches(cfg, 1))
+    bits, info = price_draft_bits(rep, "precise", bits_fine=6, bits_coarse=2,
+                                  budget_frac_fine=0.6)
+    assert set(bits.values()) <= {2, 6} and bits["default"] == 2
+    assert 0 < info["fine_flop_share"] <= 0.6
+    # highest-scored layer drafts fine
+    top = max(info["scores"], key=info["scores"].get)
+    assert bits[top] == 6
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (l,)) for l in [5, 9]]
+    base = Engine(params, cfg,
+                  ServeConfig(max_len=48, batch_size=2, quant_method="dsbp_ref"))
+    out_b = base.serve(prompts, max_new_tokens=5)
+    spec = Engine(base.params, cfg,
+                  ServeConfig(max_len=48, batch_size=2, quant_method="dsbp_ref",
+                              spec_k=2, spec_draft_bits=bits))
+    out_s = spec.serve(prompts, max_new_tokens=5)
+    for i in out_b:
+        np.testing.assert_array_equal(out_b[i], out_s[i], err_msg=str(i))
