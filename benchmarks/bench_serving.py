@@ -4,9 +4,30 @@ Reports, per pool size B in {1, 4, 8}: prefill tokens/s, decode tokens/s
 and slot occupancy for a ragged request mix (2 requests per slot, prompt
 lengths spread over [8, 24]), plus evidence that the jitted decode step
 donates the KV cache (buffers reused in place, not copied per token).
+
+``python -m benchmarks.bench_serving --mesh --json BENCH_sharded.json``
+runs the multi-device serving benchmark instead (DESIGN.md §11): the same
+ragged mix on a 1-device mesh vs the 8-device (data=2, model=4) simulated
+CPU mesh — per-device decode tok/s, collective bytes parsed from the
+compiled decode module, slot occupancy at both scales, token parity, and
+the no-relayout count.  Runs standalone (not via benchmarks.run) because
+the simulated device count must be fixed before jax initializes; when
+launched as __main__ it appends the 8-device flag to XLA_FLAGS itself
+unless the environment already pins a count.
 """
 from __future__ import annotations
 
+import os
+import sys
+
+if __name__ == "__main__" and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import json
 import time
 
 import numpy as np
@@ -17,7 +38,7 @@ from repro.configs import smoke_config
 from repro.models import model as M
 from repro.serve.engine import Engine, ServeConfig
 
-__all__ = ["bench_serving_ragged"]
+__all__ = ["bench_serving_ragged", "bench_serving_sharded"]
 
 BATCHES = (1, 4, 8)
 NEW_TOKENS = 16
@@ -74,3 +95,115 @@ def bench_serving_ragged():
             reuse = _cache_reuse_fraction(eng, cfg)
             parts.append(f"cache-donation reuse {reuse*100:.0f}%")
     return us_decode_step, " ; ".join(parts)
+
+
+def _decode_collectives(eng, cfg):
+    """Collective bytes/counts of the compiled sharded decode step, parsed
+    from its HLO (roofline.analysis.raw_costs)."""
+    from repro.roofline.analysis import raw_costs
+
+    B = eng.pool_size
+    pool = eng._shard_cache(M.init_cache(cfg, B, eng.scfg.max_len), B)
+    step = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    pos = jnp.zeros((B,), jnp.int32)
+    compiled = eng._decode.lower(eng.params, step, pool, pos).compile()
+    costs = raw_costs(compiled)
+    return {"coll_bytes": costs["coll_bytes"],
+            "coll_counts": costs["coll"]["counts"]}
+
+
+def _weight_transpose_count(mesh):
+    """No-relayout evidence: weight-sized transposes in the jaxpr of the
+    sharded fused GEMM, for both halves of the TP plan (must be 0)."""
+    from repro.core.packed import pack_weights_sharded
+    from repro.core.quantized import PRESETS
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    pw = pack_weights_sharded(w, PRESETS["precise"], mesh)
+    x = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    total = 0
+    for axes in (dict(k_axis=None, n_axis="model"),
+                 dict(k_axis="model", n_axis=None)):
+        total += kops.count_weight_transposes(
+            lambda x, pw: kops.dsbp_matmul_fused_sharded(
+                x, pw, mesh, batch_axis=None, **axes),
+            x, pw, min_size=w.size // 2)
+    return total
+
+
+def bench_serving_sharded():
+    """Serve the same ragged mix on a 1-device mesh and the full (2,4)
+    data x model mesh; record throughput, occupancy, collective traffic,
+    parity and the no-relayout count for check_sharded_gate.py."""
+    assert jax.device_count() >= 8, (
+        f"need 8 simulated devices, have {jax.device_count()} — set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax init")
+    cfg = smoke_config("yi-9b").replace(remat=False, quant="precise",
+                                        n_heads=8)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _ragged_requests(cfg, 16, seed=3)
+    record = {"devices": jax.device_count(), "new_tokens": NEW_TOKENS}
+    outs = {}
+    for tag, mesh_shape in (("mesh_1dev", (1, 1)), ("mesh_8dev", (2, 4))):
+        eng = Engine(params, cfg, ServeConfig(
+            max_len=64, mesh_shape=mesh_shape, per_device_batch_size=1))
+        n_dev = eng.mesh.size
+        eng.serve(reqs, max_new_tokens=2)  # warm: same mix, shapes compile
+        t0 = time.perf_counter()
+        outs[tag] = eng.serve(reqs, max_new_tokens=NEW_TOKENS)
+        dt = time.perf_counter() - t0
+        st = eng.last_stats
+        row = {
+            "mesh": list(mesh_shape),
+            "pool_size": eng.pool_size,
+            "decode_tps": st["decode_tokens"] / dt,
+            "per_device_decode_tps": st["decode_tokens"] / dt / n_dev,
+            "occupancy": st["occupancy"],
+        }
+        row.update(_decode_collectives(eng, cfg))
+        record[tag] = row
+        last_mesh = eng.mesh
+    record["parity"] = all(
+        np.array_equal(outs["mesh_1dev"][u], outs["mesh_8dev"][u])
+        for u in outs["mesh_1dev"])
+    record["weight_transposes"] = _weight_transpose_count(last_mesh)
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", action="store_true",
+                    help="run the multi-device serving benchmark on 8 "
+                         "simulated CPU devices (1-device vs (2,4) mesh)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result record as JSON (mesh mode: "
+                         "BENCH_sharded.json consumed by check_sharded_gate)")
+    args = ap.parse_args(argv)
+    if not args.mesh:
+        us, derived = bench_serving_ragged()
+        print(f"serving_ragged,{us:.1f},{derived}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump([{"name": "serving_ragged", "us_per_call": us,
+                            "derived": derived}], f, indent=2)
+        return
+    rec = bench_serving_sharded()
+    one, eight = rec["mesh_1dev"], rec["mesh_8dev"]
+    print(f"sharded serving: parity={rec['parity']} "
+          f"weight_transposes={rec['weight_transposes']}")
+    for tag, row in (("1dev", one), ("8dev", eight)):
+        print(f"  {tag}: pool {row['pool_size']} | "
+              f"{row['decode_tps']:.0f} dec tok/s "
+              f"({row['per_device_decode_tps']:.0f}/device) | "
+              f"occ {row['occupancy']*100:.0f}% | "
+              f"coll {row['coll_bytes']:.0f} B {row['coll_counts']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -58,6 +58,7 @@ __all__ = [
     "LAYOUT_VERSION",
     "to_kernel_layout",
     "draft_view",
+    "pack_weights_sharded",
     "QuantMethod",
     "register_quant_method",
     "get_quant_method",
@@ -248,6 +249,61 @@ def draft_view(pw: PackedDSBPWeight, draft_bits: int) -> PackedDSBPWeight:
     )
 
 
+def pack_weights_sharded(w, cfg, mesh, *, n_axis: str = "model"):
+    """Offline pack directly into per-shard kernel layouts (DESIGN.md §11).
+
+    Each device of ``mesh`` quantizes only its own N/s output columns of
+    ``w (..., K, N)`` under ``shard_map``, so the full-size quantized
+    container is never materialized on one device — the returned
+    :class:`PackedDSBPWeight` holds globally-shaped arrays whose shards
+    live where they will be consumed (``ka``/``kscale`` column shards,
+    ``tscale``/``bits`` row shards over the same ``n_axis``).
+
+    Bit-identical to pack-then-shard: with per-row weight scale
+    granularity (every PRESETS entry packs weights with
+    ``scale_granularity='row'``) the whole weight path — per-tensor scale,
+    group scales, bitwidth prediction, mantissa alignment — is independent
+    per output column, so packing a column shard equals slicing the global
+    pack (asserted in tests/test_sharded_serving.py).  Per-tensor weight
+    granularity couples the columns through the global max; that case (and
+    an indivisible N or a mesh without ``n_axis``) falls back to the
+    global :func:`~repro.core.quantized.pack_weights`.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from . import quantized as Q  # local import: packed stays dependency-light
+
+    if isinstance(cfg, str):
+        cfg = Q.PRESETS[cfg]
+    n = w.shape[-1]
+    nsz = mesh.shape[n_axis] if n_axis in mesh.axis_names else 0
+    if (not nsz or n % nsz
+            or cfg.weight_cfg.scale_granularity != "row"):
+        return Q.pack_weights(w, cfg)
+    lead = (None,) * (w.ndim - 2)
+
+    def local(wl):
+        pw = Q.pack_weights(wl, cfg)
+        return pw.ka, pw.kscale, pw.tscale, pw.bits
+
+    ka, kscale, tscale, bits = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(*lead, None, n_axis),),
+        out_specs=(
+            P(*lead, None, n_axis),   # ka     (..., K', N)
+            P(*lead, None, n_axis),   # kscale (..., n_g, N)
+            P(*lead, n_axis, None),   # tscale (..., N, 1) per-channel
+            P(*lead, n_axis, None),   # bits   (..., N, n_g)
+        ),
+    )(jnp.asarray(w))
+    return PackedDSBPWeight(
+        ka=ka, kscale=kscale, tscale=tscale, bits=bits,
+        k=w.shape[-2], n=n, group_size=cfg.weight_cfg.group_size, cfg=cfg,
+    )
+
+
 def key_entry_str(entry) -> str:
     """Stable string for one pytree key-path entry: dict key (DictKey),
     sequence index (SequenceKey), or attribute name (GetAttrKey — the
@@ -279,10 +335,15 @@ def tree_is_packed(tree) -> bool:
 class QuantMethod:
     """How a projection executes: pack its weight, and apply x @ w.
 
-    ``apply(w, x, cfg)`` computes the logical ``x (..., K) @ w (K, N)``;
-    ``w`` is either a raw array or a :class:`PackedDSBPWeight`, and ``cfg``
-    is the active :class:`QuantizedMatmulConfig` (None = no activation
-    quantization, i.e. weight-only consumption of packed weights).
+    ``apply(w, x, cfg, name=None)`` computes the logical
+    ``x (..., K) @ w (K, N)``; ``w`` is either a raw array or a
+    :class:`PackedDSBPWeight`, and ``cfg`` is the active
+    :class:`QuantizedMatmulConfig` (None = no activation quantization,
+    i.e. weight-only consumption of packed weights).  ``name`` is the
+    projection's parameter name ('wq', 'wo', ...) when the call site knows
+    it — the sharded method keys the tensor-parallel plan
+    (``parallel.context.tp_axes_for``) off it; every other method ignores
+    it.
 
     The base class owns the common dispatch — packed weights without a cfg
     dequantize (weight-only), raw weights without a cfg run the plain
@@ -296,19 +357,19 @@ class QuantMethod:
         del cfg
         return w
 
-    def apply(self, w, x, cfg):
+    def apply(self, w, x, cfg, name=None):
         if isinstance(w, PackedDSBPWeight):
             if cfg is None:
                 return _einsum(w.dequantize(x.dtype), x)
-            return self._apply_packed(w, x, cfg)
+            return self._apply_packed(w, x, cfg, name=name)
         if cfg is None:
             return _einsum(w, x)
-        return self._apply_raw(w, x, cfg)
+        return self._apply_raw(w, x, cfg, name=name)
 
-    def _apply_packed(self, pw, x, cfg):
+    def _apply_packed(self, pw, x, cfg, name=None):
         raise NotImplementedError
 
-    def _apply_raw(self, w, x, cfg):
+    def _apply_raw(self, w, x, cfg, name=None):
         raise NotImplementedError
 
 
@@ -344,8 +405,8 @@ class DenseBF16Method(QuantMethod):
 
     name = "dense_bf16"
 
-    def apply(self, w, x, cfg):
-        del cfg
+    def apply(self, w, x, cfg, name=None):
+        del cfg, name
         if isinstance(w, PackedDSBPWeight):
             w = w.dequantize(x.dtype)
         return _einsum(w, x)
@@ -370,12 +431,12 @@ class DSBPRefMethod(QuantMethod):
 
         return Q.pack_weights(w, cfg)
 
-    def _apply_packed(self, pw, x, cfg):
+    def _apply_packed(self, pw, x, cfg, name=None):
         from . import quantized as Q
 
         return Q.packed_matmul(x, pw, input_cfg=cfg.input_cfg).astype(x.dtype)
 
-    def _apply_raw(self, w, x, cfg):
+    def _apply_raw(self, w, x, cfg, name=None):
         from . import quantized as Q
 
         return Q.dsbp_matmul_ste(x, w, cfg).astype(x.dtype)
@@ -399,14 +460,14 @@ class DSBPKernelMethod(QuantMethod):
 
         return Q.pack_weights(w, cfg)
 
-    def _apply_packed(self, pw, x, cfg):
+    def _apply_packed(self, pw, x, cfg, name=None):
         from repro.kernels import ops as kops  # local import: optional dep
 
         return kops.dsbp_matmul_packed(
             x, pw, input_cfg=cfg.input_cfg
         ).astype(x.dtype)
 
-    def _apply_raw(self, w, x, cfg):
+    def _apply_raw(self, w, x, cfg, name=None):
         from repro.kernels import ops as kops
 
         return kops.dsbp_matmul_ste(x, w, cfg).astype(x.dtype)
@@ -435,14 +496,48 @@ class DSBPFusedMethod(QuantMethod):
 
         return Q.pack_weights(w, cfg)
 
-    def _apply_packed(self, pw, x, cfg):
+    def _apply_packed(self, pw, x, cfg, name=None):
         from repro.kernels import ops as kops  # local import: optional dep
 
         return kops.dsbp_matmul_fused(
             x, pw, input_cfg=cfg.input_cfg
         ).astype(x.dtype)
 
-    def _apply_raw(self, w, x, cfg):
+    def _apply_raw(self, w, x, cfg, name=None):
         from repro.kernels import ops as kops
 
         return kops.dsbp_matmul_fused_ste(x, w, cfg).astype(x.dtype)
+
+
+@register_quant_method
+class DSBPFusedShardedMethod(DSBPFusedMethod):
+    """The fused one-pass kernel under ``shard_map`` (DESIGN.md §11).
+
+    When a sharding context is active (``parallel.context.sharding_ctx`` —
+    the multi-device Engine traces prefill/decode inside one), each packed
+    projection runs :func:`repro.kernels.ops.dsbp_matmul_fused_sharded`
+    with the Megatron split from ``tp_axes_for(name)``: wq/wk/wv/w1/w3-
+    style projections column-parallel over their N shards (no collective),
+    wo/w2/w_out-style row-parallel over group-aligned K shards with ONE
+    ``psum`` folded after the in-kernel scale division — bit-exact vs the
+    single-device path, so a mesh can never change served tokens.  Token
+    rows additionally shard over the context's batch axes (data
+    parallelism).  Without a context (or for an unnamed projection on a
+    1-axis mesh) this degrades exactly to 'dsbp_fused'.
+    """
+
+    name = "dsbp_fused_sharded"
+
+    def _apply_packed(self, pw, x, cfg, name=None):
+        from repro.parallel import context as PC  # local: avoid import cycle
+
+        ctx = PC.active_ctx()
+        if ctx is None or getattr(pw.ka, "ndim", 2) != 2:
+            return super()._apply_packed(pw, x, cfg, name=name)
+        from repro.kernels import ops as kops
+
+        k_axis, n_axis = PC.tp_axes_for(name)
+        return kops.dsbp_matmul_fused_sharded(
+            x, pw, ctx["mesh"], input_cfg=cfg.input_cfg,
+            batch_axis=ctx["batch_axes"], k_axis=k_axis, n_axis=n_axis,
+        ).astype(x.dtype)

@@ -28,6 +28,7 @@ serving path performs zero per-call relayout.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +40,7 @@ from .fp8_quant_align import quant_align_tile
 
 GROUP = 64
 
-__all__ = ["dsbp_fused_kernel_call", "GROUP"]
+__all__ = ["dsbp_fused_kernel_call", "dsbp_fused_sharded_call", "GROUP"]
 
 
 def _kernel(x_ref, ts_ref, aw_ref, sw_ref, tw_ref, o_ref, *,
@@ -129,3 +130,100 @@ def dsbp_fused_kernel_call(
         interpret=interpret,
     )(x, ts, aw, sw, tw)
     return y[:m] if pad_m else y
+
+
+def dsbp_fused_sharded_call(
+    x: jax.Array,
+    ts: jax.Array,
+    aw: jax.Array,
+    sw: jax.Array,
+    tw: jax.Array,
+    cfg: DSBPConfig,
+    mesh,
+    *,
+    batch_axis=None,
+    k_axis: str | None = None,
+    n_axis: str | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int | None = None,
+    interpret: bool = True,
+):
+    """The one-pass DSBP GEMM under ``shard_map``, collective folded in
+    (DESIGN.md §11).
+
+    Operand layout mirrors :func:`dsbp_fused_kernel_call`; the extra axis
+    arguments name mesh axes:
+
+      batch_axis  shards the M (token) rows of ``x`` / ``y`` — pure data
+                  parallelism, no collective;
+      n_axis      shards the output dim: ``aw (K', N/s)`` / ``kscale`` /
+                  ``tw`` column shards, each device runs the full-K fused
+                  GEMM for its columns (column-parallel TP, no collective);
+      k_axis      shards the contraction: ``x (M, K'/s)`` against
+                  ``aw (K'/s, N)`` row shards — each device quantizes and
+                  aligns only its own K-slice (group boundaries are
+                  shard-local because shards are group-aligned) and ONE
+                  ``jax.lax.psum`` folds the partial products AFTER the
+                  in-kernel scale division (row-parallel TP).
+
+    The psum is bit-exact vs the single-device reduction under the §8
+    exactness argument: every local partial is an exact multiple of the
+    common pow2 granularity (integer mantissa products x pow2 folded
+    scales), so summing shards reassociates an exact sum.  ``ts`` is the
+    GLOBAL power-of-two input scale — computed over the full activation
+    before sharding and replicated, so per-device quantization is
+    bit-identical to the unsharded input path.
+
+    Callers guarantee divisibility: M by batch_axis, N by n_axis, and K' by
+    ``GROUP * size(k_axis)`` (shards must be group-aligned).  ``ops.
+    dsbp_matmul_fused_sharded`` checks and falls back to replication per
+    axis, mirroring the sharding-rule behavior (parallel/sharding.py).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m, k = x.shape
+    n = aw.shape[1]
+
+    def _sz(ax):  # axis (or axis tuple, for batch) -> total mesh extent
+        if not ax:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        return math.prod(mesh.shape[a] for a in axes)
+
+    m_l, n_l, k_l = m // _sz(batch_axis), n // _sz(n_axis), k // _sz(k_axis)
+    assert m_l * _sz(batch_axis) == m, (m, batch_axis)
+    assert n_l * _sz(n_axis) == n, (n, n_axis)
+    assert k_l * _sz(k_axis) == k and k_l % GROUP == 0, (k, k_axis, k_l)
+    # block sizes must tile the LOCAL shard
+    bn_l = min(bn, n_l)
+    if n_l % bn_l:
+        bn_l = n_l
+    bk_l = None if bk is None else min(bk, k_l)
+    if bk_l is not None and (k_l % bk_l or bk_l % GROUP):
+        bk_l = k_l
+    ts = jnp.asarray(ts, jnp.float32).reshape(1, 1)
+
+    def local(xl, tsl, awl, swl, twl):
+        y = dsbp_fused_kernel_call(
+            xl, tsl, awl, swl, twl, cfg,
+            bm=bm, bn=bn_l, bk=bk_l, interpret=interpret,
+        )
+        if k_axis is not None:
+            y = jax.lax.psum(y, k_axis)  # fold the contraction partials
+        return y
+
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axis, k_axis),   # x
+            P(None, None),           # ts: replicated global input scale
+            P(k_axis, n_axis),       # ka
+            P(k_axis, n_axis),       # kscale (ng rows follow the K shards)
+            P(None, n_axis),         # tscale
+        ),
+        out_specs=P(batch_axis, n_axis),
+        check_rep=False,  # jit-wrapped pallas_call defeats rep inference
+    )(x, ts, aw, sw, tw)

@@ -20,6 +20,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dsbp import DSBPConfig
 from repro.core.formats import per_tensor_scale
@@ -36,6 +37,7 @@ __all__ = [
     "dsbp_matmul",
     "dsbp_matmul_packed",
     "dsbp_matmul_fused",
+    "dsbp_matmul_fused_sharded",
     "dsbp_matmul_ste",
     "dsbp_matmul_fused_ste",
     "fp8_quant_align",
@@ -177,6 +179,89 @@ def dsbp_matmul_fused(
     ).astype(jnp.float32)
     y = _df.dsbp_fused_kernel_call(
         xm, ts, pw.ka, pw.kscale, tw, icfg,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y.reshape(*batch, pw.n)
+
+
+def dsbp_matmul_fused_sharded(
+    x: jax.Array,
+    pw: PackedDSBPWeight,
+    mesh,
+    input_cfg: DSBPConfig | None = None,
+    *,
+    batch_axis=None,
+    k_axis: str | None = None,
+    n_axis: str | None = None,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int | None = None,
+):
+    """Fused DSBP GEMM under shard_map: x (..., K) @ packed(K, N) -> (..., N).
+
+    The multi-device serving entry (DESIGN.md §11).  Same numerics contract
+    as :func:`dsbp_matmul_fused` — bit-exact vs ``dsbp_matmul_ref`` — on
+    ANY mesh, because: the per-tensor input scale is computed globally
+    before the shard_map (per-device quantization is then bit-identical to
+    the unsharded input path), K shards are group-aligned so group
+    boundaries never straddle devices, and the row-parallel ``psum``
+    reassociates an exact pow2-granular sum (kernels/dsbp_fused.py).
+
+    Axis arguments name mesh axes (``parallel.context.tp_axes_for`` gives
+    the per-projection plan); each is dropped — replicating that dim, the
+    same fallback contract as ``parallel/sharding.py`` — when the dim does
+    not divide the axis (K' additionally needs group-aligned shards) or the
+    mesh lacks the axis.  ``batch_axis`` may be a tuple (('pod','data')).
+    ``mesh=None`` falls back to the single-device fused path.
+    """
+    if mesh is None:
+        return dsbp_matmul_fused(
+            x, pw, input_cfg=input_cfg, interpret=interpret,
+            bm=bm, bn=bn, bk=bk,
+        )
+    if interpret is None:
+        interpret = interpret_default()
+    _check_packed_2d(pw, x, "dsbp_matmul_fused_sharded")
+    batch = x.shape[:-1]
+    icfg = input_cfg if input_cfg is not None else pw.cfg.input_cfg
+    xm = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if pw.padded_k != pw.k:  # mirror the zero lanes the weights packed with
+        xm = jnp.pad(xm, ((0, 0), (0, pw.padded_k - pw.k)))
+    m = xm.shape[0]
+
+    def axis_size(ax):
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a not in mesh.axis_names for a in axes):
+            return None
+        return int(np.prod([mesh.shape[a] for a in axes]))
+
+    bsz = axis_size(batch_axis) if batch_axis else None
+    if not bsz or m % bsz:
+        batch_axis = None
+    nsz = axis_size(n_axis) if n_axis else None
+    if not nsz or pw.n % nsz:
+        n_axis = None
+    ksz = axis_size(k_axis) if k_axis else None
+    if not ksz or pw.padded_k % (_df.GROUP * ksz):
+        k_axis = None
+    if k_axis is not None and k_axis == n_axis:
+        n_axis = None  # one axis cannot shard both operand dims
+    if batch_axis is not None and k_axis is not None and (
+        k_axis == batch_axis
+        or (not isinstance(batch_axis, str) and k_axis in batch_axis)
+    ):
+        batch_axis = None  # x cannot shard M and K over the same axis
+
+    # global pow2 input scale, replicated into every shard's kernel call
+    ts = per_tensor_scale(xm, icfg.fmt)
+    tsw = jnp.asarray(pw.tscale)
+    tw = jnp.broadcast_to(
+        tsw.reshape(1, -1) if tsw.ndim else tsw, (1, pw.n)
+    ).astype(jnp.float32)
+    y = _df.dsbp_fused_sharded_call(
+        xm, ts, pw.ka, pw.kscale, tw, icfg, mesh,
+        batch_axis=batch_axis, k_axis=k_axis, n_axis=n_axis,
         bm=bm, bn=bn, bk=bk, interpret=interpret,
     )
     return y.reshape(*batch, pw.n)

@@ -1,12 +1,19 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# respect pre-set flags (multi-device CPU tests export their own device
+# count before importing this module); only force the 512 placeholder
+# devices when the caller did not already pick a count
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST precede any other import (jax locks the device
-count at first init): the dry-run — and only the dry-run — sees 512
-placeholder CPU devices so the production meshes can build.
+The lines above MUST precede any other import (jax locks the device
+count at first init): the dry-run sees 512 placeholder CPU devices so the
+production meshes can build — unless the process pre-set a device count in
+XLA_FLAGS, which is appended to, never overwritten.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
@@ -54,8 +61,11 @@ def packed_like(params_sds):
 
     def pack(path, leaf):
         name = str(getattr(path[-1], "key", ""))
-        if name not in _GATHERED or name == "router" or leaf.ndim < 2 or \
-                leaf.shape[-2] < 64:
+        # router and lm_head are in the TP plan (_GATHERED) but the engine
+        # never packs them (serve.engine.PROJ_NAMES): router stays fp, the
+        # head is the tied/vocab projection
+        if name not in _GATHERED or name in ("router", "lm_head") or \
+                leaf.ndim < 2 or leaf.shape[-2] < 64:
             return leaf
         *lead, k, n = leaf.shape
         ng = -(-k // 64)

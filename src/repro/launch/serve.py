@@ -12,6 +12,14 @@ K tokens per slot with the MSB-slice view of the packed weights
 (``--spec-draft-bits``), verifies them in one batched target forward and
 commits the longest matching greedy prefix.  Token-for-token identical to
 the non-speculative stream; implies the slot-scheduler (--ragged) path.
+
+``--mesh DxM[xE]`` serves multi-device (DESIGN.md §11): a (data, model[,
+expert]) mesh — weights pack straight into per-shard kernel layouts, every
+projection runs the fused GEMM under shard_map (bit-exact vs one device),
+KV caches shard over the batch axes.  With ``--per-device-batch B`` the
+slot pool scales to ``mesh.size * B`` slots instead of the flat --batch.
+On CPU, simulate devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -43,6 +51,18 @@ def main():
                          "(0 = off; implies the --ragged scheduler path)")
     ap.add_argument("--spec-draft-bits", type=int, default=4,
                     help="aligned-mantissa bits of the MSB-slice draft view")
+    ap.add_argument("--mesh", default=None, metavar="DxM[xE]",
+                    help="serve on a (data, model[, expert]) device mesh, "
+                         "e.g. '2x4': sharded packed containers + fused "
+                         "GEMM under shard_map, bit-exact vs one device "
+                         "(DESIGN.md §11).  Needs prod(mesh) <= "
+                         "jax.device_count(); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N before "
+                         "launch")
+    ap.add_argument("--per-device-batch", type=int, default=None,
+                    help="scale the slot pool to mesh.size * B slots "
+                         "(device-scaled continuous batching; default: "
+                         "keep the flat --batch pool)")
     args = ap.parse_args()
     if args.spec_k:
         args.ragged = True  # speculation lives in the serve() scheduler
@@ -53,10 +73,20 @@ def main():
         cfg = cfg.replace(quant=args.preset)
     params = M.init(jax.random.PRNGKey(0), cfg)
 
+    mesh_shape = mesh_axes = None
+    if args.mesh:
+        mesh_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        mesh_axes = ("data", "model", "expert")[: len(mesh_shape)]
     eng = Engine(params, cfg, ServeConfig(
         max_len=args.prompt_len + args.new_tokens + args.spec_k + 8,
         batch_size=args.batch, spec_k=args.spec_k,
-        spec_draft_bits=args.spec_draft_bits))
+        spec_draft_bits=args.spec_draft_bits,
+        mesh_shape=mesh_shape,
+        mesh_axes=mesh_axes or ("data", "model"),
+        per_device_batch_size=args.per_device_batch))
+    if eng.mesh is not None:
+        print(f"mesh {dict(eng.mesh.shape)} over {eng.mesh.size} devices, "
+              f"slot pool {eng.pool_size}")
     if eng.pack_report:
         rep = eng.pack_report
         print(f"packed weights: {rep['raw_nbytes']/1e6:.1f} -> "

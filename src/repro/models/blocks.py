@@ -76,10 +76,10 @@ def init_layer(key, cfg, kind: str, dtype):
 # ---------------- ffn ----------------
 
 def _ffn(params, x, quant):
-    h1 = dense(params["w1"], x, quant)
-    h3 = dense(params["w3"], x, quant)
+    h1 = dense(params["w1"], x, quant, name="w1")
+    h3 = dense(params["w3"], x, quant, name="w3")
     h = jax.nn.silu(h1.astype(jnp.float32)).astype(x.dtype) * h3
-    return dense(params["w2"], h, quant)
+    return dense(params["w2"], h, quant, name="w2")
 
 
 def _mlp_part(params, x, cfg, quant, no_drop=False):
@@ -94,9 +94,9 @@ def _mlp_part(params, x, cfg, quant, no_drop=False):
 def _qkv(params, y, cfg, quant, positions):
     b, s, _ = y.shape
     dh = cfg.d_head
-    q = dense(params["wq"], y, quant).reshape(b, s, cfg.n_heads, dh)
-    k = dense(params["wk"], y, quant).reshape(b, s, cfg.n_kv_heads, dh)
-    v = dense(params["wv"], y, quant).reshape(b, s, cfg.n_kv_heads, dh)
+    q = dense(params["wq"], y, quant, name="wq").reshape(b, s, cfg.n_heads, dh)
+    k = dense(params["wk"], y, quant, name="wk").reshape(b, s, cfg.n_kv_heads, dh)
+    v = dense(params["wv"], y, quant, name="wv").reshape(b, s, cfg.n_kv_heads, dh)
     q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
     k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
     return q, k, v.transpose(0, 2, 1, 3)
@@ -109,7 +109,7 @@ def _attn_seq(params, x, cfg, kind, quant, positions, lengths=None):
     o = blockwise_attention(q, k, v, causal=True, window=window, kv_lens=lengths)
     b, s, _ = x.shape
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
-    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
     return x, (k, v)
 
 
@@ -217,7 +217,7 @@ def _attn_decode(params, x, cfg, kind, quant, cache, pos):
     else:
         o = decode_attention(q, ck, cv, posb + 1, window=0)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
-    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
     return x, {"k": ck, "v": cv}
 
 
@@ -245,7 +245,7 @@ def _attn_verify(params, x, cfg, kind, quant, cache, posb):
     window = cfg.window if kind == "attn_local" else 0
     o = verify_attention(q, k, v, cache["k"], cache["v"], posb, window=window)
     o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
-    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
     s_c = cache["k"].shape[2]
     slots = positions % s_c  # distinct while T <= S_c (engine contract)
     bidx = jnp.arange(b)[:, None]

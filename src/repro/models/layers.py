@@ -83,7 +83,8 @@ class Quant:
         return self.cfg
 
 
-def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
+def dense(w, x: jax.Array, quant: Quant | None = None,
+          name: str | None = None) -> jax.Array:
     """x (..., d_in) @ w (d_in, d_out) through the active quant method.
 
     ``w`` is a raw array or a :class:`PackedDSBPWeight` (offline-quantized
@@ -97,9 +98,15 @@ def dense(w, x: jax.Array, quant: Quant | None = None) -> jax.Array:
       re-quantization), raw weights the QAT STE path.
     * no quant context -> packed weights dequantize (weight-only
       quantization); raw weights are the plain einsum baseline.
+
+    ``name`` is the projection's parameter name ('wq', 'wo', ...) — the
+    same key the sharding rules bind to.  Call sites pass it so the
+    'dsbp_fused_sharded' method can pick the projection's tensor-parallel
+    split (column vs row parallel, ``parallel.context.tp_axes_for``);
+    every other method ignores it.
     """
     if quant is not None and quant:
-        return quant.method.apply(w, x, quant.cfg_for(w))
+        return quant.method.apply(w, x, quant.cfg_for(w), name=name)
     if isinstance(w, PackedDSBPWeight):
         return get_quant_method("dsbp_ref").apply(w, x, None)
     return jnp.einsum("...k,kn->...n", x, w)

@@ -94,7 +94,10 @@ def _head(params, x, cfg):
     The last dim is ``padded_vocab_size`` for text heads and K stacked
     blocks of that width for the audio-codebooks frontend — ``col % vp < v``
     masks the pad rows of every block (identity modulo for text)."""
+    from repro.parallel.context import constrain  # no-op outside sharding_ctx
+
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    w = constrain(w, None, "model")  # vocab-sharded head (_GATHERED rule)
     logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
     vp, v = cfg.padded_vocab_size, cfg.vocab_size
     if vp != v:

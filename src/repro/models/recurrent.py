@@ -103,8 +103,9 @@ def rglru_block(params, x, cfg, quant: Quant | None = None, state=None,
     right-padded rows — pad steps become identity transitions (a=1, input 0)
     so the carried h is each row's state at its true last token.
     """
-    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
-    u = dense(params["w_in"], x, quant)
+    gate = jax.nn.gelu(
+        dense(params["w_gate"], x, quant, name="w_gate").astype(jnp.float32))
+    u = dense(params["w_in"], x, quant, name="w_in")
     conv_state = None if state is None else state["conv"]
     u, new_conv = causal_conv1d(params["conv_w"], u, conv_state,
                                 lengths=lengths)
@@ -124,7 +125,8 @@ def rglru_block(params, x, cfg, quant: Quant | None = None, state=None,
 
     _, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
     y, h_last = hh.astype(u.dtype), hh[:, -1]
-    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
+    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype),
+                quant, name="w_out")
     return out, {"h": h_last, "conv": new_conv}
 
 
@@ -156,8 +158,9 @@ def rglru_verify(params, x, cfg, quant: Quant | None = None, state=None):
     Returns (y (B, T, d), new_state, steps) with ``steps`` the per-step
     states {'h': (B, T, r) f32, 'conv': (B, T, K-1, r)}.
     """
-    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
-    u_in = dense(params["w_in"], x, quant)
+    gate = jax.nn.gelu(
+        dense(params["w_gate"], x, quant, name="w_gate").astype(jnp.float32))
+    u_in = dense(params["w_in"], x, quant, name="w_in")
     u, _ = causal_conv1d(params["conv_w"], u_in, state["conv"])
     a, b = _gates(params, u)  # (B, T, r) f32
 
@@ -173,7 +176,7 @@ def rglru_verify(params, x, cfg, quant: Quant | None = None, state=None):
     hs = hs.swapaxes(0, 1)  # (B, T, r)
     y = hs.astype(u.dtype)
     out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype),
-                quant)
+                quant, name="w_out")
     # conv contexts gather from the PRE-conv inputs — the values a decode
     # step's causal_conv1d carries forward
     conv_steps = conv_states_per_step(state["conv"], u_in)
@@ -184,13 +187,15 @@ def rglru_verify(params, x, cfg, quant: Quant | None = None, state=None):
 
 def rglru_decode_step(params, x, state, cfg, quant: Quant | None = None):
     """x: (B, 1, d); state: {'h': (B, r), 'conv': (B, K-1, r)}."""
-    gate = jax.nn.gelu(dense(params["w_gate"], x, quant).astype(jnp.float32))
-    u = dense(params["w_in"], x, quant)
+    gate = jax.nn.gelu(
+        dense(params["w_gate"], x, quant, name="w_gate").astype(jnp.float32))
+    u = dense(params["w_in"], x, quant, name="w_in")
     u, new_conv = causal_conv1d(params["conv_w"], u, state["conv"])
     a, b = _gates(params, u)  # (B, 1, r)
     h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
     y = h[:, None].astype(u.dtype)
-    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype), quant)
+    out = dense(params["w_out"], (y.astype(jnp.float32) * gate).astype(x.dtype),
+                quant, name="w_out")
     return out, {"h": h, "conv": new_conv}
 
 

@@ -141,7 +141,7 @@ def ssd_block(params, x, cfg, quant: Quant | None = None, state=None,
     state at its true last token."""
     din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
     hp = cfg.ssm_headdim
-    zxbcdt = dense(params["w_in"], x, quant)
+    zxbcdt = dense(params["w_in"], x, quant, name="w_in")
     z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
     conv_state = None if state is None else state["conv"]
@@ -161,7 +161,7 @@ def ssd_block(params, x, cfg, quant: Quant | None = None, state=None,
     y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(*xs.shape[:-1], din)
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    out = dense(params["w_out"], y.astype(x.dtype), quant, name="w_out")
     return out, {"h": h_last, "conv": new_conv}
 
 
@@ -169,7 +169,7 @@ def ssd_decode_step(params, x, state, cfg, quant: Quant | None = None):
     """Single-token SSM recurrence. x: (B, 1, d)."""
     din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
     hp = cfg.ssm_headdim
-    zxbcdt = dense(params["w_in"], x, quant)
+    zxbcdt = dense(params["w_in"], x, quant, name="w_in")
     z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
     conv_out, new_conv = causal_conv1d(params["conv_w"], conv_in, state["conv"])
@@ -185,7 +185,7 @@ def ssd_decode_step(params, x, state, cfg, quant: Quant | None = None):
     y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h)
     y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(-1, 1, din) * jax.nn.silu(z.astype(jnp.float32))
-    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    out = dense(params["w_out"], y.astype(x.dtype), quant, name="w_out")
     return out, {"h": h, "conv": new_conv}
 
 
@@ -204,7 +204,7 @@ def ssd_verify(params, x, cfg, quant: Quant | None = None, state=None):
     """
     din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssd_heads
     hp = cfg.ssm_headdim
-    zxbcdt = dense(params["w_in"], x, quant)
+    zxbcdt = dense(params["w_in"], x, quant, name="w_in")
     z, xs, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
     conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
     conv_out, _ = causal_conv1d(params["conv_w"], conv_in, state["conv"])
@@ -231,7 +231,7 @@ def ssd_verify(params, x, cfg, quant: Quant | None = None, state=None):
     y = jnp.einsum("btn,bthpn->bthp", cmat, hs)
     y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(*xs.shape[:-1], din) * jax.nn.silu(z.astype(jnp.float32))
-    out = dense(params["w_out"], y.astype(x.dtype), quant)
+    out = dense(params["w_out"], y.astype(x.dtype), quant, name="w_out")
     steps = {"h": hs, "conv": conv_steps}
     new_state = {"h": hs[:, -1], "conv": conv_steps[:, -1]}
     return out, new_state, steps

@@ -18,15 +18,23 @@ import contextvars
 import os
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.packed import key_entry_str
 
-__all__ = ["sharding_ctx", "constrain", "gather_unit_params", "anchor_batch"]
+__all__ = ["sharding_ctx", "constrain", "gather_unit_params", "anchor_batch",
+           "active_ctx", "tp_axes_for"]
 
 _CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh_ctx", default=None)
 
-# gathered (TP-only) specs per weight name for trailing dims
+# gathered (TP-only) specs per weight name for trailing dims.  This table
+# doubles as THE tensor-parallel plan: entry (k_axis, n_axis) says which
+# mesh axis shards a projection's reduction / output dim, so wq/wk/wv/w1/w3
+# are column-parallel (N over 'model', no collective) and wo/w2/w_out are
+# row-parallel (K over 'model', partial outputs folded with one psum) — the
+# Megatron split the sharded fused GEMM executes under shard_map
+# (DESIGN.md §11).
 _GATHERED = {
     "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
     "wo": ("model", None),
@@ -34,7 +42,24 @@ _GATHERED = {
     "w_in": (None, "model"), "w_gate": (None, "model"), "w_out": ("model", None),
     "wa": (None, "model"), "wx": (None, "model"),
     "router": (None, None),
+    "lm_head": (None, "model"),
 }
+
+
+def active_ctx() -> dict | None:
+    """The active sharding context ({mesh, batch_axes, gather}) or None.
+
+    Read at trace time by the 'dsbp_fused_sharded' quant method to decide
+    the shard_map specs of each projection's fused GEMM."""
+    return _CTX.get()
+
+
+def tp_axes_for(name: str | None) -> tuple[str | None, str | None]:
+    """(k_axis, n_axis) of one projection under the TP plan; (None, None)
+    for unknown / unnamed projections (the GEMM then runs replicated)."""
+    if name is None:
+        return (None, None)
+    return _GATHERED.get(name, (None, None))
 
 
 @contextlib.contextmanager
@@ -52,8 +77,6 @@ def sharding_ctx(mesh: Mesh, batch_axes: tuple[str, ...], gather: bool = True):
 
 
 def _mesh_fits(mesh, dim, axis):
-    import numpy as np
-
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     return dim % int(np.prod([mesh.shape[a] for a in axes])) == 0
 

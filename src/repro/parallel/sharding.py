@@ -22,11 +22,25 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "named", "batch_axes"]
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "serve_pspecs",
+           "named", "batch_axes"]
 
 
 def batch_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _expert_axis(mesh: Mesh, names, leaf) -> str | None:
+    """'expert' when the mesh carries the axis, the leaf belongs to a MoE
+    expert stack (moe/w1|w2|w3 with a leading expert dim) and the expert
+    count divides — else None (replicated lead, the existing behavior)."""
+    if "expert" not in mesh.axis_names or "moe" not in names:
+        return None
+    if leaf.ndim < 3:
+        return None
+    stacked = "units" in names
+    e = leaf.shape[1] if stacked else leaf.shape[0]
+    return "expert" if e % mesh.shape["expert"] == 0 else None
 
 
 def _fits(dim: int, mesh: Mesh, axes) -> bool:
@@ -64,17 +78,24 @@ def _param_rule(path, leaf, mesh: Mesh):
     shape = leaf.shape[1:] if stacked else leaf.shape
     lead = (None,) if stacked else ()
 
-    if name in ("ka", "kscale", "tscale") and len(names) >= 2 and names[-2] in _IN_OUT:
+    if name in ("ka", "kscale", "tscale", "bits") and len(names) >= 2 \
+            and names[-2] in _IN_OUT:
         # DSBP-packed projection, kernel layout (DESIGN.md §8): ka (..., K',
-        # N_out) int8; kscale (..., ng, N); tscale (..., N, 1).  N_out ->
-        # 'model' (TP), the reduction dims K'/ng -> 'data' (FSDP storage)
+        # N_out) int8; kscale (..., ng, N); tscale (..., N, 1); bits
+        # (..., N, n_g).  N_out -> 'model' (TP), the reduction dims K'/ng ->
+        # 'data' (FSDP storage); MoE expert containers additionally shard
+        # their leading expert dim over 'expert' when the mesh carries one.
         full = leaf.shape
         spec = [None] * len(full)
         if name in ("ka", "kscale") and len(full) >= 2:
             spec[-2] = "data" if _fits(full[-2], mesh, "data") else None
             spec[-1] = "model" if _fits(full[-1], mesh, "model") else None
-        elif name == "tscale" and len(full) >= 2:
+        elif name in ("tscale", "bits") and len(full) >= 2:
+            # per-output-column metadata: N is dim -2
             spec[-2] = "model" if _fits(full[-2], mesh, "model") else None
+        ea = _expert_axis(mesh, names, leaf)
+        if ea is not None and len(full) >= 3:
+            spec[1 if "units" in names else 0] = ea
         return P(*spec)
 
     if name == "embed":
@@ -84,7 +105,7 @@ def _param_rule(path, leaf, mesh: Mesh):
         if len(shape) == 3:  # MoE experts (E, d_in, d_out)
             a = ia if ia and _fits(shape[1], mesh, ia) else None
             b = oa if oa and _fits(shape[2], mesh, oa) else None
-            spec = P(None, a, b)
+            spec = P(_expert_axis(mesh, names, leaf), a, b)
         else:
             spec = _spec2d(shape, mesh, ia, oa)
     elif name == "conv_w":  # (K, width)
@@ -162,6 +183,70 @@ def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True
         return P(*lead, *spec)
 
     return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+_GROUP = 64  # core.dsbp group size (kept in sync with kernels.dsbp_fused.GROUP)
+
+
+def serve_pspecs(params, mesh: Mesh):
+    """Compute-layout specs for multi-device *serving* (DESIGN.md §11).
+
+    Unlike :func:`param_pspecs` (FSDP storage: reduction dims sharded over
+    'data', re-gathered at use), this places every projection exactly as
+    its shard_map GEMM consumes it — the Megatron split from
+    ``parallel.context.tp_axes_for``: ka/kscale column shards over the
+    plan's n_axis (wq/wk/wv/w1/w3...), group-aligned K-row shards over the
+    plan's k_axis (wo/w2/w_out), tscale/bits row shards over n_axis — so
+    decode moves ZERO weight bytes per call (the only collective left is
+    the row-parallel psum).  Per-axis divisibility fallback mirrors
+    ``ops.dsbp_matmul_fused_sharded`` exactly (K additionally needs
+    group-aligned shards), so storage always equals the compute-time spec.
+    MoE expert stacks keep their 'expert' lead-dim rule.  Everything that
+    is not a planned projection (embed, norms, router, vectors) replicates.
+    """
+    from repro.core.packed import key_entry_str
+    from repro.parallel.context import tp_axes_for
+
+    def fit(ax, dim, group_aligned=False):
+        if not ax or ax not in mesh.axis_names:
+            return None
+        size = mesh.shape[ax]
+        if group_aligned:
+            return ax if dim % (_GROUP * size) == 0 else None
+        return ax if dim % size == 0 else None
+
+    def rule(path, leaf):
+        names = [key_entry_str(p) for p in path]
+        name = names[-1]
+        full = leaf.shape
+        if name in ("ka", "kscale", "tscale", "bits") and len(names) >= 2 \
+                and len(full) >= 2:
+            ka_ax, n_ax = tp_axes_for(names[-2])
+            spec = [None] * len(full)
+            if name == "ka":
+                spec[-2] = fit(ka_ax, full[-2], group_aligned=True)
+                spec[-1] = fit(n_ax, full[-1])
+            elif name == "kscale":  # ng rows follow the group-aligned K shards
+                spec[-2] = fit(ka_ax, full[-2] * _GROUP, group_aligned=True)
+                spec[-1] = fit(n_ax, full[-1])
+            else:  # tscale (..., N, 1) / bits (..., N, ng): per-column rows
+                spec[-2] = fit(n_ax, full[-2])
+            ea = _expert_axis(mesh, names, leaf)
+            if ea is not None and len(full) >= 3:
+                spec[1 if "units" in names else 0] = ea
+            return P(*spec)
+        ka_ax, n_ax = tp_axes_for(name)
+        if (ka_ax or n_ax) and len(full) >= 2:
+            spec = [None] * len(full)
+            spec[-2] = fit(ka_ax, full[-2])
+            spec[-1] = fit(n_ax, full[-1])
+            ea = _expert_axis(mesh, names, leaf)
+            if ea is not None and len(full) >= 3:
+                spec[1 if "units" in names else 0] = ea
+            return P(*spec)
+        return P(*([None] * len(full)))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
 
 
 def named(mesh: Mesh, pspec_tree):

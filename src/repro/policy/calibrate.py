@@ -142,9 +142,9 @@ class _RecordingMethod(QuantMethod):
         self.recorder = recorder
         self.inner = get_quant_method("dense_bf16")
 
-    def apply(self, w, x, cfg):
+    def apply(self, w, x, cfg, name=None):
         self.recorder.observe(w, x)
-        return self.inner.apply(w, x, cfg)
+        return self.inner.apply(w, x, cfg, name=name)
 
 
 class _Recorder:

@@ -75,6 +75,8 @@ def raw_costs(compiled) -> dict:
     """Per-device flops/bytes/collective-bytes of one compiled executable
     (scan bodies counted once — correct with correct_for_scan)."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # one dict per program under a mesh
+        ca = ca[0] if ca else {}
     coll = parse_collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -25,6 +25,7 @@ not copied per token).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -34,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.packed import key_entry_str, packed_nbytes, tree_is_packed
+from repro.core.packed import (key_entry_str, pack_weights_sharded,
+                               packed_nbytes, tree_is_packed)
 from repro.core.quantized import PRESETS, pack_weights
 from repro.models import model as M
 
@@ -93,6 +95,21 @@ class ServeConfig:
     # approximation by construction — verification pins the numerics — so
     # it may run the cheapest backend available.
     spec_draft_method: str | None = "dsbp_ref"
+    # --- multi-device serving (DESIGN.md §11) ---
+    # mesh_shape (e.g. (2, 4)) turns the engine multi-device: weights pack
+    # straight into per-shard kernel layouts, projections run the fused
+    # GEMM under shard_map ('dsbp_fused_sharded' — bit-exact vs one
+    # device, so a mesh can never change served tokens), KV caches shard
+    # over the batch axes, and prefill/decode/speculation jit sharded-in/
+    # sharded-out with cache donation preserved.  The axes name the mesh
+    # dims: 'data' shards token rows + cache batch, 'model' carries the
+    # Megatron TP split, an 'expert' axis additionally shards MoE expert
+    # stacks.  mesh_shape=None (default) is the single-device engine.
+    mesh_shape: tuple[int, ...] | None = None
+    mesh_axes: tuple[str, ...] = ("data", "model")
+    # device-scaled slot pool: serve() runs mesh.size * per_device_batch_size
+    # slots (None keeps the flat batch_size pool)
+    per_device_batch_size: int | None = None
 
 
 @dataclasses.dataclass
@@ -103,7 +120,7 @@ class Request:
     max_new_tokens: int = 32
 
 
-def pack_weights_int8(params, preset="precise"):
+def pack_weights_int8(params, preset="precise", mesh=None):
     """Offline DSBP pass over every projection matrix, run ONCE: returns a
     pytree where 2-D+ projection leaves become
     :class:`~repro.core.packed.PackedDSBPWeight` containers (int8 aligned
@@ -115,7 +132,13 @@ def pack_weights_int8(params, preset="precise"):
     every projection), or a :class:`~repro.policy.policy.DSBPPolicy` —
     per-layer configs keyed by projection path (``units/0/attn/wq``-style,
     DESIGN.md §9), so one model carries mixed presets; projections the
-    policy does not cover stay raw."""
+    policy does not cover stay raw.
+
+    With ``mesh`` set, every projection packs through
+    :func:`~repro.core.packed.pack_weights_sharded`: each device quantizes
+    only its own output-column shard under shard_map, so the full-size
+    container is never materialized on one device (bit-identical to
+    pack-then-shard, DESIGN.md §11)."""
     policy = preset if hasattr(preset, "config_for") else None
     cfg0 = None
     if policy is None:
@@ -143,7 +166,8 @@ def pack_weights_int8(params, preset="precise"):
             cfg = cfg0
         if leaf.shape[-2] < cfg.weight_cfg.group_size:
             return leaf
-        pw = pack_weights(leaf, cfg)
+        pw = (pack_weights_sharded(leaf, cfg, mesh) if mesh is not None
+              else pack_weights(leaf, cfg))
         stats["bits_sum"] += float(jnp.sum(pw.bits.astype(jnp.int32) + 1))
         stats["groups"] += int(np.prod(pw.bits.shape))
         stats["layers"] += 1
@@ -221,16 +245,25 @@ class Engine:
         if hasattr(preset, "config_for") or (
                 cfg.quant == "policy" and tree_is_packed(params)):
             cfg = cfg.replace(quant="policy")
-        # serving default: the fused one-pass kernel (DESIGN.md §8), unless
-        # the arch config or ServeConfig pins a method explicitly.  Token
-        # parity with 'dsbp_kernel' / 'dsbp_ref' is asserted in
-        # tests/test_serving.py, so the swap can never change served tokens.
+        self.mesh = self._build_mesh(scfg)
+        # serving default: the fused one-pass kernel (DESIGN.md §8) — its
+        # shard_map form under a mesh (§11), unless the arch config or
+        # ServeConfig pins a method explicitly.  Token parity with
+        # 'dsbp_kernel' / 'dsbp_ref' (and 1-device vs mesh) is asserted in
+        # tests/test_serving.py + tests/test_sharded_serving.py, so the
+        # swap can never change served tokens.
         if cfg.quant is not None and (scfg.quant_method or cfg.quant_method) is None:
-            cfg = cfg.replace(quant_method="dsbp_fused")
+            cfg = cfg.replace(quant_method=(
+                "dsbp_fused_sharded" if self.mesh is not None else "dsbp_fused"))
         elif scfg.quant_method is not None:
             cfg = cfg.replace(quant_method=scfg.quant_method)
         self.cfg = cfg
         self.scfg = scfg
+        # device-scaled slot pool (§11): one mesh carries
+        # mesh.size * per_device_batch_size concurrent slots
+        self.pool_size = scfg.batch_size
+        if self.mesh is not None and scfg.per_device_batch_size:
+            self.pool_size = self.mesh.size * scfg.per_device_batch_size
         self.pack_report = None
         self.last_stats: dict | None = None
         if scfg.pack and preset is not None and not tree_is_packed(params):
@@ -240,7 +273,7 @@ class Engine:
                     "DSBPPolicy, or the policy itself via "
                     "ServeConfig.pack_preset")
             raw_nbytes = packed_nbytes(params)
-            params, stats = pack_weights_int8(params, preset)
+            params, stats = pack_weights_int8(params, preset, mesh=self.mesh)
             self.pack_report = {
                 "preset": (f"policy[{len(preset)} layers]"
                            if hasattr(preset, "config_for") else preset),
@@ -249,14 +282,34 @@ class Engine:
                 "avg_w_bits": stats["avg_w_bits"],
                 "layers_packed": stats["layers_packed"],
             }
+        if self.mesh is not None:
+            # compute-layout placement: every container shard lives exactly
+            # where its shard_map GEMM consumes it — zero weight movement
+            # per decode step (parallel/sharding.serve_pspecs)
+            from repro.parallel import sharding as SH
+
+            params = jax.device_put(
+                params, SH.named(self.mesh, SH.serve_pspecs(params, self.mesh)))
         self.params = params
         self._score_jit = None  # built lazily by score_continuations
         # donate the cache: KV buffers update in place every step instead of
         # being copied (tests/test_serving.py asserts the aliasing)
-        self._decode = jax.jit(
-            lambda p, tok, cache, pos: M.decode_step(p, tok, cache, pos, cfg),
-            donate_argnums=(2,),
-        )
+
+        def _decode_fn(p, tok, cache, pos):
+            with self._trace_ctx():
+                return M.decode_step(p, tok, cache, pos, cfg)
+
+        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+        # jitted sharded-in/sharded-out prefill (mesh only: the 1-device
+        # engine keeps its eager prefill path unchanged)
+        self._prefill = None
+        if self.mesh is not None:
+            def _prefill_fn(p, toks, lens):
+                with self._trace_ctx():
+                    return M.prefill(p, {"tokens": toks}, cfg,
+                                     max_len=scfg.max_len, lengths=lens)
+
+            self._prefill = jax.jit(_prefill_fn)
         self._spec = None
         self.spec_report = None
         if scfg.spec_k:
@@ -272,11 +325,17 @@ class Engine:
                     f"tokens around the SWA ring cache")
             from repro.spec.decode import build_spec_round  # local: optional
 
-            self._spec = jax.jit(
-                build_spec_round(cfg, scfg.spec_k, scfg.spec_draft_bits,
-                                 scfg.spec_draft_method),
-                donate_argnums=(1,),
-            )
+            _round = build_spec_round(cfg, scfg.spec_k, scfg.spec_draft_bits,
+                                      scfg.spec_draft_method)
+
+            def _spec_fn(p, cache, tok, pos):
+                # the whole round — draft, verify, accept, rollback — traces
+                # under the mesh context, so every projection of both the
+                # draft and target forwards runs the sharded fused GEMM
+                with self._trace_ctx():
+                    return _round(p, cache, tok, pos)
+
+            self._spec = jax.jit(_spec_fn, donate_argnums=(1,))
             # the draft view is derived inside the jitted round — no second
             # weight tree is ever stored (asserted in tests/test_spec.py)
             self.spec_report = {
@@ -285,6 +344,55 @@ class Engine:
                 "draft_method": scfg.spec_draft_method,
                 "extra_weight_nbytes": 0,
             }
+
+    # ------------------------------------------------------------------
+    # multi-device plumbing (DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _build_mesh(scfg: ServeConfig):
+        if scfg.mesh_shape is None:
+            return None
+        shape = tuple(int(s) for s in scfg.mesh_shape)
+        if len(shape) != len(scfg.mesh_axes):
+            raise ValueError(
+                f"mesh_shape {shape} needs one size per axis name "
+                f"{scfg.mesh_axes}")
+        n = int(np.prod(shape))
+        if n > jax.device_count():
+            raise ValueError(
+                f"mesh_shape {shape} needs {n} devices; "
+                f"{jax.device_count()} available (simulate CPU devices with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(jax.devices()[:n]).reshape(shape),
+                    scfg.mesh_axes)
+
+    def _trace_ctx(self):
+        """Sharding context entered while tracing every model call: the
+        'dsbp_fused_sharded' method reads it (parallel.context.active_ctx)
+        to pick each projection's shard_map specs.  gather=False — the
+        shard_map in_specs fully determine weight movement, and weights
+        already live at their compute layout."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.parallel import context as PC
+        from repro.parallel import sharding as SH
+
+        return PC.sharding_ctx(self.mesh, SH.batch_axes(self.mesh),
+                               gather=False)
+
+    def _shard_cache(self, pool, batch_size: int):
+        """Place a fresh cache pool batch-sharded over the mesh
+        (parallel.sharding.cache_pspecs); identity on one device."""
+        if self.mesh is None:
+            return pool
+        from repro.parallel import sharding as SH
+
+        return jax.device_put(
+            pool, SH.named(self.mesh,
+                           SH.cache_pspecs(pool, self.mesh, batch_size)))
 
     # ------------------------------------------------------------------
     # batch API
@@ -303,9 +411,10 @@ class Engine:
             lengths = jnp.asarray(lengths, jnp.int32)
             if cfg.frontend == "vlm_patches":  # embedded positions incl. image
                 lengths = lengths + batch["image_embeds"].shape[1]
-        logits, cache, length = M.prefill(
-            self.params, batch, cfg, max_len=scfg.max_len, lengths=lengths
-        )
+        with self._trace_ctx():
+            logits, cache, length = M.prefill(
+                self.params, batch, cfg, max_len=scfg.max_len, lengths=lengths
+            )
         b = logits.shape[0]
         pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
         rng = jax.random.PRNGKey(scfg.seed)
@@ -398,8 +507,8 @@ class Engine:
                     f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
                     f"{r.max_new_tokens}{f' + spec_k {headroom}' if headroom else ''}"
                     f" exceeds max_len {scfg.max_len}")
-        B = scfg.batch_size
-        pool = M.init_cache(cfg, B, scfg.max_len)
+        B = self.pool_size
+        pool = self._shard_cache(M.init_cache(cfg, B, scfg.max_len), B)
         active: list[Request | None] = [None] * B
         tok = np.zeros(B, np.int64)        # last sampled token per slot
         pos = np.zeros(B, np.int32)        # next absolute position per slot
@@ -518,10 +627,14 @@ class Engine:
         toks = np.zeros((len(group), L), np.int64)
         for j, r in enumerate(group):
             toks[j, : lens[j]] = np.asarray(r.tokens)
-        logits, cache, _ = M.prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
-            max_len=scfg.max_len, lengths=lens,
-        )
+        if self._prefill is not None:  # jitted sharded prefill (mesh)
+            logits, cache, _ = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens, jnp.int32))
+        else:
+            logits, cache, _ = M.prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
+                max_len=scfg.max_len, lengths=lens,
+            )
         first, rng = self._sample_next(logits[:, -1], rng)
         first = np.asarray(first)
         stats["admissions"] += len(group)
