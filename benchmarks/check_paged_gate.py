@@ -1,0 +1,45 @@
+"""CI gate over BENCH_paged.json (DESIGN.md §12): the paged KV engine must
+(1) stay token-for-token identical to the dense engine in BOTH scenarios
+(shared-prefix over-subscription and chunked prefill), (2) serve strictly
+more concurrent requests than the dense slot pool at the same KV HBM
+budget with physically shared blocks (refcount > 1) at peak, and (3) never
+stall a decode lane while a chunked prefill is in flight (zero stalled
+decode steps, with at least one decode step interleaved between chunk
+steps).  Usage:
+  python benchmarks/check_paged_gate.py BENCH_paged.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "serving_paged_kv")
+    assert "error" not in row, row
+    d = row.get("derived", "")
+    m = re.search(
+        r"parity=(\d) concurrent=(\d+) pool_slots=(\d+) shared_peak=(\d+) "
+        r"hit_blocks=(\d+) util=([0-9.]+) saved_kb=([0-9.]+) "
+        r"chunk_parity=(\d) chunk_steps=(\d+) stalls=(\d+) "
+        r"interleaved=(\d+)", d)
+    assert m, d
+    (parity, concurrent, pool_slots, shared_peak, hit_blocks, util,
+     saved_kb, chunk_parity, chunk_steps, stalls, interleaved) = m.groups()
+    assert parity == "1", f"paged engine lost token parity: {d}"
+    assert chunk_parity == "1", f"chunked prefill lost token parity: {d}"
+    assert int(concurrent) > int(pool_slots), (
+        f"prefix sharing must over-subscribe the dense slot budget: {d}")
+    assert int(shared_peak) > 0, f"no physically shared blocks: {d}"
+    assert int(hit_blocks) > 0, f"prefix cache never hit: {d}"
+    assert float(saved_kb) > 0, d
+    assert int(stalls) == 0, f"decode stalled behind a chunked prefill: {d}"
+    assert int(chunk_steps) > 0 and int(interleaved) > 0, (
+        f"chunked prefill did not interleave with decode: {d}")
+    print("paged KV gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_paged.json")

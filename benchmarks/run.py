@@ -12,7 +12,8 @@ import json
 import sys
 import traceback
 
-from . import bench_kernels, bench_paper, bench_policy, bench_serving, bench_spec
+from . import (bench_kernels, bench_paged, bench_paper, bench_policy,
+               bench_serving, bench_spec)
 
 BENCHES = [
     ("fig6_bitwidth_accuracy", bench_paper.bench_fig6_bitwidth_accuracy),
@@ -29,6 +30,7 @@ BENCHES = [
     ("kernel_e2e_quantized_layer", bench_kernels.bench_e2e_quantized_layer),
     ("serving_ragged_continuous_batching", bench_serving.bench_serving_ragged),
     ("serving_speculative_decode", bench_spec.bench_spec_decode),
+    ("serving_paged_kv", bench_paged.bench_paged_serving),
     ("policy_vs_fixed", bench_policy.bench_policy_vs_fixed),
 ]
 

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention_kernel_call"]
+__all__ = ["flash_attention_kernel_call", "paged_flash_attention_kernel_call"]
 
 NEG_INF = -1e30
 
@@ -101,3 +101,113 @@ def flash_attention_kernel_call(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def _paged_kernel(table_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, causal: bool, window: int | None,
+                  kv_len: int, q_start: int, bq: int, bs: int):
+    # table_ref is the scalar-prefetch operand: the BlockSpec index maps
+    # already consumed it to stream pool block table_ref[ki] into k_ref/
+    # v_ref — the kernel body only needs positions for masking.
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)          # (bs, D): drop the block axis
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bs)
+
+    qpos = q_start + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 0)
+    kpos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+    mask = kpos < kv_len                      # tail of the last block
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kv_len", "causal", "window", "q_start", "bq",
+                     "interpret"),
+)
+def paged_flash_attention_kernel_call(
+    q: jax.Array,       # (Sq, D)
+    k_pool: jax.Array,  # (NB, bs, D) physical block pool, single head
+    v_pool: jax.Array,  # (NB, bs, D)
+    table: jax.Array,   # (nb,) int32: this lane's logical->physical blocks
+    *,
+    kv_len: int,        # valid kv positions (<= nb * bs)
+    causal: bool = True,
+    window: int | None = None,
+    q_start: int = 0,   # absolute position of q row 0 (decode/verify tail)
+    bq: int = 128,
+    interpret: bool = True,
+):
+    """Flash attention reading K/V straight out of a paged block pool.
+
+    The block table rides the TPU scalar-prefetch path
+    (``pltpu.PrefetchScalarGridSpec``): it lands in SMEM before the kernel
+    body runs, so the k/v BlockSpec index maps dereference ``t[ki]`` to DMA
+    exactly the pool blocks this lane owns — HBM traffic is the lane's own
+    kv_len, never the pool size, and no gathered (Sq_kv, D) copy is ever
+    materialized.  Grid = (Sq/bq, nb): one kv iteration per table entry,
+    same online-softmax state as the dense kernel.  Positions are ring
+    SLOTS — callers cover the pre-wrap regime (slot == absolute position;
+    post-wrap serving keeps the jnp gather path).  Oracle:
+    ``flash_attention_kernel_call`` over the gathered view
+    (models.attention.gather_kv_view), asserted in tests/test_paged.py.
+    """
+    sq, d = q.shape
+    _, bs, _ = k_pool.shape
+    nb = table.shape[0]
+    assert 0 < kv_len <= nb * bs
+    bq = min(bq, sq)
+    assert sq % bq == 0
+    scale = float(1.0 / (d**0.5))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(sq // bq, nb),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j, t: (i, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, j, t: (t[j], 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda i, j, t: (t[j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j, t: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, d), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=scale, causal=causal, window=window,
+            kv_len=int(kv_len), q_start=int(q_start), bq=bq, bs=bs,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        interpret=interpret,
+    )(table, q, k_pool, v_pool)

@@ -63,9 +63,25 @@ def main():
                     help="scale the slot pool to mesh.size * B slots "
                          "(device-scaled continuous batching; default: "
                          "keep the flat --batch pool)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (DESIGN.md §12): block-pool "
+                         "storage, per-lane block tables, copy-on-write "
+                         "prefix sharing and chunked prefill; token-for-"
+                         "token identical to the dense scheduler (implies "
+                         "--ragged)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="ring slots per physical KV block (must divide "
+                         "every KV layer's cache length)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="physical blocks in the pool incl. scratch "
+                         "(default: --batch dense slots' worth — same KV "
+                         "HBM budget as the dense engine)")
+    ap.add_argument("--max-active", type=int, default=None,
+                    help="paged lane count; with prefix sharing this can "
+                         "exceed --batch at the same --kv-blocks budget")
     args = ap.parse_args()
-    if args.spec_k:
-        args.ragged = True  # speculation lives in the serve() scheduler
+    if args.spec_k or args.paged:
+        args.ragged = True  # both live in the serve() scheduler
 
     cfg = (smoke_config(args.arch) if args.smoke
            else get_config(args.arch).replace(dtype="bfloat16")).replace(remat=False)
@@ -77,13 +93,21 @@ def main():
     if args.mesh:
         mesh_shape = tuple(int(s) for s in args.mesh.lower().split("x"))
         mesh_axes = ("data", "model", "expert")[: len(mesh_shape)]
+    max_len = args.prompt_len + args.new_tokens + args.spec_k + 8
+    if args.paged:  # block pools need block-aligned ring lengths
+        max_len = -(-max_len // args.kv_block_size) * args.kv_block_size
     eng = Engine(params, cfg, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + args.spec_k + 8,
+        max_len=max_len,
         batch_size=args.batch, spec_k=args.spec_k,
         spec_draft_bits=args.spec_draft_bits,
         mesh_shape=mesh_shape,
         mesh_axes=mesh_axes or ("data", "model"),
-        per_device_batch_size=args.per_device_batch))
+        per_device_batch_size=args.per_device_batch,
+        paged=args.paged, kv_block_size=args.kv_block_size,
+        kv_blocks=args.kv_blocks, max_active=args.max_active))
+    if args.paged:
+        print(f"paged KV: {eng.kv_blocks} blocks x {args.kv_block_size} "
+              f"slots, {eng.lanes} lanes, table width {eng._table_width}")
     if eng.mesh is not None:
         print(f"mesh {dict(eng.mesh.shape)} over {eng.mesh.size} devices, "
               f"slot pool {eng.pool_size}")
@@ -107,10 +131,23 @@ def main():
               f"occupancy {st['occupancy']*100:.0f}%, "
               f"{st['decode_steps']} pool steps)")
         if args.spec_k:
+            per_slot = ("" if args.paged else
+                        f", per-slot "
+                        f"{[round(a, 2) for a in st['slot_mean_accepted']]}")
             print(f"speculation: {st['spec_rounds']} rounds, mean accepted "
                   f"{st['mean_accepted']:.2f}/{args.spec_k + 1} "
-                  f"(hist {st['accepted_hist']}, per-slot "
-                  f"{[round(a, 2) for a in st['slot_mean_accepted']]})")
+                  f"(hist {st['accepted_hist']}{per_slot})")
+        if args.paged:
+            print(f"block pool: peak {st['block_peak_used']}/"
+                  f"{max(st['kv_blocks'] - 1, 1)} used "
+                  f"({st['block_utilization']*100:.0f}%), "
+                  f"{st['shared_blocks_peak']} shared at peak, "
+                  f"{st['prefix_hit_blocks']} prefix hits "
+                  f"({st['bytes_saved_sharing']/1e6:.2f} MB KV not "
+                  f"re-materialized), {st['cow_splits']} COW splits, "
+                  f"{st['chunk_steps']} chunk steps "
+                  f"({st['chunked_requests']} chunked requests), "
+                  f"{st['stalled_decode_steps']} stalled decode steps")
         for uid in list(out)[:2]:
             print(f"  req{uid}: {out[uid].tolist()}")
         return

@@ -17,9 +17,36 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_attention", "decode_attention", "verify_attention"]
+__all__ = ["blockwise_attention", "decode_attention", "verify_attention",
+           "gather_kv_view"]
 
 NEG_INF = -1e30
+
+
+def gather_kv_view(pool: jax.Array, table: jax.Array, s_c: int) -> jax.Array:
+    """Materialize a dense per-lane cache view from a paged block pool.
+
+    ``pool``: (NB, Hkv, bs, D) physical blocks; ``table``: (B, max_blocks)
+    int32 block table (entry j holds ring slots [j*bs, (j+1)*bs));
+    ``s_c``: the layer's logical cache length (must be a multiple of bs).
+    Returns (B, Hkv, s_c, D) — VALUE-EXACT at every slot the writer ever
+    touched, so feeding it to the unchanged :func:`decode_attention` /
+    :func:`verify_attention` / :func:`blockwise_attention` math yields
+    bit-identical outputs to the dense engine: slots never written hold
+    recycled-block garbage, but every consumer masks them to exact zeros
+    (NEG_INF logits underflow to 0.0 in the softmax) before any reduction.
+    This gather IS the paged read path (DESIGN.md §12); the fused-kernel
+    twin streams the same blocks via a scalar-prefetched table
+    (kernels/flash_attention.paged_flash_attention_kernel_call).
+    """
+    bs = pool.shape[2]
+    nb = s_c // bs
+    if nb * bs != s_c:
+        raise ValueError(f"cache length {s_c} not a multiple of block "
+                         f"size {bs}")
+    view = pool[table[:, :nb]]               # (B, nb, Hkv, bs, D)
+    b, _, h, _, d = view.shape
+    return view.transpose(0, 2, 1, 3, 4).reshape(b, h, s_c, d)
 
 
 def _attend_block(q, k, v, qpos, kpos, kv_len, causal, window, state,

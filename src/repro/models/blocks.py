@@ -12,7 +12,8 @@ from repro.parallel.context import anchor_batch, gather_unit_params
 from . import moe as moe_mod
 from . import recurrent as rec
 from . import ssd as ssd_mod
-from .attention import blockwise_attention, decode_attention, verify_attention
+from .attention import (blockwise_attention, decode_attention, gather_kv_view,
+                        verify_attention)
 from .layers import Quant, dense, init_dense, init_norm, rms_norm, rope
 
 __all__ = [
@@ -20,11 +21,22 @@ __all__ = [
     "layer_seq",
     "layer_decode",
     "layer_verify",
+    "layer_decode_paged",
+    "layer_verify_paged",
     "init_layer_cache",
+    "init_layer_cache_paged",
+    "fill_kv_cache",
+    "fill_kv_cache_paged",
+    "write_kv_blocks",
     "rollback_kv_cache",
+    "rollback_kv_cache_paged",
     "select_state_step",
+    "freeze_state",
+    "cache_len",
     "KIND_HAS_KV",
 ]
+
+SCRATCH_BLOCK = 0  # physical block 0: masked-write sink (serve/blocks.py)
 
 KIND_HAS_KV = {"attn_full": True, "attn_local": True, "rglru": False, "ssd": False}
 
@@ -170,27 +182,120 @@ def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype):
     raise ValueError(kind)  # pragma: no cover
 
 
-def fill_kv_cache(cache, k, v, lengths):
-    """Write prefill K/V (B,H,L,D) into the (possibly ring) cache buffer.
+def init_layer_cache_paged(cfg, kind, batch: int, num_blocks: int,
+                           block_size: int, dtype):
+    """Paged twin of :func:`init_layer_cache`: attention layers store K/V
+    in a shared physical block pool (NB, Hkv, bs, D) — no batch axis; lanes
+    address it through per-request block tables.  Recurrent kinds keep
+    their dense per-lane state (nothing pageable about an O(1) state)."""
+    if kind in ("attn_full", "attn_local"):
+        shp = (num_blocks, cfg.n_kv_heads, block_size, cfg.d_head)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    return init_layer_cache(cfg, kind, batch, 1, dtype)
 
-    ``lengths`` is a scalar (uniform batch) or a (B,) vector of valid
-    right-padded prompt lengths.  Cache slot r receives the K/V of the LAST
-    valid token whose absolute position ≡ r (mod S_c) — one gather that
-    covers plain caches (identity), ring/SWA caches (trailing window), and
-    ragged batches (per-row lengths); slots with no valid token keep their
-    previous (zero) contents.
-    """
-    s = cache["k"].shape[2]
-    b, l = k.shape[0], k.shape[2]
+
+def _fill_slot_sources(lengths, b: int, s: int):
+    """THE prefill slot-source map, shared by the dense fill and the
+    block-table scatter: cache slot r of row b receives the K/V of the LAST
+    valid token whose absolute position ≡ r (mod S_c).  Returns
+    ``(src (B, S_c) int32 token index, ok (B, S_c) bool)`` — one gather
+    that covers plain caches (identity), ring/SWA caches (trailing window)
+    and ragged batches (per-row lengths); slots with ``ok`` False have no
+    valid token."""
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
     r = jnp.arange(s, dtype=jnp.int32)
     last = lengths[:, None] - 1                       # (B, 1)
     src = last - ((last - r[None, :]) % s)            # (B, S_c)
-    ok = (src >= 0)[:, None, :, None]
+    return src, src >= 0
+
+
+def fill_kv_cache(cache, k, v, lengths):
+    """Write prefill K/V (B,H,L,D) into the (possibly ring) cache buffer.
+
+    ``lengths`` is a scalar (uniform batch) or a (B,) vector of valid
+    right-padded prompt lengths; slot sourcing per
+    :func:`_fill_slot_sources` — slots with no valid token keep their
+    previous (zero) contents.
+    """
+    s = cache["k"].shape[2]
+    b, l = k.shape[0], k.shape[2]
+    src, ok = _fill_slot_sources(lengths, b, s)
+    ok = ok[:, None, :, None]
     idx = jnp.clip(src, 0, l - 1)[:, None, :, None]   # (B, 1, S_c, 1)
     ck = jnp.take_along_axis(k, idx, axis=2).astype(cache["k"].dtype)
     cv = jnp.take_along_axis(v, idx, axis=2).astype(cache["v"].dtype)
     return {"k": jnp.where(ok, ck, cache["k"]), "v": jnp.where(ok, cv, cache["v"])}
+
+
+def _scatter_pool(pool_leaf, table, slots, vals, mask):
+    """THE block-table scatter every paged cache write goes through.
+
+    ``pool_leaf``: (NB, H, bs, D) physical blocks; ``table``: (B, MB)
+    int32; ``slots``: (B, T) logical ring-slot indices; ``vals``:
+    (B, T, H, D); ``mask``: (B, T) — entries with False are routed to the
+    scratch block (physical 0), making the scatter unconditional.  Writable
+    blocks are refcount-1 by the COW protocol, so unmasked duplicate
+    targets can only carry bit-identical values (shared-prefix recompute).
+    """
+    bs = pool_leaf.shape[2]
+    phys = jnp.take_along_axis(table, slots // bs, axis=1)    # (B, T)
+    phys = jnp.where(mask, phys, SCRATCH_BLOCK)
+    off = jnp.where(mask, slots % bs, 0)
+    return pool_leaf.at[phys, :, off].set(
+        jnp.where(mask[..., None, None], vals,
+                  pool_leaf[phys, :, off]).astype(pool_leaf.dtype))
+
+
+def write_kv_blocks(pool, table, k, v, pos, write_len, s_c: int,
+                    write_start=None):
+    """Write T fresh K/V entries per row through the block table — the ONE
+    cache-write helper behind paged decode, verify/spec, and chunked
+    prefill (DESIGN.md §12).
+
+    ``pool``: {'k','v'} (NB, H, bs, D); ``table``: (B, MB) int32; ``k``/
+    ``v``: (B, H, T, D), token j of row b at absolute position
+    ``pos[b] + j`` (ring slot ``(pos+j) % s_c``); ``write_len``: (B,) —
+    only tokens j < write_len[b] are written (0 freezes the row: idle or
+    decode-phase lanes during a chunk step); ``write_start``: optional
+    (B,) absolute-position floor — positions below it skip the write
+    (shared-prefix blocks hold bit-identical content already, and skipping
+    keeps them refcount-shared instead of forcing a pointless COW split).
+    """
+    b, _, t, _ = k.shape
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    j = jnp.arange(t, dtype=jnp.int32)[None, :]
+    abs_pos = posb[:, None] + j                               # (B, T)
+    mask = j < jnp.broadcast_to(jnp.asarray(write_len, jnp.int32), (b,))[:, None]
+    if write_start is not None:
+        mask &= abs_pos >= jnp.asarray(write_start, jnp.int32)[:, None]
+    slots = abs_pos % s_c
+    return {
+        "k": _scatter_pool(pool["k"], table, slots, k.transpose(0, 2, 1, 3), mask),
+        "v": _scatter_pool(pool["v"], table, slots, v.transpose(0, 2, 1, 3), mask),
+    }
+
+
+def fill_kv_cache_paged(pool, table, k, v, lengths, s_c: int,
+                        write_start=None):
+    """Prefill fill as a block-table scatter: the same per-ring-slot
+    source gather as :func:`fill_kv_cache` (:func:`_fill_slot_sources`),
+    written through the table instead of a dense slot axis.  ``k``/``v``:
+    (B, H, L, D); content is value-identical to the dense fill at every
+    written slot, so the paged engine's admission numerics equal the dense
+    engine's."""
+    s = s_c
+    b, l = k.shape[0], k.shape[2]
+    src, ok = _fill_slot_sources(lengths, b, s)
+    if write_start is not None:  # shared-prefix positions stay unwritten
+        ok &= src >= jnp.asarray(write_start, jnp.int32)[:, None]
+    idx = jnp.clip(src, 0, l - 1)[:, None, :, None]
+    ck = jnp.take_along_axis(k, idx, axis=2)      # (B, H, S_c, D)
+    cv = jnp.take_along_axis(v, idx, axis=2)
+    slots = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    return {
+        "k": _scatter_pool(pool["k"], table, slots, ck.transpose(0, 2, 1, 3), ok),
+        "v": _scatter_pool(pool["v"], table, slots, cv.transpose(0, 2, 1, 3), ok),
+    }
 
 
 # ---------------- decode ----------------
@@ -231,6 +336,33 @@ def _ring_decode_attention(q, k_cache, v_cache, valid):
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def _attn_decode_paged(params, x, cfg, kind, quant, pool, table, posb,
+                       write_len, s_c: int):
+    """Paged twin of :func:`_attn_decode`: the fresh K/V go through the
+    block-table scatter (:func:`write_kv_blocks`), the cache is read back
+    as a dense per-lane view (:func:`gather_kv_view`) and the UNCHANGED
+    decode attention math runs on it — bit-identical to the dense engine
+    for every lane with ``write_len`` 1.  Lanes with ``write_len`` 0
+    (idle, or mid-chunked-prefill during a decode step) write nothing and
+    their output is discarded by the engine."""
+    b = x.shape[0]
+    y = rms_norm(params["norm1"], x, cfg.norm_eps)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, posb[:, None])
+    pool = write_kv_blocks(pool, table, k, v, posb, write_len, s_c)
+    ck = gather_kv_view(pool["k"], table, s_c)
+    cv = gather_kv_view(pool["v"], table, s_c)
+    if kind == "attn_local" and cfg.window and s_c < 2**31:
+        r = jnp.arange(s_c)
+        p_r = posb[:, None] - ((posb[:, None] - r[None, :]) % s_c)  # (B, S_c)
+        valid = (p_r >= 0) & (p_r >= posb[:, None] - cfg.window + 1)
+        o = _ring_decode_attention(q, ck, cv, valid)
+    else:
+        o = decode_attention(q, ck, cv, posb + 1, window=0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.d_head)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
+    return x, pool
 
 
 def _attn_verify(params, x, cfg, kind, quant, cache, posb):
@@ -285,6 +417,59 @@ def layer_verify(params, x, cfg, kind, cache, pos, quant=None):
     raise ValueError(kind)  # pragma: no cover
 
 
+def _attn_verify_paged(params, x, cfg, kind, quant, pool, table, posb,
+                       s_c: int):
+    """Paged verify attention with DEFERRED writes: queries attend the
+    pre-step block-pool view plus the T fresh K/V (which ride as separate
+    operands, exactly like dense :func:`_attn_verify`), but nothing is
+    written here — the fresh K/V are returned as ``steps`` and
+    :func:`rollback_kv_cache_paged` commits only the accepted prefix.
+    Commit-on-accept replaces dense write-then-rollback: the pool never
+    holds rejected entries, so rollback is bit-exact by construction and
+    no pre-step pool copy is kept alive."""
+    b, t, _ = x.shape
+    positions = posb[:, None] + jnp.arange(t)[None, :]  # (B, T)
+    y = rms_norm(params["norm1"], x, cfg.norm_eps)
+    q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
+    window = cfg.window if kind == "attn_local" else 0
+    ck = gather_kv_view(pool["k"], table, s_c)
+    cv = gather_kv_view(pool["v"], table, s_c)
+    o = verify_attention(q, k, v, ck, cv, posb, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
+    x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
+    return x, {"k": k, "v": v}
+
+
+def layer_verify_paged(params, x, cfg, kind, cache, table, pos, quant=None,
+                       s_c: int = 0):
+    """T tokens through one layer in paged verify mode (spec verify AND
+    chunked prefill ride this path).  Unlike dense :func:`layer_verify`
+    nothing is committed here: returns (x, steps) where ``steps`` holds the
+    fresh per-layer K/V (attention) or per-step recurrent states, and
+    :func:`rollback_kv_cache_paged` / :func:`select_state_step` commit the
+    accepted prefix (``keep`` 0 freezes a lane entirely)."""
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    params = gather_unit_params(params)
+    x = anchor_batch(x)
+    if kind in ("attn_full", "attn_local"):
+        x, steps = _attn_verify_paged(params, x, cfg, kind, quant, cache,
+                                      table, posb, s_c)
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, steps
+    if kind == "rglru":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, _, steps = rec.rglru_verify(params["rec"], y, cfg, quant, cache)
+        x = x + o
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, steps
+    if kind == "ssd":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, _, steps = ssd_mod.ssd_verify(params["ssd"], y, cfg, quant, cache)
+        return x + o, steps
+    raise ValueError(kind)  # pragma: no cover
+
+
 def rollback_kv_cache(old, new, keep, pos, n_new):
     """Roll a verify-advanced KV cache back to its accepted-prefix state.
 
@@ -307,15 +492,45 @@ def rollback_kv_cache(old, new, keep, pos, n_new):
             "v": jnp.where(m, new["v"], old["v"])}
 
 
-def select_state_step(steps, keep):
+def rollback_kv_cache_paged(pool, table, k_new, v_new, keep, pos, s_c: int):
+    """Paged rollback = commit-on-accept: verify deferred its writes
+    (:func:`_attn_verify_paged`), so restoring the accepted-prefix state is
+    just writing the first ``keep[b]`` fresh entries per row through the
+    block table.  ``keep`` 0 commits nothing (frozen/idle lane).  The pool
+    ends bit-identical to dense write-then-:func:`rollback_kv_cache` at
+    every written slot: both equal old-contents + accepted writes."""
+    return write_kv_blocks(pool, table, k_new, v_new, pos, keep, s_c)
+
+
+def select_state_step(steps, keep, old=None):
     """Per-row state after the accepted prefix: entry ``keep[b]-1`` of every
-    per-step leaf (B, T, ...) collected by a verify pass."""
+    per-step leaf (B, T, ...) collected by a verify pass.  With ``old``
+    (the pre-verify state tree), rows with ``keep`` 0 keep their old state
+    bit-for-bit — paged lanes frozen through a spec round or chunk step."""
+    keep = jnp.asarray(keep, jnp.int32)
+
     def sel(leaf):
-        idx = (jnp.asarray(keep, jnp.int32) - 1).reshape(
-            -1, *([1] * (leaf.ndim - 1)))
+        idx = jnp.clip(keep - 1, 0).reshape(-1, *([1] * (leaf.ndim - 1)))
         return jnp.take_along_axis(leaf, idx, axis=1)[:, 0]
 
-    return jax.tree.map(sel, steps)
+    picked = jax.tree.map(sel, steps)
+    if old is None:
+        return picked
+    return freeze_state(old, picked, keep)
+
+
+def freeze_state(old, new, write_len):
+    """Row-select two state trees: rows with ``write_len`` > 0 take ``new``,
+    the rest keep ``old`` bit-for-bit — how paged decode/verify freeze
+    recurrent state on lanes that are idle or mid-chunked-prefill (their KV
+    twin freezes via the scratch-routed masked scatter)."""
+    m = jnp.asarray(write_len, jnp.int32) > 0
+
+    def mix(n, o):
+        return jnp.where(m.reshape(-1, *([1] * (n.ndim - 1))), n,
+                         o.astype(n.dtype))
+
+    return jax.tree.map(mix, new, old)
 
 
 def layer_decode(params, x, cfg, kind, cache, pos, quant=None):
@@ -336,4 +551,33 @@ def layer_decode(params, x, cfg, kind, cache, pos, quant=None):
         y = rms_norm(params["norm1"], x, cfg.norm_eps)
         o, cache = ssd_mod.ssd_decode_step(params["ssd"], y, cache, cfg, quant)
         return x + o, cache
+    raise ValueError(kind)  # pragma: no cover
+
+
+def layer_decode_paged(params, x, cfg, kind, cache, table, pos, write_len,
+                       quant=None, s_c: int = 0):
+    """One paged decode step.  ``cache`` is the layer's pooled {'k','v'}
+    (attention kinds, block axis leading) or its dense per-lane state
+    (recurrent kinds, frozen via :func:`freeze_state` when
+    ``write_len[b]`` is 0).  Returns (x, new_cache); active lanes
+    (``write_len`` 1) are bit-identical to :func:`layer_decode`."""
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    params = gather_unit_params(params)
+    x = anchor_batch(x)
+    if kind in ("attn_full", "attn_local"):
+        x, cache = _attn_decode_paged(params, x, cfg, kind, quant, cache,
+                                      table, posb, write_len, s_c)
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, cache
+    if kind == "rglru":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, new = rec.rglru_decode_step(params["rec"], y, cache, cfg, quant)
+        x = x + o
+        x = _mlp_part(params, x, cfg, quant, no_drop=True)
+        return x, freeze_state(cache, new, write_len)
+    if kind == "ssd":
+        y = rms_norm(params["norm1"], x, cfg.norm_eps)
+        o, new = ssd_mod.ssd_decode_step(params["ssd"], y, cache, cfg, quant)
+        return x + o, freeze_state(cache, new, write_len)
     raise ValueError(kind)  # pragma: no cover

@@ -24,7 +24,9 @@ from . import blocks
 from .layers import Quant, init_norm, rms_norm
 
 __all__ = ["init", "forward", "loss_fn", "init_cache", "prefill",
-           "decode_step", "verify_step", "rollback_cache"]
+           "decode_step", "verify_step", "rollback_cache",
+           "init_paged_cache", "prefill_paged", "decode_step_paged",
+           "verify_step_paged", "rollback_cache_paged"]
 
 
 def _dtype(cfg):
@@ -191,18 +193,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
     return {"units": unit_caches, "tail": tail_caches}
 
 
-def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
-    """Run the prompt; returns (last-valid-position logits, cache, lengths).
-
-    ``lengths`` — optional (B,) int32 of valid prompt lengths for a
-    right-padded ragged batch, counted in EMBEDDED positions (i.e. including
-    the image prefix for the vlm frontend).  When given, attention masks pad
-    keys, recurrent state freezes across pad steps, the returned logits are
-    gathered at each row's own last valid token, the KV caches hold each
-    row's true prefix, and ``lengths`` is returned as the per-slot decode
-    position vector.  When None the whole batch uses x.shape[1] and a python
-    int is returned (legacy uniform-batch contract).
-    """
+def _prefill_trunk(params, batch: dict, cfg: ArchConfig, lengths=None):
+    """THE prompt forward both prefill flavors share: sequence-mode stack,
+    per-row last-valid-token logits.  Returns (logits, unit_auxs,
+    tail_auxs, fill_len) — auxs are (k, v) for KV kinds (unit stacks carry
+    a leading R axis from the scan) or the recurrent end states.  Dense
+    :func:`prefill` and :func:`prefill_paged` differ ONLY in where the
+    auxs land, so paged admission logits are bit-identical to dense."""
     quant = Quant(cfg.quant, cfg.quant_method)
     x, positions = embed_tokens(params, batch, cfg)
     length = x.shape[1]
@@ -229,9 +226,24 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
         idx = jnp.clip(lengths - 1, 0, length - 1)[:, None, None]
         x_last = jnp.take_along_axis(x, idx, axis=1)
     logits = _head(params, x_last, cfg)
+    return logits, unit_auxs, tail_auxs, (length if lengths is None else lengths)
 
-    cache = init_cache(cfg, x.shape[0], max_len)
-    fill_len = length if lengths is None else lengths
+
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
+    """Run the prompt; returns (last-valid-position logits, cache, lengths).
+
+    ``lengths`` — optional (B,) int32 of valid prompt lengths for a
+    right-padded ragged batch, counted in EMBEDDED positions (i.e. including
+    the image prefix for the vlm frontend).  When given, attention masks pad
+    keys, recurrent state freezes across pad steps, the returned logits are
+    gathered at each row's own last valid token, the KV caches hold each
+    row's true prefix, and ``lengths`` is returned as the per-slot decode
+    position vector.  When None the whole batch uses x.shape[1] and a python
+    int is returned (legacy uniform-batch contract).
+    """
+    logits, unit_auxs, tail_auxs, fill_len = _prefill_trunk(
+        params, batch, cfg, lengths)
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
 
     def pack(kind, c, aux):
         if blocks.KIND_HAS_KV[kind]:
@@ -255,6 +267,78 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
     new_tail = [
         pack(kind, cache["tail"][i], tail_auxs[i]) for i, kind in enumerate(cfg.tail)
     ]
+    return logits, {"units": new_units, "tail": new_tail}, fill_len
+
+
+# ---------------- paged cache (DESIGN.md §12) ----------------
+
+def init_paged_cache(cfg: ArchConfig, batch: int, num_blocks: int,
+                     block_size: int):
+    """Block-pool cache tree: same {"units", "tail"} structure as
+    :func:`init_cache`, but KV leaves are physical block pools
+    ((R,) NB, Hkv, bs, D) shared by every lane, addressed through per-lane
+    block tables; recurrent-state leaves keep their dense per-lane
+    ((R,) B, ...) layout.  One block id spans ``block_size`` ring slots of
+    EVERY KV layer at once (the layers' pools are separate arrays), so
+    host-side accounting (serve/blocks.BlockAllocator) is per-table-entry."""
+    dt = _dtype(cfg)
+    unit_caches = []
+    for kind in cfg.pattern:
+        per_unit = [
+            blocks.init_layer_cache_paged(cfg, kind, batch, num_blocks,
+                                          block_size, dt)
+            for _ in range(cfg.n_units)
+        ]
+        unit_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
+    tail_caches = [
+        blocks.init_layer_cache_paged(cfg, kind, batch, num_blocks,
+                                      block_size, dt)
+        for kind in cfg.tail
+    ]
+    return {"units": unit_caches, "tail": tail_caches}
+
+
+def prefill_paged(params, batch: dict, cache, table, cfg: ArchConfig,
+                  max_len: int, lengths=None, write_start=None):
+    """Prompt admission into the block pool: the SAME sequence-mode trunk
+    as :func:`prefill` (bit-identical logits), with each KV layer scattered
+    through ``table`` ((B_adm, MB) int32) instead of a dense slot axis.
+
+    ``cache`` is the pool tree from :func:`init_paged_cache` — but batched
+    to the ADMITTED rows, not the lane pool: KV leaves are the shared
+    physical pools (updated in place through the tables), recurrent leaves
+    come back REPLACED by the admitted rows' fresh end states (B_adm, ...)
+    for the engine to scatter into its lane axis.  ``write_start``
+    (optional (B_adm,)) skips writing positions below it — prefix-cache
+    hits whose blocks already hold bit-identical content stay shared.
+    Returns (logits, new_cache_tree, fill_len)."""
+    logits, unit_auxs, tail_auxs, fill_len = _prefill_trunk(
+        params, batch, cfg, lengths)
+
+    new_units = []
+    for li, kind in enumerate(cfg.pattern):
+        if blocks.KIND_HAS_KV[kind]:
+            s_c = blocks.cache_len(cfg, kind, max_len)
+            k, v = unit_auxs[li]  # (R, B, H, L, D) from the scan
+            new_units.append(jax.vmap(
+                lambda pool, kk, vv: blocks.fill_kv_cache_paged(
+                    pool, table, kk, vv, fill_len, s_c, write_start)
+            )(cache["units"][li], k, v))
+        else:
+            new_units.append(jax.tree.map(
+                lambda a, cc: a.astype(cc.dtype), unit_auxs[li],
+                cache["units"][li]))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        if blocks.KIND_HAS_KV[kind]:
+            s_c = blocks.cache_len(cfg, kind, max_len)
+            k, v = tail_auxs[i]
+            new_tail.append(blocks.fill_kv_cache_paged(
+                cache["tail"][i], table, k, v, fill_len, s_c, write_start))
+        else:
+            new_tail.append(jax.tree.map(
+                lambda a, cc: a.astype(cc.dtype), tail_auxs[i],
+                cache["tail"][i]))
     return logits, {"units": new_units, "tail": new_tail}, fill_len
 
 
@@ -298,6 +382,49 @@ def decode_step(params, token_batch: dict, cache, pos, cfg: ArchConfig):
     for i, kind in enumerate(cfg.tail):
         x, nc = blocks.layer_decode(
             params["tail"][i], x, cfg, kind, cache["tail"][i], pos, quant
+        )
+        new_tail.append(nc)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    return logits, {"units": list(new_unit_caches), "tail": new_tail}
+
+
+def decode_step_paged(params, token_batch: dict, cache, table, pos, write_len,
+                      cfg: ArchConfig, max_len: int):
+    """One token per lane through the paged cached stack.  Mirrors
+    :func:`decode_step` with the KV write/read going through ``table``
+    ((B, MB) int32): KV pool leaves have no batch axis, so the unit scan
+    strips only their unit axis; recurrent lane states keep the dense (B,)
+    layout.  ``write_len`` (B,) gates the step per lane — 1 writes+advances
+    (bit-identical to dense), 0 freezes KV and recurrent state (idle lanes
+    and chunk-phase lanes mid-prefill).  ``max_len`` is static (it fixes
+    each layer's logical ring length S_c, which dense reads off the cache
+    shape).  Returns (logits (B, 1, V), new_cache)."""
+    quant = Quant(cfg.quant, cfg.quant_method)
+    x = _embed_step(params, token_batch, cfg)
+
+    def unit_body(carry, stacked):
+        xc = carry
+        p_stack, c_stack = stacked
+        new_caches = []
+        for i, kind in enumerate(cfg.pattern):
+            xc, nc = blocks.layer_decode_paged(
+                {k: v for k, v in p_stack[i].items()}, xc, cfg, kind,
+                c_stack[i], table, pos, write_len, quant,
+                s_c=blocks.cache_len(cfg, kind, max_len),
+            )
+            new_caches.append(nc)
+        return xc, tuple(new_caches)
+
+    x, new_unit_caches = jax.lax.scan(
+        unit_body, x, (tuple(params["units"]), tuple(cache["units"])),
+        unroll=cfg.scan_unroll,
+    )
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        x, nc = blocks.layer_decode_paged(
+            params["tail"][i], x, cfg, kind, cache["tail"][i], table, pos,
+            write_len, quant, s_c=blocks.cache_len(cfg, kind, max_len),
         )
         new_tail.append(nc)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
@@ -393,4 +520,81 @@ def rollback_cache(old_cache, new_cache, rollback, keep, pos,
                 old_cache["tail"][i], new_cache["tail"][i], keep, pos, n_new))
         else:
             new_tail.append(blocks.select_state_step(rollback["tail"][i], keep))
+    return {"units": new_units, "tail": new_tail}
+
+
+def verify_step_paged(params, token_batch: dict, cache, table, pos,
+                      cfg: ArchConfig, max_len: int):
+    """Paged multi-token step with DEFERRED commit — spec verification AND
+    chunked prefill ride this one path.  Same logits contract as
+    :func:`verify_step` (T chained decode steps), but NOTHING is written:
+    returns (logits, steps) where ``steps`` mirrors the cache tree with the
+    fresh per-layer K/V ((R,) B, H, T, D) for KV kinds and per-step
+    recurrent states for the rest; :func:`rollback_cache_paged` commits the
+    accepted prefix per lane (``keep[b]`` in [0, T], 0 = frozen lane)."""
+    quant = Quant(cfg.quant, cfg.quant_method)
+    x = _embed_step(params, token_batch, cfg)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+
+    def unit_body(carry, stacked):
+        xc = carry
+        p_stack, c_stack = stacked
+        steps = []
+        for i, kind in enumerate(cfg.pattern):
+            xc, st = blocks.layer_verify_paged(
+                {k: v for k, v in p_stack[i].items()}, xc, cfg, kind,
+                c_stack[i], table, posb, quant,
+                s_c=blocks.cache_len(cfg, kind, max_len),
+            )
+            steps.append(st)
+        return xc, tuple(steps)
+
+    x, unit_steps = jax.lax.scan(
+        unit_body, x, (tuple(params["units"]), tuple(cache["units"])),
+        unroll=cfg.scan_unroll,
+    )
+    tail_steps = []
+    for i, kind in enumerate(cfg.tail):
+        x, st = blocks.layer_verify_paged(
+            params["tail"][i], x, cfg, kind, cache["tail"][i], table, posb,
+            quant, s_c=blocks.cache_len(cfg, kind, max_len),
+        )
+        tail_steps.append(st)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    return logits, {"units": list(unit_steps), "tail": tail_steps}
+
+
+def rollback_cache_paged(cache, table, steps, keep, pos, cfg: ArchConfig,
+                         max_len: int):
+    """Commit the accepted prefix of a :func:`verify_step_paged` round: KV
+    layers write their first ``keep[b]`` fresh entries through the block
+    table (:func:`blocks.rollback_kv_cache_paged` — commit-on-accept, the
+    pool never saw the rejected ones), recurrent layers select the state at
+    step ``keep[b]-1`` with the pre-round state as the ``keep`` 0 fallback.
+    Bit-identical per lane to dense verify+:func:`rollback_cache`."""
+    keep = jnp.asarray(keep, jnp.int32)
+    new_units = []
+    for li, kind in enumerate(cfg.pattern):
+        if blocks.KIND_HAS_KV[kind]:
+            s_c = blocks.cache_len(cfg, kind, max_len)
+            new_units.append(jax.vmap(
+                lambda pool, kk, vv: blocks.rollback_kv_cache_paged(
+                    pool, table, kk, vv, keep, pos, s_c)
+            )(cache["units"][li], steps["units"][li]["k"],
+              steps["units"][li]["v"]))
+        else:
+            new_units.append(jax.vmap(
+                lambda st, old: blocks.select_state_step(st, keep, old=old)
+            )(steps["units"][li], cache["units"][li]))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail):
+        if blocks.KIND_HAS_KV[kind]:
+            s_c = blocks.cache_len(cfg, kind, max_len)
+            new_tail.append(blocks.rollback_kv_cache_paged(
+                cache["tail"][i], table, steps["tail"][i]["k"],
+                steps["tail"][i]["v"], keep, pos, s_c))
+        else:
+            new_tail.append(blocks.select_state_step(
+                steps["tail"][i], keep, old=cache["tail"][i]))
     return {"units": new_units, "tail": new_tail}

@@ -138,7 +138,8 @@ def batch_pspecs(batch, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(rule, batch)
 
 
-def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True):
+def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True,
+                 paged: bool = False):
     """KV caches (B,H,S,D) / states.
 
     Batch dim -> batch axes; additionally (the decode memory-term
@@ -146,6 +147,13 @@ def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True
     'model' when divisible, else the *sequence* dim does — either way the
     cache stops being replicated across the TP axis.  B=1 (long_500k)
     shards the sequence over 'data' (SP).
+
+    ``paged=True`` reads the tree as a block-pool cache (DESIGN.md §12):
+    KV leaves are physical pools ((R,) NB, Hkv, bs, D) with no batch axis —
+    the BLOCK axis shards over the batch axes (any lane's table may address
+    any block, so GSPMD turns table gathers into cross-shard collectives;
+    correctness is GSPMD's, placement is ours) and the head dim keeps the
+    'model' rule.  Recurrent per-lane states keep the dense batch rule.
     """
     ba = batch_axes(mesh)
     bsz = int(np.prod([mesh.shape[x] for x in ba]))
@@ -158,6 +166,10 @@ def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True
         shape = leaf.shape[1:] if stacked else leaf.shape
         lead = (None,) if stacked else ()
         name = names[-1]
+        if paged and name in ("k", "v") and len(shape) == 4:
+            blk_ax = ba if shape[0] % bsz == 0 else None
+            head_ax = "model" if (shard_kv_model and shape[1] % msz == 0) else None
+            return P(*lead, blk_ax, head_ax, None, None)
         if name in ("k", "v") and len(shape) == 4:
             b_ax = ba if batch_ok else None
             head_ax = "model" if (shard_kv_model and shape[1] % msz == 0) else None

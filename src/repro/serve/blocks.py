@@ -1,0 +1,281 @@
+"""Block-pool bookkeeping for the paged KV cache (DESIGN.md §12).
+
+Host-side only: the allocator hands out physical block ids from a fixed
+pool, tracks per-block refcounts (prefix sharing), and implements the
+copy-on-write protocol.  Device-side storage (the pooled KV tensors) and
+the gather/scatter through block tables live in ``models/blocks.py`` /
+``models/attention.py``; the serving engine glues the two together.
+
+Layout contract
+---------------
+* Physical block 0 is the SCRATCH block: never allocated, never read
+  through a validity mask.  Masked writes (idle lanes, rejected
+  speculative tokens, prefix-skip) are routed there so every scatter is
+  unconditional.  ``BlockAllocator.num_blocks`` counts it, so a pool with
+  N blocks serves N-1 tokens-worth of real KV.
+* A block table row is a dense int32 vector of ``max_blocks`` physical
+  ids; logical block j of a request (ring slots ``[j*bs, (j+1)*bs)``)
+  lives at ``table[j]``.  Unallocated entries stay 0 (scratch).
+* A block is writable only while its refcount is 1.  Writers call
+  :meth:`BlockAllocator.ensure_writable` first: shared blocks are split —
+  a fresh block is allocated, the caller device-copies the contents
+  (``copy_blocks``), the table entry is swapped, and the old block's
+  refcount drops (copy-on-write).  Exception: re-prefilling a shared
+  prefix writes bit-identical values (causal determinism), which the
+  engine instead skips entirely via per-row write windows.
+
+Prefix sharing
+--------------
+:class:`PrefixCache` maps hash *chains* over block-aligned token runs to
+physical block ids: ``h_j = hash(h_{j-1}, tokens[j*bs:(j+1)*bs])``, so a
+hit on block j implies the whole prefix up to j matched.  The cache holds
+its own reference on every registered block (blocks survive their
+request); when the pool runs dry the engine evicts cache-only blocks
+(refcount 1, i.e. only the cache holds them) oldest-first.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+__all__ = ["SCRATCH_BLOCK", "BlockAllocator", "PrefixCache", "BlockError",
+           "copy_blocks", "blocks_written", "block_span"]
+
+SCRATCH_BLOCK = 0
+
+
+class BlockError(RuntimeError):
+    """Raised when the pool cannot satisfy an allocation (exhaustion)."""
+
+
+def block_span(n_tokens: int, block_size: int) -> int:
+    """Logical blocks needed to hold ``n_tokens`` ring slots."""
+    return -(-int(n_tokens) // int(block_size))
+
+
+def blocks_written(pos: int, n_tokens: int, s_c: int, block_size: int):
+    """Logical block indices a write of ``n_tokens`` starting at absolute
+    position ``pos`` touches in a ring of ``s_c`` slots — the set COW must
+    make writable before the step (SWA wraparound folds high positions
+    back into the low logical blocks, which may be shared prefix)."""
+    slots = (pos + np.arange(int(n_tokens))) % int(s_c)
+    return sorted(set((slots // int(block_size)).tolist()))
+
+
+class BlockAllocator:
+    """Fixed pool of ``num_blocks`` physical blocks with refcounts.
+
+    Pure host bookkeeping — no device arrays.  Block 0 is reserved
+    (SCRATCH_BLOCK) and never handed out.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"need >= 2 blocks (1 scratch + 1 usable), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() -> low ids 1st
+        self._ref = np.zeros(num_blocks, np.int32)
+        self._ref[SCRATCH_BLOCK] = 1  # permanently pinned
+        self.peak_used = 0
+
+    # -- introspection -------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Allocated blocks, scratch excluded."""
+        return self.num_blocks - 1 - len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    def shared_blocks(self) -> int:
+        """Blocks physically shared right now (refcount > 1)."""
+        return int(np.sum(self._ref[1:] > 1))
+
+    # -- alloc / share / free ------------------------------------------
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise BlockError(
+                f"KV block pool exhausted: need {n}, have {len(self._free)} "
+                f"free of {self.num_blocks - 1} usable")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            assert self._ref[b] == 0
+            self._ref[b] = 1
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return out
+
+    def share(self, bid: int) -> int:
+        """Take an additional reference on an allocated block."""
+        if bid == SCRATCH_BLOCK or self._ref[bid] == 0:
+            raise ValueError(f"cannot share unallocated block {bid}")
+        self._ref[bid] += 1
+        return bid
+
+    def free(self, bids) -> None:
+        """Drop one reference per id; blocks return to the pool at zero.
+        Scratch entries (unallocated table slots) are ignored."""
+        for bid in bids:
+            if bid == SCRATCH_BLOCK:
+                continue
+            if self._ref[bid] <= 0:
+                raise ValueError(f"double free of block {bid}")
+            self._ref[bid] -= 1
+            if self._ref[bid] == 0:
+                self._free.append(int(bid))
+
+    def ensure_writable(self, table: np.ndarray, logical_blocks):
+        """Copy-on-write entry point: make every ``table[j]`` for j in
+        ``logical_blocks`` exclusively owned, allocating replacements for
+        shared entries.  Mutates ``table`` in place and returns
+        ``(src_ids, dst_ids)`` — the device copies the caller must issue
+        (``copy_blocks``) so the split block keeps its ring contents.
+        Atomic: replacements are allocated up front, so a BlockError on an
+        exhausted pool leaves the table and refcounts untouched (the engine
+        may evict prefix-cache blocks and retry)."""
+        shared = []
+        for j in logical_blocks:
+            bid = int(table[j])
+            if bid == SCRATCH_BLOCK:
+                raise ValueError(
+                    f"write into unallocated logical block {j} (table holds "
+                    f"scratch) — the admission reservation is too small")
+            if self._ref[bid] > 1:
+                shared.append(j)
+        fresh = self.alloc(len(shared))  # raises BEFORE any mutation
+        src, dst = [], []
+        for j, nb in zip(shared, fresh):
+            bid = int(table[j])
+            self._ref[bid] -= 1  # still > 0: other holders remain
+            table[j] = nb
+            src.append(bid)
+            dst.append(nb)
+        return src, dst
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    bid: int          # physical block id (cache holds one reference)
+    tick: int         # LRU stamp
+
+
+class PrefixCache:
+    """Hash-chained block-aligned prefix cache over prompt tokens.
+
+    ``lookup(tokens)`` returns the physical ids of the longest cached
+    chain of FULL blocks prefixing ``tokens``; ``register`` inserts a
+    request's full blocks (taking a cache-owned reference each);
+    ``evict_one`` releases the least-recently-used entry nobody else
+    references (called by the engine under pool pressure).
+    """
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self._by_hash: dict = {}   # chain-hash -> _PrefixEntry
+        self._tick = 0
+        self.hits = 0              # block-level hit count (stats)
+        self.lookups = 0
+
+    def _chain(self, tokens: np.ndarray):
+        """Yield (chain_hash, block_tokens) per full block of ``tokens``."""
+        bs = self.alloc.block_size
+        h = hash("prefix-root")
+        for j in range(len(tokens) // bs):
+            blk = tuple(int(t) for t in tokens[j * bs:(j + 1) * bs])
+            h = hash((h, blk))
+            yield h, j
+
+    def lookup(self, tokens: np.ndarray) -> list[int]:
+        """Longest cached full-block chain for this prompt; each returned
+        id already carries a NEW reference for the caller (shared)."""
+        self._tick += 1
+        out = []
+        for h, _ in self._chain(np.asarray(tokens)):
+            e = self._by_hash.get(h)
+            if e is None:
+                break
+            e.tick = self._tick
+            out.append(self.alloc.share(e.bid))
+            self.hits += 1
+        self.lookups += 1
+        return out
+
+    def register(self, tokens: np.ndarray, table: np.ndarray) -> int:
+        """Insert every full block of ``tokens`` (physical ids from
+        ``table``) not yet cached; the cache takes its own reference.
+        Returns how many new entries were added."""
+        self._tick += 1
+        added = 0
+        for h, j in self._chain(np.asarray(tokens)):
+            if h in self._by_hash:
+                self._by_hash[h].tick = self._tick
+                continue
+            bid = int(table[j])
+            if bid == SCRATCH_BLOCK:
+                break  # not materialized (shouldn't happen for prefill spans)
+            self._by_hash[h] = _PrefixEntry(bid=self.alloc.share(bid),
+                                            tick=self._tick)
+            added += 1
+        return added
+
+    def evict_one(self) -> bool:
+        """Release the LRU entry whose block only the cache still holds
+        (refcount 1 — freeing it returns a block to the pool).  Returns
+        False when nothing is evictable."""
+        cand = [(e.tick, h) for h, e in self._by_hash.items()
+                if self.alloc.refcount(e.bid) == 1]
+        if not cand:
+            return False
+        _, h = min(cand)
+        self.alloc.free([self._by_hash.pop(h).bid])
+        return True
+
+    def forget(self, bid: int) -> bool:
+        """Drop the cache's entry (and its reference) for physical block
+        ``bid`` regardless of LRU order.  Used when a writer is about to
+        overwrite a registered block (SWA ring wrap) and the pool has no
+        room for a COW copy: the write invalidates the cached prefix
+        content anyway, so releasing the cache ref lets the writer own the
+        block in place.  Returns False when no entry holds ``bid``."""
+        for h, e in self._by_hash.items():
+            if e.bid == bid:
+                del self._by_hash[h]
+                self.alloc.free([bid])
+                return True
+        return False
+
+    def drop_all(self) -> None:
+        for e in self._by_hash.values():
+            self.alloc.free([e.bid])
+        self._by_hash.clear()
+
+
+def copy_blocks(pool, src, dst):
+    """Device-side COW copy: ``pool`` KV leaves get blocks ``src`` copied
+    onto blocks ``dst`` (both 1-D int sequences).  Unit-stacked leaves
+    carry the block axis at position 1; tail leaves at 0.  Non-KV leaves
+    (lane states, ndim < 4) pass through untouched."""
+    if not len(src):
+        return pool
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+
+    def cp(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name not in ("k", "v"):
+            return leaf
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if "units" in names:  # (R, NB, H, bs, D)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])  # (NB, H, bs, D)
+
+    return jax.tree_util.tree_map_with_path(cp, pool)

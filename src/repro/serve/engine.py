@@ -110,6 +110,34 @@ class ServeConfig:
     # device-scaled slot pool: serve() runs mesh.size * per_device_batch_size
     # slots (None keeps the flat batch_size pool)
     per_device_batch_size: int | None = None
+    # --- paged KV cache (DESIGN.md §12) ---
+    # paged=True swaps serve()'s dense per-slot KV caches for a fixed pool
+    # of kv_block_size-token physical blocks addressed through per-lane
+    # block tables: admission is gated on free BLOCKS (a memory budget)
+    # instead of free slots, requests sharing a prompt prefix share
+    # refcounted blocks (copy-on-write on first divergent write), and long
+    # prompts prefill in prefill_bucket-sized chunks interleaved with
+    # decode steps.  Token-for-token identical to the dense engine at
+    # temperature 0 (tests/test_paged.py).
+    paged: bool = False
+    kv_block_size: int = 16      # ring slots per physical block; must divide
+                                 # every KV layer's cache length
+    # physical blocks in the pool INCLUDING the reserved scratch block 0.
+    # None sizes it to the dense engine's KV HBM budget at batch_size
+    # slots: batch_size * blocks-per-lane + 1 — prefix sharing then fits
+    # strictly more than batch_size concurrent requests in the same bytes.
+    kv_blocks: int | None = None
+    # concurrent lane count for the paged scheduler (None = the slot-pool
+    # size): lanes are cheap (a table row + recurrent state), blocks are
+    # the real budget, so set this above batch_size to let sharing admit
+    # more requests than the dense engine could hold
+    max_active: int | None = None
+    # prompts STRICTLY longer than this admit via chunked prefill
+    # (prefill_bucket tokens per scheduler iteration, decode lanes advance
+    # every iteration in between — zero decode stall).  None defaults to
+    # 4 * prefill_bucket; chunked admissions skip prefix sharing.
+    chunk_prefill_tokens: int | None = None
+    prefix_sharing: bool = True  # hash-chained prefix cache + COW splits
 
 
 @dataclasses.dataclass
@@ -197,24 +225,36 @@ def sample_tokens(logits, cfg: ArchConfig, temperature: float = 0.0,
     return tok
 
 
-def _cache_insert(pool, src, rows, slots):
-    """Copy prefill-cache batch rows ``rows`` into pool slots ``slots`` in
-    ONE pass over the pool (a per-request loop would reallocate the full
-    multi-layer pool once per admission).
+def _cache_insert(pool, src, rows, slots, kv_mode: str = "scatter"):
+    """THE host-side cache-row insert every admission path goes through:
+    copy ``src`` batch rows ``rows`` into pool lane ``slots`` in ONE pass
+    over the pool (a per-request loop would reallocate the full multi-layer
+    pool once per admission).  Unit-stack leaves carry batch at axis 1,
+    tail leaves at axis 0 — ONE path-aware rule instead of the old dual
+    tree.map branches.
 
-    Unit caches are stacked (R, B, ...) — batch is axis 1; tail caches are
-    plain (B, ...)."""
+    ``kv_mode`` says what KV leaves mean (everything else always scatters):
+      * 'scatter' — dense engine: KV rows scatter like state rows.
+      * 'src'     — paged admission: KV leaves are the shared block pools,
+                    already row-written by the block-table scatter
+                    (models.blocks.write_kv_blocks / fill_kv_cache_paged —
+                    the device-side helper chunked prefill and spec
+                    rollback also write through); take them from ``src``.
+      * 'pool'    — paged chunk-lane state reset: keep the pool's KV
+                    untouched, scatter only the recurrent lane states.
+    """
     rows = jnp.asarray(rows, jnp.int32)
     slots = jnp.asarray(slots, jnp.int32)
-    units = jax.tree.map(
-        lambda p, s: p.at[:, slots].set(s[:, rows].astype(p.dtype)),
-        pool["units"], src["units"],
-    )
-    tail = jax.tree.map(
-        lambda p, s: p.at[slots].set(s[rows].astype(p.dtype)),
-        pool["tail"], src["tail"],
-    )
-    return {"units": units, "tail": tail}
+
+    def ins(path, p, s):
+        names = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
+        if kv_mode != "scatter" and names[-1] in ("k", "v"):
+            return s if kv_mode == "src" else p
+        if "units" in names:  # stacked (R, B, ...): batch is axis 1
+            return p.at[:, slots].set(s[:, rows].astype(p.dtype))
+        return p.at[slots].set(s[rows].astype(p.dtype))
+
+    return jax.tree_util.tree_map_with_path(ins, pool, src)
 
 
 class Engine:
@@ -344,6 +384,94 @@ class Engine:
                 "draft_method": scfg.spec_draft_method,
                 "extra_weight_nbytes": 0,
             }
+        if scfg.paged:
+            self._init_paged()
+
+    # ------------------------------------------------------------------
+    # paged KV cache plumbing (DESIGN.md §12)
+    # ------------------------------------------------------------------
+
+    def _init_paged(self):
+        from repro.models import blocks as MB
+        from repro.serve import blocks as SB
+
+        cfg, scfg = self.cfg, self.scfg
+        bs = int(scfg.kv_block_size)
+        if bs < 1:
+            raise ValueError(f"kv_block_size must be >= 1, got {bs}")
+        kinds = list(cfg.pattern) + list(cfg.tail)
+        self._kv_scs = sorted({
+            MB.cache_len(cfg, k, scfg.max_len)
+            for k in kinds if MB.KIND_HAS_KV[k]})
+        for s_c in self._kv_scs:
+            if s_c % bs:
+                raise ValueError(
+                    f"kv_block_size {bs} must divide every KV cache length; "
+                    f"layer S_c {s_c} (max_len {scfg.max_len}, window "
+                    f"{cfg.window}) is not a multiple")
+        s_max = self._kv_scs[-1] if self._kv_scs else 0
+        # one table entry spans kv_block_size ring slots of EVERY KV layer
+        self._table_width = max(SB.block_span(s_max, bs), 1)
+        # blocks-per-lane the dense engine effectively pins per slot — the
+        # default pool budget is batch_size dense slots' worth (+ scratch)
+        self.kv_blocks = (int(scfg.kv_blocks) if scfg.kv_blocks is not None
+                          else scfg.batch_size * SB.block_span(s_max, bs) + 1)
+        if self._kv_scs and self.kv_blocks < 2:
+            raise ValueError(f"kv_blocks must be >= 2, got {self.kv_blocks}")
+        self.lanes = int(scfg.max_active or self.pool_size)
+        # prefix sharing is sound only while NO KV layer has wrapped its
+        # ring during prefill (a shared entry must hold pure prefix content
+        # in every layer's pool at once), so prompts longer than the
+        # smallest KV ring neither take nor register hits
+        self._share_limit = self._kv_scs[0] if self._kv_scs else 0
+        self._chunk_threshold = int(scfg.chunk_prefill_tokens
+                                    or 4 * scfg.prefill_bucket)
+        # chunk width: a verify pass must keep its ring slots distinct
+        self._chunk_T = min(scfg.prefill_bucket,
+                            *(self._kv_scs or [scfg.prefill_bucket]))
+        cfg_, max_len = cfg, scfg.max_len
+
+        def _decode_paged_fn(p, tok, cache, table, pos, write_len):
+            with self._trace_ctx():
+                return M.decode_step_paged(p, tok, cache, table, pos,
+                                           write_len, cfg_, max_len)
+
+        def _verify_paged_fn(p, tok, cache, table, pos):
+            with self._trace_ctx():
+                return M.verify_step_paged(p, tok, cache, table, pos, cfg_,
+                                           max_len)
+
+        def _commit_paged_fn(cache, table, steps, keep, pos):
+            with self._trace_ctx():
+                return M.rollback_cache_paged(cache, table, steps, keep, pos,
+                                              cfg_, max_len)
+
+        def _prefill_paged_fn(p, toks, cache, table, lens, write_start):
+            with self._trace_ctx():
+                return M.prefill_paged(p, {"tokens": toks}, cache, table,
+                                       cfg_, max_len, lengths=lens,
+                                       write_start=write_start)
+
+        self._decode_paged = jax.jit(_decode_paged_fn, donate_argnums=(2,))
+        self._verify_paged = jax.jit(_verify_paged_fn)
+        self._commit_paged = jax.jit(_commit_paged_fn, donate_argnums=(0,))
+        # eager on one device (mirrors the dense admission path); jitted
+        # sharded-in/sharded-out under a mesh
+        self._prefill_paged = (jax.jit(_prefill_paged_fn)
+                               if self.mesh is not None else _prefill_paged_fn)
+        self._spec_paged = None
+        if scfg.spec_k:
+            from repro.spec.decode import build_spec_round_paged
+
+            _round = build_spec_round_paged(
+                cfg, scfg.spec_k, scfg.spec_draft_bits,
+                scfg.spec_draft_method, max_len)
+
+            def _spec_paged_fn(p, cache, table, tok, pos, live):
+                with self._trace_ctx():
+                    return _round(p, cache, table, tok, pos, live)
+
+            self._spec_paged = jax.jit(_spec_paged_fn, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # multi-device plumbing (DESIGN.md §11)
@@ -383,7 +511,7 @@ class Engine:
         return PC.sharding_ctx(self.mesh, SH.batch_axes(self.mesh),
                                gather=False)
 
-    def _shard_cache(self, pool, batch_size: int):
+    def _shard_cache(self, pool, batch_size: int, paged: bool = False):
         """Place a fresh cache pool batch-sharded over the mesh
         (parallel.sharding.cache_pspecs); identity on one device."""
         if self.mesh is None:
@@ -392,7 +520,8 @@ class Engine:
 
         return jax.device_put(
             pool, SH.named(self.mesh,
-                           SH.cache_pspecs(pool, self.mesh, batch_size)))
+                           SH.cache_pspecs(pool, self.mesh, batch_size,
+                                           paged=paged)))
 
     # ------------------------------------------------------------------
     # batch API
@@ -493,6 +622,8 @@ class Engine:
             raise NotImplementedError(
                 "serve() schedules plain token prompts; use generate() for "
                 f"the {cfg.frontend} frontend")
+        if scfg.paged:
+            return self._serve_paged(requests, max_new_tokens)
         queue = deque(self._norm_request(r, i, max_new_tokens)
                       for i, r in enumerate(requests))
         nreq = len(queue)
@@ -654,6 +785,398 @@ class Engine:
         if rows:
             pool = _cache_insert(pool, cache, rows, slots)
         return pool, rng
+
+    # ------------------------------------------------------------------
+    # paged serving: block tables, COW prefix sharing, chunked prefill
+    # (DESIGN.md §12)
+    # ------------------------------------------------------------------
+
+    def _serve_paged(self, requests, max_new_tokens: int = 32):
+        """Paged twin of the dense serve loop: one physical block pool, one
+        int32 block table per lane.  Per iteration: admit (reserve blocks ->
+        grouped short prefill / chunk-lane setup) -> COW-split shared blocks
+        the step writes -> ONE decode step over every decode lane (decode
+        never waits on an in-flight chunked prefill) -> one chunk step.
+        Token-for-token identical to the dense engine (tests/test_paged.py).
+        """
+        from repro.serve import blocks as SB
+
+        cfg, scfg = self.cfg, self.scfg
+        queue = deque(self._norm_request(r, i, max_new_tokens)
+                      for i, r in enumerate(requests))
+        nreq = len(queue)
+        if len({r.uid for r in queue}) != nreq:
+            raise ValueError("request uids must be unique (results key on uid)")
+        headroom = scfg.spec_k
+        for r in queue:
+            if len(r.tokens) + r.max_new_tokens + headroom > scfg.max_len:
+                raise ValueError(
+                    f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
+                    f"{r.max_new_tokens}{f' + spec_k {headroom}' if headroom else ''}"
+                    f" exceeds max_len {scfg.max_len}")
+        B, bs = self.lanes, scfg.kv_block_size
+        alloc = SB.BlockAllocator(self.kv_blocks, bs) if self._kv_scs else None
+        prefix = (SB.PrefixCache(alloc)
+                  if alloc is not None and scfg.prefix_sharing else None)
+        nb_pool = self.kv_blocks if self._kv_scs else 1
+        cache = self._shard_cache(
+            M.init_paged_cache(cfg, B, nb_pool, bs), B, paged=True)
+        # bytes one table entry pins across every KV layer's pool (stats)
+        blk_bytes = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+            if str(getattr(path[-1], "key", "")) in ("k", "v"):
+                blk_bytes += leaf.nbytes // nb_pool
+        tables = np.zeros((B, self._table_width), np.int32)
+        lanes: list[dict | None] = [None] * B
+        tok = np.zeros(B, np.int64)
+        pos = np.zeros(B, np.int32)
+        out: dict = {}
+        rng = jax.random.PRNGKey(scfg.seed)
+        stats = {"decode_steps": 0, "occupied_lanes": 0, "admissions": 0,
+                 "prefill_tokens": 0, "decode_tokens": 0, "decode_time_s": 0.0,
+                 "cow_splits": 0, "chunk_steps": 0, "chunked_requests": 0,
+                 # decode lanes always advance every iteration regardless of
+                 # in-flight chunked prefills — 0 by construction, asserted
+                 # by benchmarks/check_paged_gate.py
+                 "stalled_decode_steps": 0,
+                 "interleaved_decode_steps": 0, "max_concurrent": 0,
+                 "shared_blocks_peak": 0, "admission_blocked": 0}
+        if self._spec_paged is not None:
+            stats.update(spec_rounds=0, draft_tokens=0,
+                         accepted_hist=np.zeros(scfg.spec_k + 2, np.int64))
+
+        while queue or any(l is not None for l in lanes):
+            qlen_before = len(queue)
+            free = [i for i in range(B) if lanes[i] is None]
+            if queue and free:
+                cache, rng = self._admit_paged(
+                    cache, queue, free, lanes, tables, alloc, prefix,
+                    tok, pos, out, stats, rng)
+            dec = [i for i, l in enumerate(lanes)
+                   if l is not None and l["phase"] == "decode"]
+            chk = [i for i, l in enumerate(lanes)
+                   if l is not None and l["phase"] == "chunk"]
+            if not dec and not chk:
+                if queue and len(queue) == qlen_before:
+                    raise SB.BlockError(
+                        f"request {queue[0].uid!r} cannot be admitted even "
+                        f"with an idle pool: its reservation exceeds "
+                        f"kv_blocks={self.kv_blocks}")
+                continue  # every admitted request finished at its 1st token
+            stats["max_concurrent"] = max(stats["max_concurrent"],
+                                          len(dec) + len(chk))
+            if alloc is not None:
+                stats["shared_blocks_peak"] = max(
+                    stats["shared_blocks_peak"], alloc.shared_blocks())
+            if dec:
+                stats["decode_steps"] += 1
+                stats["occupied_lanes"] += len(dec) + len(chk)
+                if chk:
+                    stats["interleaved_decode_steps"] += 1
+                t_step = time.perf_counter()
+                # COW before the step: every ring slot this round writes
+                # (spec rounds write up to spec_k+1) must be exclusively
+                # owned — shared prefix blocks split here
+                cache = self._cow_writable(
+                    cache, tables, alloc, prefix,
+                    [(i, int(pos[i]), 1 + headroom) for i in dec], stats)
+                if self._spec_paged is not None:
+                    cache = self._spec_advance_paged(
+                        cache, lanes, tables, alloc, prefix, dec, tok, pos,
+                        out, stats)
+                else:
+                    live = np.zeros(B, np.int32)
+                    live[dec] = 1  # idle/chunk lanes: write_len 0 freezes
+                    logits, cache = self._decode_paged(
+                        self.params, {"tokens": jnp.asarray(tok)[:, None]},
+                        cache, jnp.asarray(tables), jnp.asarray(pos),
+                        jnp.asarray(live))
+                    nxt, rng = self._sample_next(logits[:, -1], rng)
+                    nxt = np.asarray(nxt)
+                    for i in dec:
+                        r = lanes[i]["req"]
+                        pos[i] += 1
+                        t = int(nxt[i])
+                        out[r.uid].append(t)
+                        tok[i] = t
+                        stats["decode_tokens"] += 1
+                        if self._done(t, out[r.uid], r):
+                            self._release_lane(i, lanes, tables, alloc)
+                stats["decode_time_s"] += time.perf_counter() - t_step
+            if chk:
+                cache, rng = self._chunk_step(
+                    cache, lanes, tables, alloc, prefix, chk, tok, pos, out,
+                    stats, rng)
+        usable = (self.kv_blocks - 1) if alloc is not None else 0
+        self.last_stats = dict(
+            stats,
+            requests=nreq,
+            paged=True,
+            lanes=B,
+            kv_block_size=bs,
+            kv_blocks=self.kv_blocks if alloc is not None else 0,
+            occupancy=stats["occupied_lanes"] / max(stats["decode_steps"] * B,
+                                                    1),
+            decode_tps=stats["decode_tokens"] / max(stats["decode_time_s"],
+                                                    1e-9),
+            block_peak_used=alloc.peak_used if alloc is not None else 0,
+            block_utilization=(alloc.peak_used / usable) if usable else 0.0,
+            block_bytes=blk_bytes,
+            prefix_lookups=prefix.lookups if prefix is not None else 0,
+            prefix_hit_blocks=prefix.hits if prefix is not None else 0,
+            # every prefix hit is one block of KV HBM NOT re-materialized
+            bytes_saved_sharing=(prefix.hits if prefix is not None else 0)
+            * blk_bytes,
+        )
+        if self._spec_paged is not None:
+            self.last_stats["accepted_hist"] = stats["accepted_hist"].tolist()
+            self.last_stats["mean_accepted"] = (
+                float(np.dot(stats["accepted_hist"],
+                             np.arange(scfg.spec_k + 2)))
+                / max(int(stats["accepted_hist"].sum()), 1))
+        if prefix is not None:
+            prefix.drop_all()
+        return {uid: np.asarray(toks, np.int64) for uid, toks in out.items()}
+
+    def _reserve_blocks(self, alloc, prefix, r, headroom, use_prefix=True):
+        """Reserve the lane's whole logical span up front: enough blocks for
+        min(prompt + budget + headroom, s_c_max) ring slots, minus prefix
+        hits.  Returns (block_ids, n_hit_blocks) or None when the pool
+        cannot cover it even after evicting cache-only prefix blocks —
+        admission then waits (FIFO, no preemption)."""
+        from repro.serve import blocks as SB
+
+        if alloc is None:
+            return [], 0
+        bs = self.scfg.kv_block_size
+        total = min(len(r.tokens) + r.max_new_tokens + headroom,
+                    self._kv_scs[-1])
+        span = SB.block_span(total, bs)
+        hits = []
+        if (use_prefix and prefix is not None
+                and len(r.tokens) <= self._share_limit):
+            hits = prefix.lookup(r.tokens)
+        need = span - len(hits)
+        while need > alloc.free_blocks:
+            if prefix is None or not prefix.evict_one():
+                break
+        if need > alloc.free_blocks:
+            if hits:
+                alloc.free(hits)
+            return None
+        return hits + alloc.alloc(need), len(hits)
+
+    def _admit_paged(self, cache, queue, free, lanes, tables, alloc, prefix,
+                     tok, pos, out, stats, rng):
+        """Admit queued requests into free lanes.  Short prompts run one
+        grouped ``prefill_paged`` (per-row write_start skips re-writing
+        prefix-hit blocks); prompts past the chunk threshold become 'chunk'
+        lanes that prefill incrementally between decode steps.  FIFO: a
+        request that cannot reserve its blocks parks the queue (no
+        skip-ahead, so admission order == arrival order)."""
+        scfg = self.scfg
+        headroom = scfg.spec_k
+        group, chunk_new = [], []
+        while queue and free:
+            r = queue[0]
+            chunked = len(r.tokens) > self._chunk_threshold
+            res = self._reserve_blocks(alloc, prefix, r, headroom,
+                                       use_prefix=not chunked)
+            if res is None:
+                stats["admission_blocked"] += 1
+                break
+            queue.popleft()
+            bids, n_hit = res
+            lane = free.pop(0)
+            tables[lane, :] = 0
+            tables[lane, : len(bids)] = bids
+            if chunked:
+                lanes[lane] = {"req": r, "phase": "chunk", "done": 0}
+                chunk_new.append(lane)
+                stats["chunked_requests"] += 1
+                stats["admissions"] += 1
+                continue
+            # register at RESERVATION time: within one grouped prefill every
+            # pool write lands before any lane's first pool read, so later
+            # group members (same iteration!) already share these entries
+            if prefix is not None and len(r.tokens) <= self._share_limit:
+                prefix.register(r.tokens, tables[lane])
+            group.append((lane, r, n_hit * scfg.kv_block_size))
+        if chunk_new:
+            # chunk lanes start from pristine recurrent state; their KV
+            # arrives chunk by chunk through the block table
+            cache = _cache_insert(
+                cache, M.init_paged_cache(self.cfg, 1, 1, scfg.kv_block_size),
+                [0] * len(chunk_new), chunk_new, kv_mode="pool")
+        if group:
+            lens = np.asarray([len(r.tokens) for _, r, _ in group], np.int32)
+            bucket = scfg.prefill_bucket
+            L = max(-(-int(lens.max()) // bucket) * bucket, bucket)
+            toks = np.zeros((len(group), L), np.int64)
+            for j, (_, r, _) in enumerate(group):
+                toks[j, : lens[j]] = np.asarray(r.tokens)
+            starts = np.asarray([s for _, _, s in group], np.int32)
+            logits, src, _ = self._prefill_paged(
+                self.params, jnp.asarray(toks), cache,
+                jnp.asarray(tables[[ln for ln, _, _ in group]]),
+                jnp.asarray(lens), jnp.asarray(starts))
+            first, rng = self._sample_next(logits[:, -1], rng)
+            first = np.asarray(first)
+            stats["admissions"] += len(group)
+            stats["prefill_tokens"] += int(lens.sum())
+            rows, slots = [], []
+            for j, (lane, r, _) in enumerate(group):
+                t = int(first[j])
+                out[r.uid] = [t]
+                if self._done(t, out[r.uid], r):
+                    self._release_lane(lane, lanes, tables, alloc)
+                    continue
+                rows.append(j)
+                slots.append(lane)
+                lanes[lane] = {"req": r, "phase": "decode"}
+                tok[lane] = t
+                pos[lane] = int(lens[j])
+            # KV already landed in the shared pools through the block-table
+            # scatter; only recurrent lane states need the row insert
+            cache = _cache_insert(cache, src, rows, slots, kv_mode="src")
+        return cache, rng
+
+    def _release_lane(self, lane, lanes, tables, alloc):
+        """Free one reference on every block the lane's table holds (prefix
+        cache refs keep shared blocks alive) and zero the row."""
+        lanes[lane] = None
+        if alloc is not None:
+            alloc.free(int(b) for b in tables[lane] if b)
+        tables[lane, :] = 0
+
+    def _cow_writable(self, cache, tables, alloc, prefix, writes, stats):
+        """Copy-on-write pre-step: for each (lane, start_pos, n_tokens)
+        write this iteration will issue, split every shared block it touches
+        (union over the distinct KV ring lengths — SWA wraparound folds high
+        positions back into low logical blocks) and device-copy contents in
+        ONE batched call.  Under pool pressure, evicts cache-only prefix
+        blocks and retries."""
+        from repro.serve import blocks as SB
+
+        if alloc is None:
+            return cache
+        bs = self.scfg.kv_block_size
+        src_all, dst_all = [], []
+        for lane, p0, n in writes:
+            ent = set()
+            for s_c in self._kv_scs:
+                ent.update(SB.blocks_written(p0, n, s_c, bs))
+            while True:
+                try:
+                    s, d = alloc.ensure_writable(tables[lane], sorted(ent))
+                    break
+                except SB.BlockError:
+                    if prefix is not None and prefix.evict_one():
+                        continue
+                    # last resort: un-register a to-be-overwritten block the
+                    # cache ALONE shares with this lane (refcount exactly 2)
+                    # — the write invalidates its cached content anyway, and
+                    # releasing the cache ref makes it writable in place
+                    forgot = False
+                    if prefix is not None:
+                        for j in ent:
+                            bid = int(tables[lane][j])
+                            if (alloc.refcount(bid) == 2
+                                    and prefix.forget(bid)):
+                                forgot = True
+                    if not forgot:
+                        raise
+            src_all += s
+            dst_all += d
+        if src_all:
+            stats["cow_splits"] += len(src_all)
+            cache = SB.copy_blocks(cache, src_all, dst_all)
+        return cache
+
+    def _chunk_step(self, cache, lanes, tables, alloc, prefix, chk, tok, pos,
+                    out, stats, rng):
+        """Advance every chunk lane by one <=chunk_T-token slice through the
+        verify path (teacher-forced forward over known prompt tokens) and
+        commit keep=n_valid — the SAME cache-write helper spec rollback
+        uses.  The final chunk's last logit samples the first token and the
+        lane flips to 'decode'."""
+        scfg = self.scfg
+        B, T = self.lanes, self._chunk_T
+        toks = np.zeros((B, T), np.int64)
+        posv = np.zeros(B, np.int32)
+        keep = np.zeros(B, np.int32)  # 0 freezes idle/decode lanes
+        fin = []  # (lane, n_valid in this chunk)
+        for i in chk:
+            l = lanes[i]
+            r = l["req"]
+            start = l["done"]
+            n = min(T, len(r.tokens) - start)
+            toks[i, :n] = np.asarray(r.tokens[start:start + n])
+            posv[i] = start
+            keep[i] = n
+            l["done"] = start + n
+            if l["done"] == len(r.tokens):
+                fin.append((i, n))
+        cache = self._cow_writable(
+            cache, tables, alloc, prefix,
+            [(i, int(posv[i]), int(keep[i])) for i in chk], stats)
+        logits, steps = self._verify_paged(
+            self.params, {"tokens": jnp.asarray(toks)}, cache,
+            jnp.asarray(tables), jnp.asarray(posv))
+        cache = self._commit_paged(cache, jnp.asarray(tables), steps,
+                                   jnp.asarray(keep), jnp.asarray(posv))
+        stats["chunk_steps"] += 1
+        stats["prefill_tokens"] += int(sum(int(keep[i]) for i in chk))
+        if fin:
+            sel = logits[jnp.asarray([i for i, _ in fin]),
+                         jnp.asarray([n - 1 for _, n in fin])]
+            first, rng = self._sample_next(sel, rng)
+            first = np.asarray(first)
+            for j, (i, _) in enumerate(fin):
+                r = lanes[i]["req"]
+                t = int(first[j])
+                out[r.uid] = [t]
+                # register only now — the blocks filled progressively
+                if prefix is not None and len(r.tokens) <= self._share_limit:
+                    prefix.register(r.tokens, tables[i])
+                if self._done(t, out[r.uid], r):
+                    self._release_lane(i, lanes, tables, alloc)
+                    continue
+                lanes[i] = {"req": r, "phase": "decode"}
+                tok[i] = t
+                pos[i] = len(r.tokens)
+        return cache, rng
+
+    def _spec_advance_paged(self, cache, lanes, tables, alloc, prefix, dec,
+                            tok, pos, out, stats):
+        """One speculation round through the block tables.  The jitted round
+        drafts + verifies WITHOUT touching the pool, then commits only the
+        accepted prefix (models.rollback_cache_paged — commit-on-accept:
+        rejected draft positions never reach a shared block)."""
+        live = np.zeros(self.lanes, np.int32)
+        live[dec] = 1
+        target, keep, cache = self._spec_paged(
+            self.params, cache, jnp.asarray(tables), jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(live))
+        target, keep = np.asarray(target), np.asarray(keep)
+        stats["spec_rounds"] += 1
+        stats["draft_tokens"] += self.scfg.spec_k * len(dec)
+        for i in dec:
+            r = lanes[i]["req"]
+            kp = int(keep[i])
+            stats["accepted_hist"][kp] += 1
+            committed = 0
+            for j in range(kp):
+                t = int(target[i, j])
+                out[r.uid].append(t)
+                committed += 1
+                stats["decode_tokens"] += 1
+                if self._done(t, out[r.uid], r):
+                    self._release_lane(i, lanes, tables, alloc)
+                    break
+            pos[i] += committed
+            tok[i] = int(target[i, committed - 1])
+        return cache
 
     def _done(self, t: int, emitted: list, r: Request) -> bool:
         eos = self.scfg.eos_id

@@ -34,7 +34,7 @@ from repro.models import model as M
 
 from .draft import DEFAULT_DRAFT_BITS, draft_params
 
-__all__ = ["greedy_accept", "build_spec_round"]
+__all__ = ["greedy_accept", "build_spec_round", "build_spec_round_paged"]
 
 
 def greedy_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
@@ -93,5 +93,56 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
         cache_rb = M.rollback_cache(
             cache, new_cache, rollback, keep, pos, cfg, spec_k + 1)
         return target, keep, cache_rb
+
+    return spec_round
+
+
+def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
+                           draft_method: str | None = "dsbp_ref",
+                           max_len: int = 0):
+    """Paged twin of :func:`build_spec_round`: ``(params, cache, table, tok,
+    pos, live) -> (target, keep, new_cache)`` where ``cache`` is the block
+    pool and ``table (B, W)`` the per-lane block tables.
+
+    Structural difference from the dense round: the paged verify path is
+    COMMIT-ON-ACCEPT.  Drafting writes only into a traced scratch copy of
+    the pool; ``verify_step_paged`` returns the fresh K/V as *steps* without
+    touching the pool, and ``rollback_cache_paged`` then writes exactly the
+    ``keep`` accepted positions through the block tables — a rejected draft
+    position never reaches a (possibly shared) physical block, so rollback
+    is bit-exact by construction instead of by restoration.  ``live`` masks
+    idle/chunk lanes: keep*live == 0 freezes their blocks and recurrent
+    state entirely.
+    """
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    dcfg = cfg
+    if draft_method is not None and cfg.quant is not None:
+        dcfg = cfg.replace(quant_method=draft_method)
+
+    def spec_round(params, cache, table, tok, pos, live):
+        from repro.serve.engine import sample_tokens
+
+        dp = draft_params(params, draft_bits)
+        dcache, t = cache, tok  # value semantics under jit: the draft's
+        # pool writes land in a scratch copy the round discards
+        drafts = []
+        for j in range(spec_k):
+            lg, dcache = M.decode_step_paged(
+                dp, {"tokens": t[:, None]}, dcache, table, pos + j, live,
+                dcfg, max_len)
+            t = sample_tokens(lg[:, -1], dcfg).astype(tok.dtype)
+            drafts.append(t)
+        draft = jnp.stack(drafts, axis=1)                      # (B, γ)
+        toks = jnp.concatenate([tok[:, None], draft], axis=1)  # (B, γ+1)
+        logits, steps = M.verify_step_paged(
+            params, {"tokens": toks}, cache, table, pos, cfg, max_len)
+        b, t_v, v = logits.shape
+        target = sample_tokens(
+            logits.reshape(b * t_v, v), cfg).reshape(b, t_v).astype(tok.dtype)
+        keep = greedy_accept(draft, target) * live
+        new_cache = M.rollback_cache_paged(
+            cache, table, steps, keep, pos, cfg, max_len)
+        return target, keep, new_cache
 
     return spec_round

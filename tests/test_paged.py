@@ -1,0 +1,451 @@
+"""Paged KV cache: block pool, tables, COW prefix sharing, chunked prefill
+(DESIGN.md §12).
+
+Core contract: the paged engine emits token-for-token what the dense engine
+emits — float and packed weights, speculation on and off, every layer
+family (full attention, SWA ring, RG-LRU, SSD) — while storing KV in a
+shared physical block pool addressed through per-lane block tables.  Plus
+host-side allocator/prefix-cache mechanics, bit-exact commit-on-accept
+speculation at the model layer, SWA wraparound through shared blocks (the
+COW trigger), over-subscription via prefix sharing, and the paged Pallas
+flash kernel vs the gathered-view oracle.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.serve import blocks as SB
+from repro.serve.engine import Engine, ServeConfig
+
+ARCHS = ["yi-9b", "mixtral-8x7b", "recurrentgemma-2b", "mamba2-370m"]
+
+
+def _cfg(arch="yi-9b", **kw):
+    return smoke_config(arch).replace(remat=False, **kw)
+
+
+def _reqs(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (l,)) for l in lens]
+
+
+def _assert_same(out_a, out_b):
+    assert set(out_a) == set(out_b)
+    for k in out_a:
+        assert np.array_equal(out_a[k], out_b[k]), (
+            k, out_a[k].tolist(), out_b[k].tolist())
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator + prefix cache
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_refcount():
+    a = SB.BlockAllocator(6, 4)  # 5 usable (block 0 = scratch)
+    assert a.free_blocks == 5
+    got = a.alloc(3)
+    assert len(set(got)) == 3 and SB.SCRATCH_BLOCK not in got
+    assert a.used_blocks == 3 and a.peak_used == 3
+    a.share(got[0])
+    assert a.refcount(got[0]) == 2 and a.shared_blocks() == 1
+    a.free(got)           # drops one ref each: got[0] survives
+    assert a.refcount(got[0]) == 1 and a.used_blocks == 1
+    a.free([got[0]])
+    assert a.free_blocks == 5
+    with pytest.raises(ValueError):
+        a.free([got[0]])  # double free
+    with pytest.raises(ValueError):
+        a.share(got[1])   # unallocated
+
+
+def test_allocator_exhaustion_and_scratch_pinned():
+    a = SB.BlockAllocator(4, 2)
+    a.alloc(3)
+    with pytest.raises(SB.BlockError):
+        a.alloc(1)
+    assert a.refcount(SB.SCRATCH_BLOCK) == 1  # never handed out
+
+
+def test_block_span_and_blocks_written():
+    assert SB.block_span(0, 4) == 0
+    assert SB.block_span(1, 4) == 1
+    assert SB.block_span(9, 4) == 3
+    # no wrap: contiguous logical blocks
+    assert SB.blocks_written(6, 3, 32, 4) == [1, 2]
+    # SWA wrap: positions 14,15,16,17 in a 16-ring fold into blocks 3 and 0
+    assert SB.blocks_written(14, 4, 16, 4) == [0, 3]
+
+
+def test_ensure_writable_cow_and_atomicity():
+    a = SB.BlockAllocator(5, 4)
+    table = np.zeros(4, np.int32)
+    table[:3] = a.alloc(3)
+    a.share(int(table[1]))  # someone else holds logical block 1
+    old = int(table[1])
+    src, dst = a.ensure_writable(table, [0, 1, 2])
+    assert src == [old] and table[1] == dst[0] != old
+    assert a.refcount(old) == 1 and a.refcount(dst[0]) == 1
+    # exhaustion mid-request leaves the table untouched (atomic alloc-first)
+    a2 = SB.BlockAllocator(4, 4)
+    t2 = np.zeros(3, np.int32)
+    t2[:3] = a2.alloc(3)  # pool now empty
+    for j in range(3):
+        a2.share(int(t2[j]))
+    before = t2.copy()
+    with pytest.raises(SB.BlockError):
+        a2.ensure_writable(t2, [0, 1, 2])
+    assert np.array_equal(t2, before)
+    assert all(a2.refcount(int(b)) == 2 for b in before)
+
+
+def test_prefix_cache_lookup_register_evict():
+    a = SB.BlockAllocator(10, 4)
+    p = SB.PrefixCache(a)
+    toks = np.arange(10)  # 2 full blocks + a partial
+    table = np.zeros(4, np.int32)
+    table[:3] = a.alloc(3)
+    assert p.register(toks, table) == 2  # partial block never cached
+    assert a.refcount(int(table[0])) == 2  # cache holds its own ref
+    hits = p.lookup(toks)
+    assert hits == [int(table[0]), int(table[1])]
+    assert a.refcount(int(table[0])) == 3  # lookup refs belong to the caller
+    # diverging second block: only block 0 hits
+    other = np.concatenate([np.arange(4), 99 + np.arange(6)])
+    oh = p.lookup(other)
+    assert oh == [int(table[0])]
+    a.free(hits)
+    a.free(oh)
+    # eviction only releases blocks nobody but the cache holds
+    assert not p.evict_one()  # the table still references every block
+    a.free(int(b) for b in table[:3])
+    assert p.evict_one() and p.evict_one()
+    assert not p.evict_one()
+    assert a.free_blocks == 9
+
+
+def test_copy_blocks_units_and_tail():
+    pool = {
+        "units": [{"k": jnp.arange(2 * 5 * 2 * 4 * 3, dtype=jnp.float32)
+                   .reshape(2, 5, 2, 4, 3)}],
+        "tail": [{"v": jnp.arange(5 * 2 * 4 * 3, dtype=jnp.float32)
+                  .reshape(5, 2, 4, 3),
+                  "h": jnp.ones((5, 3))}],  # non-KV leaf passes through
+    }
+    out = SB.copy_blocks(pool, [1, 3], [2, 4])
+    assert np.array_equal(out["units"][0]["k"][:, 2], pool["units"][0]["k"][:, 1])
+    assert np.array_equal(out["tail"][0]["v"][4], pool["tail"][0]["v"][3])
+    assert np.array_equal(out["tail"][0]["h"], pool["tail"][0]["h"])
+    assert SB.copy_blocks(pool, [], []) is pool
+
+
+# ---------------------------------------------------------------------------
+# dense/paged token parity through the serving engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_parity_float(arch):
+    """Paged == dense token-for-token on every layer family (full attn,
+    SWA ring, RG-LRU, SSD) with lane reuse and mid-flight admission."""
+    cfg = _cfg(arch)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [5, 11, 8, 6, 9], seed=1)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=32,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=8)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=32,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4))
+    op = p.serve(reqs, max_new_tokens=8)
+    _assert_same(od, op)
+    st = p.last_stats
+    assert st["paged"] and st["stalled_decode_steps"] == 0
+    if arch != "mamba2-370m":
+        assert st["block_peak_used"] > 0
+    else:  # no KV layers: table stays scratch-only, pool bookkeeping off
+        assert st["kv_blocks"] == 0
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "recurrentgemma-2b"])
+def test_paged_parity_packed(arch):
+    """Parity holds through the packed DSBP serving path too."""
+    cfg = _cfg(arch, quant="precise")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [5, 9, 7], seed=2)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=32,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=32,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4))
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_spec_parity(arch):
+    """Speculative paged serving matches dense speculative serving on all
+    four families — the commit-on-accept path through block tables commits
+    exactly the accepted greedy prefix."""
+    cfg = _cfg(arch)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [5, 9, 7, 6], seed=3)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=48,
+                                        prefill_bucket=8, spec_k=3))
+    od = d.serve(reqs, max_new_tokens=8)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=48,
+                                        prefill_bucket=8, spec_k=3,
+                                        paged=True, kv_block_size=4))
+    op = p.serve(reqs, max_new_tokens=8)
+    _assert_same(od, op)
+    assert p.last_stats["spec_rounds"] > 0
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "recurrentgemma-2b"])
+def test_paged_commit_writes_only_accepted(arch):
+    """Model-layer bit-exactness of commit-on-accept: after
+    ``rollback_cache_paged(keep)`` every KV ring slot in the accepted
+    window holds exactly the full-commit value and every other slot is
+    BIT-identical to the pre-verify pool (through the table — the scratch
+    block soaks up all masked writes); keep=0 freezes KV and recurrent
+    state entirely."""
+    from repro.models import attention as A
+    from repro.models import blocks as MB
+
+    cfg = _cfg(arch)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    bs, max_len, B, P = 4, 32, 2, 8
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, (B, P))
+    W = 32 // bs
+    table = np.stack([np.arange(1, 1 + W), np.arange(1 + W, 1 + 2 * W)])
+    table = jnp.asarray(table, jnp.int32)
+    cache = M.init_paged_cache(cfg, B, 2 * W + 1, bs)
+    _, cache, _ = M.prefill_paged(
+        params, {"tokens": jnp.asarray(prompt)}, cache, table,
+        cfg, max_len, lengths=np.full(B, P, np.int32))
+    toks = rng.integers(0, cfg.vocab_size, (B, 4))
+    pos = jnp.full((B,), P, jnp.int32)
+    _, steps = M.verify_step_paged(
+        params, {"tokens": jnp.asarray(toks)}, cache, table, pos, cfg,
+        max_len)
+    keep = np.asarray([3, 1], np.int32)
+    cache_a = M.rollback_cache_paged(cache, table, steps,
+                                     jnp.asarray(keep), pos, cfg, max_len)
+    cache_full = M.rollback_cache_paged(
+        cache, table, steps, jnp.full((B,), 4, jnp.int32), pos, cfg, max_len)
+    cache_frozen = M.rollback_cache_paged(
+        cache, table, steps, jnp.zeros((B,), jnp.int32), pos, cfg, max_len)
+
+    kinds = list(cfg.pattern)
+    checked_kv = checked_state = False
+    for li, kind in enumerate(kinds):
+        if MB.KIND_HAS_KV[kind]:
+            s_c = MB.cache_len(cfg, kind, max_len)
+            # per-lane accepted ring slots (may wrap on SWA layers)
+            acc = np.zeros((B, s_c), bool)
+            for b in range(B):
+                acc[b, (P + np.arange(keep[b])) % s_c] = True
+            for name in ("k", "v"):
+                ga = np.asarray(jax.vmap(
+                    lambda pk: A.gather_kv_view(pk, table, s_c)
+                )(cache_a["units"][li][name]))
+                g0 = np.asarray(jax.vmap(
+                    lambda pk: A.gather_kv_view(pk, table, s_c)
+                )(cache["units"][li][name]))
+                gf = np.asarray(jax.vmap(
+                    lambda pk: A.gather_kv_view(pk, table, s_c)
+                )(cache_full["units"][li][name]))
+                gz = np.asarray(jax.vmap(
+                    lambda pk: A.gather_kv_view(pk, table, s_c)
+                )(cache_frozen["units"][li][name]))
+                m = acc[None, :, None, :, None]
+                assert np.array_equal(ga, np.where(m, gf, g0))
+                assert np.array_equal(gz, g0)
+            checked_kv = True
+        else:
+            # recurrent state: keep=0 rows are BIT-frozen
+            for lz, l0 in zip(jax.tree.leaves(cache_frozen["units"][li]),
+                              jax.tree.leaves(cache["units"][li])):
+                assert np.array_equal(np.asarray(lz), np.asarray(l0))
+            checked_state = True
+    assert checked_kv
+    assert checked_state == (arch == "recurrentgemma-2b")
+
+
+# ---------------------------------------------------------------------------
+# SWA ring wraparound + COW through shared blocks
+# ---------------------------------------------------------------------------
+
+def test_paged_swa_wraparound_parity():
+    """SWA ring (cache shorter than prompt+generation) wraps THROUGH the
+    block table: parity with the dense ring at differing lane positions."""
+    cfg = _cfg("mixtral-8x7b", window=8)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [6, 14, 10, 12], seed=5)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=24,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=24,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4))
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+
+
+def test_paged_cow_split_on_shared_ring_wrap():
+    """Two lanes share a whole-prompt prefix; decoding past the SWA window
+    wraps each lane's writes back into the shared blocks — the COW split
+    must fire and both lanes must still match the dense stream."""
+    cfg = _cfg("mixtral-8x7b", window=8)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    shared = rng.integers(0, cfg.vocab_size, (8,))
+    reqs = [shared.copy(), shared.copy()]
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=24,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=8)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=24,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4))
+    op = p.serve(reqs, max_new_tokens=8)
+    _assert_same(od, op)
+    st = p.last_stats
+    assert st["prefix_hit_blocks"] > 0, "whole-prompt prefix must hit"
+    assert st["cow_splits"] > 0, "ring wrap into shared blocks must split"
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_paged_chunked_prefill_parity_and_interleave():
+    """Long prompts chunk through the verify path between decode steps:
+    tokens match the dense engine, decode lanes never stall, and at least
+    one decode step runs while a chunked prefill is in flight."""
+    cfg = _cfg("yi-9b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [20, 5, 18, 7], seed=7)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=40,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=40,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4,
+                                        chunk_prefill_tokens=8))
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+    st = p.last_stats
+    assert st["chunked_requests"] == 2
+    assert st["chunk_steps"] >= 2
+    assert st["stalled_decode_steps"] == 0
+    assert st["interleaved_decode_steps"] > 0
+
+
+def test_paged_chunked_prefill_recurrent():
+    """Chunked prefill must carry recurrent (RG-LRU + SWA) state correctly
+    across chunk boundaries."""
+    cfg = _cfg("recurrentgemma-2b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [20, 5, 18], seed=8)
+    d = Engine(params, cfg, ServeConfig(batch_size=2, max_len=40,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    p = Engine(params, cfg, ServeConfig(batch_size=2, max_len=40,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4,
+                                        chunk_prefill_tokens=8))
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+    assert p.last_stats["chunked_requests"] == 2
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: over-subscription at a fixed KV HBM budget
+# ---------------------------------------------------------------------------
+
+def test_paged_oversubscription_shared_system_prompt():
+    """8 requests sharing a system prompt run 8-concurrent on the KV budget
+    of 4 dense slots — strictly more lanes than the dense pool could hold —
+    with physically shared blocks (refcount > 1) at peak."""
+    cfg = _cfg("yi-9b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    sys_prompt = rng.integers(0, cfg.vocab_size, (16,))
+    reqs = [np.concatenate([sys_prompt, rng.integers(0, cfg.vocab_size, (4,))])
+            for _ in range(8)]
+    d = Engine(params, cfg, ServeConfig(batch_size=8, max_len=32,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    # batch_size=4 fixes kv_blocks to FOUR dense slots' worth of KV HBM
+    p = Engine(params, cfg, ServeConfig(batch_size=4, max_len=32,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4, max_active=8))
+    assert p.kv_blocks == 4 * (32 // 4) + 1
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+    st = p.last_stats
+    assert st["max_concurrent"] == 8 > 4
+    assert st["shared_blocks_peak"] > 0
+    assert st["prefix_hit_blocks"] >= 7 * 4  # 4 shared prefix blocks x 7
+    assert st["bytes_saved_sharing"] > 0
+    assert st["admission_blocked"] == 0
+
+
+def test_paged_admission_gates_on_free_blocks():
+    """A queue larger than the pool admits in waves (admission_blocked > 0)
+    and still completes with dense-parity tokens; a request that can never
+    fit raises BlockError instead of spinning."""
+    cfg = _cfg("yi-9b")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    reqs = _reqs(cfg, [8, 8, 8, 8], seed=10)
+    d = Engine(params, cfg, ServeConfig(batch_size=4, max_len=16,
+                                        prefill_bucket=8))
+    od = d.serve(reqs, max_new_tokens=6)
+    # pool of 2 lanes' worth of blocks but 4 lanes: admissions must wait
+    p = Engine(params, cfg, ServeConfig(batch_size=4, max_len=16,
+                                        prefill_bucket=8, paged=True,
+                                        kv_block_size=4, kv_blocks=9,
+                                        prefix_sharing=False))
+    op = p.serve(reqs, max_new_tokens=6)
+    _assert_same(od, op)
+    assert p.last_stats["admission_blocked"] > 0
+    tiny = Engine(params, cfg, ServeConfig(batch_size=1, max_len=16,
+                                           prefill_bucket=8, paged=True,
+                                           kv_block_size=4, kv_blocks=3))
+    with pytest.raises(SB.BlockError):
+        tiny.serve(_reqs(cfg, [8], seed=11), max_new_tokens=6)
+
+
+# ---------------------------------------------------------------------------
+# paged Pallas flash kernel
+# ---------------------------------------------------------------------------
+
+def test_paged_flash_kernel_matches_gathered_view():
+    from repro.kernels.flash_attention import (
+        flash_attention_kernel_call, paged_flash_attention_kernel_call)
+
+    rng = np.random.default_rng(12)
+    d, bs, nb, npool, sq = 16, 8, 4, 9, 32
+    q = jnp.asarray(rng.normal(size=(sq, d)).astype(np.float32))
+    pk = jnp.asarray(rng.normal(size=(npool, bs, d)).astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=(npool, bs, d)).astype(np.float32))
+    table = jnp.asarray([3, 1, 7, 5], jnp.int32)
+    gk = pk[table].reshape(nb * bs, d)
+    gv = pv[table].reshape(nb * bs, d)
+    for window in (None, 8):
+        ref = flash_attention_kernel_call(q, gk, gv, causal=True,
+                                          window=window, bq=8, bkv=8)
+        out = paged_flash_attention_kernel_call(
+            q, pk, pv, table, kv_len=nb * bs, causal=True, window=window,
+            q_start=0, bq=8)
+        assert np.array_equal(np.asarray(out), np.asarray(ref)), window
+    # partial last block: kv_len masks the tail
+    q1 = q[:1]
+    ref = flash_attention_kernel_call(q1, gk[:27], gv[:27], causal=False,
+                                      bq=1, bkv=1)
+    out = paged_flash_attention_kernel_call(q1, pk, pv, table, kv_len=27,
+                                            causal=False, bq=1)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)

@@ -226,3 +226,40 @@ def test_serve_container_shards_and_no_relayout():
         assert n_t == 0, (axes, n_t)
     print("layout + no-relayout OK")
     """)
+
+
+def test_serve_parity_paged_vs_dense_under_mesh():
+    """Paged serving (block pool + tables + prefix sharing) emits exactly
+    the dense engine's tokens AT THE SAME topology, both on one device and
+    on the (2,4) mesh — the block pool shards over the batch axes
+    (parallel.sharding.cache_pspecs paged rule) and GSPMD turns the table
+    gathers into collectives.  (Mesh-vs-single is compared per ENGINE, the
+    same contract the dense parity test asserts: collectives reorder float
+    sums, so cross-topology equality is a property of the model, not of
+    the paged cache.)"""
+    _run("""
+    from repro.configs import smoke_config
+    from repro.models import model as M
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = smoke_config("yi-9b").replace(remat=False)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, (8,))
+    reqs = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, (3,))])
+            for _ in range(4)] + [rng.integers(0, cfg.vocab_size, (6,))]
+    pkw = dict(batch_size=2, max_len=32, prefill_bucket=8, paged=True,
+               kv_block_size=4, max_active=4)
+    for mesh_shape in (None, (2, 4)):
+        d = Engine(params, cfg, ServeConfig(batch_size=4, max_len=32,
+                                            prefill_bucket=8,
+                                            mesh_shape=mesh_shape))
+        od = d.serve(reqs, max_new_tokens=6)
+        p = Engine(params, cfg, ServeConfig(**pkw, mesh_shape=mesh_shape))
+        op = p.serve(reqs, max_new_tokens=6)
+        for k in od:
+            assert np.array_equal(od[k], op[k]), (mesh_shape, k, od[k], op[k])
+        assert p.last_stats["prefix_hit_blocks"] > 0
+        assert p.last_stats["stalled_decode_steps"] == 0
+    print("paged-vs-dense parity OK on 1 device and (2,4) mesh")
+    """)
