@@ -1,0 +1,106 @@
+"""Robustness-layer benchmark (DESIGN.md §13).
+
+Two questions the gate (benchmarks/check_robustness_gate.py) enforces:
+
+* **What does the numeric guard cost when nothing is wrong?**  The guard
+  adds one jitted all-finite reduction per decode step (B bools cross the
+  host boundary, never the logits).  Measured as interleaved min-of-reps
+  decode time per step, guard off vs ``numeric_guard='quarantine'``, on
+  the same request mix — the fault-free fast path must stay within 3%.
+* **Does a faulted run lose anything?**  An over-subscribed paged mix
+  under a seeded :class:`~repro.serve.faults.FaultPlan` (allocator
+  refusals + COW contention + a NaN injection + a mid-stream cancel) must
+  finish with a lifecycle status for EVERY request, zero lost requests,
+  bit-exact token streams for every non-degraded request, and the
+  invariant checker green after every scheduler iteration.  The recovery
+  cost is reported as extra wall time per preemption.
+
+Reported ``us_per_call`` is the guarded engine's decode-phase time per
+pool step; ``derived`` carries the gate fields.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.serve import faults as FA
+from repro.serve.engine import Engine, Request, ServeConfig
+
+__all__ = ["bench_robustness"]
+
+NEW_TOKENS = 8
+REPS = 3
+
+
+def _reqs(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=f"r{i}", tokens=rng.integers(0, cfg.vocab_size, (l,)),
+                    max_new_tokens=NEW_TOKENS)
+            for i, l in enumerate(lens)]
+
+
+def _step_us(eng, reqs):
+    eng.serve([r for r in reqs])
+    st = eng.last_stats
+    return 1e6 * st["decode_time_s"] / max(st["decode_steps"], 1)
+
+
+def bench_robustness():
+    cfg = smoke_config("yi-9b").replace(remat=False)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    lens = [12, 7, 10, 5]
+
+    # --- guard overhead on the fault-free fast path (dense engine) -----
+    base = Engine(params, cfg, ServeConfig(max_len=32, batch_size=4))
+    guard = Engine(params, cfg, ServeConfig(max_len=32, batch_size=4,
+                                            numeric_guard="quarantine"))
+    reqs = _reqs(cfg, lens)
+    t_off, t_on = np.inf, np.inf
+    for _ in range(REPS):  # interleaved min-of-reps: shared thermal drift
+        t_off = min(t_off, _step_us(base, reqs))
+        t_on = min(t_on, _step_us(guard, reqs))
+    overhead_pct = 100.0 * (t_on - t_off) / t_off
+    checks = guard.last_stats["guard_checks"]
+
+    # --- seeded fault mix on an over-subscribed paged pool -------------
+    scfg = ServeConfig(max_len=32, batch_size=4, paged=True, kv_block_size=4,
+                       kv_blocks=17, max_active=4, prefill_bucket=8,
+                       numeric_guard="quarantine")
+    eng = Engine(params, cfg, scfg)
+    mix = _reqs(cfg, [5, 9, 7, 6, 8, 10], seed=11)
+    uids = [r.uid for r in mix]
+    clean = eng.serve([r for r in mix])
+    t_clean = eng.last_stats["decode_time_s"]
+    plan = FA.FaultPlan.seeded(5, uids=uids, n_alloc=2, n_cow=2, n_nan=1,
+                               n_cancel=1, decode_calls=12, alloc_calls=10,
+                               steps=8, lanes=4)
+    out = eng.serve([r for r in mix], faults=plan)
+    st = eng.last_stats
+    status = st["request_status"]
+    lost = sum(u not in out or u not in status for u in uids)
+    recovered = sum(status.get(u) in ("ok", "preempted")
+                    and np.array_equal(out[u], clean[u]) for u in uids)
+    degraded = len(uids) - recovered - lost
+    # every non-degraded stream bit-exact vs the unfaulted run; degraded
+    # (cancelled/quarantined/deadline) streams are clean prefixes of it
+    parity = int(all(np.array_equal(out[u], clean[u][: len(out[u])])
+                     for u in uids))
+    FA.check_invariants(eng._last_alloc, out=out, uids=uids)
+    preempt_us = 1e6 * max(st["decode_time_s"] - t_clean, 0.0) \
+        / max(st["preemptions"], 1)
+
+    derived = (
+        f"overhead_pct={overhead_pct:.2f} guard_checks={checks} "
+        f"parity={parity} lost={lost} recovered={recovered} "
+        f"degraded={degraded} preemptions={st['preemptions']} "
+        f"resumed={st['resumed']} injected_total="
+        f"{sum(plan.injected.values())} invariants={st['invariant_checks']} "
+        f"preempt_resume_us={preempt_us:.0f}")
+    return t_on, derived
+
+
+if __name__ == "__main__":
+    us, derived = bench_robustness()
+    print(f"serving_robustness,{us:.1f},{derived}")

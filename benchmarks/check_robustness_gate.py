@@ -1,0 +1,48 @@
+"""CI gate over BENCH_robustness.json (DESIGN.md §13): the robustness layer
+must be (1) nearly free when nothing is wrong — the per-step numeric guard
+stays within 3% of the unguarded decode path — and (2) lossless when
+everything goes wrong: under the seeded fault mix (allocator refusals, COW
+contention, NaN injection, mid-stream cancel) every request ends with a
+lifecycle status and an output, preempted lanes resume and replay
+bit-exactly, and the block-conservation invariants hold after every
+scheduler iteration.  Usage:
+  python benchmarks/check_robustness_gate.py BENCH_robustness.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+MAX_OVERHEAD_PCT = 3.0
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "serving_robustness")
+    assert "error" not in row, row
+    d = row.get("derived", "")
+    m = re.search(
+        r"overhead_pct=(-?[0-9.]+) guard_checks=(\d+) parity=(\d) "
+        r"lost=(\d+) recovered=(\d+) degraded=(\d+) preemptions=(\d+) "
+        r"resumed=(\d+) injected_total=(\d+) invariants=(\d+) "
+        r"preempt_resume_us=(\d+)", d)
+    assert m, d
+    (overhead, checks, parity, lost, recovered, degraded, preempts,
+     resumed, injected, invariants, _us) = m.groups()
+    assert float(overhead) <= MAX_OVERHEAD_PCT, (
+        f"numeric guard costs {overhead}% per decode step "
+        f"(budget {MAX_OVERHEAD_PCT}%): {d}")
+    assert int(checks) > 0, f"guarded run never ran a guard check: {d}"
+    assert parity == "1", f"a faulted stream diverged from the clean run: {d}"
+    assert int(lost) == 0, f"requests lost under the fault plan: {d}"
+    assert int(injected) > 0, f"the seeded plan injected nothing: {d}"
+    assert int(preempts) >= 1 and int(resumed) >= 1, (
+        f"the fault mix exercised no preempt-resume cycle: {d}")
+    assert int(recovered) > 0, f"no request recovered bit-exactly: {d}"
+    assert int(invariants) > 0, f"invariant checker never ran: {d}"
+    print("robustness gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_robustness.json")

@@ -20,6 +20,14 @@ run concurrently on the KV HBM budget of --batch dense slots — prefix
 blocks are physically shared (refcount > 1, copy-on-write on divergence)
 and the token streams still match the dense packed engine exactly.
 
+A sixth scenario stress-tests the robustness layer (DESIGN.md §13): the
+same mix plus a long low-priority request on an OVER-SUBSCRIBED block
+pool, under a seeded fault plan (allocator refusals, COW contention, a
+NaN injection, a mid-stream cancel) with ``numeric_guard='quarantine'``.
+The run must finish with a lifecycle status for every request, zero lost
+requests, preempted lanes resumed bit-exactly, and the block-conservation
+invariants green after every scheduler iteration.
+
   PYTHONPATH=src python examples/serve_e2e.py --new-tokens 16
 """
 import argparse
@@ -30,7 +38,8 @@ import jax
 
 from repro.configs import smoke_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import faults as FA
+from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def _timed_serve(eng, prompts, n_new):
@@ -153,6 +162,54 @@ def main():
     if not (stp["max_concurrent"] > args.batch
             and stp["shared_blocks_peak"] > 0):
         raise SystemExit("prefix sharing failed to over-subscribe the pool")
+
+    # ---- robustness: seeded faults on an over-subscribed paged pool -----
+    mix = [Request(uid=f"r{i}",
+                   tokens=rng.integers(0, cfg.vocab_size, (int(l),)),
+                   max_new_tokens=args.new_tokens,
+                   priority=1 if i % 3 == 0 else 0)
+           for i, l in enumerate(lens)]
+    mix.append(Request(uid="background",
+                       tokens=rng.integers(0, cfg.vocab_size, (32,)),
+                       max_new_tokens=2 * args.new_tokens, priority=0,
+                       deadline_steps=3 * args.new_tokens))
+    uids = [r.uid for r in mix]
+    eng_rob = Engine(eng_packed.params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, paged=True, kv_block_size=8,
+        kv_blocks=1 + 2 * len(mix), max_active=args.batch + 2,
+        numeric_guard="quarantine-lane"))
+    clean = eng_rob.serve([r for r in mix])
+    plan = FA.FaultPlan.seeded(
+        7, uids=uids, n_alloc=2, n_cow=2, n_nan=1, n_cancel=1,
+        decode_calls=2 * args.new_tokens, alloc_calls=len(mix) * 2,
+        steps=args.new_tokens, lanes=args.batch + 2)
+    out_r = eng_rob.serve([r for r in mix], faults=plan)
+    str_ = eng_rob.last_stats
+    status = str_["request_status"]
+    lost = [u for u in uids if u not in out_r or u not in status]
+    survivors = [u for u in uids if status.get(u) in ("ok", "preempted")]
+    exact_r = all(np.array_equal(out_r[u], clean[u]) for u in survivors)
+    prefix_r = all(np.array_equal(out_r[u], clean[u][: len(out_r[u])])
+                   for u in uids)
+    FA.check_invariants(eng_rob._last_alloc, out=out_r, uids=uids)
+    by_state: dict = {}
+    for s in status.values():
+        by_state[s] = by_state.get(s, 0) + 1
+    print(f"robustness, {len(mix)} requests on "
+          f"{eng_rob.kv_blocks - 1} blocks under seeded faults "
+          f"(injected {dict(plan.injected)}):")
+    print(f"  statuses {by_state}, lost {len(lost)}, "
+          f"{str_['preemptions']} preemptions / {str_['resumed']} resumes, "
+          f"{str_['quarantined']} quarantined, "
+          f"{str_['invariant_checks']} invariant checks")
+    print(f"  survivors bit-exact vs unfaulted: {exact_r}; every stream a "
+          f"clean prefix: {prefix_r}")
+    if lost:
+        raise SystemExit(f"requests lost under the fault plan: {lost}")
+    if not (exact_r and prefix_r):
+        raise SystemExit("a faulted stream diverged from the unfaulted run")
+    if str_["preemptions"] < 1 or str_["resumed"] < 1:
+        raise SystemExit("the fault plan exercised no preempt-resume cycle")
 
 
 if __name__ == "__main__":

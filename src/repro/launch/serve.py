@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, Request, ServeConfig
 
 
 def main():
@@ -79,7 +79,27 @@ def main():
     ap.add_argument("--max-active", type=int, default=None,
                     help="paged lane count; with prefix sharing this can "
                          "exceed --batch at the same --kv-blocks budget")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="scheduler iterations a request may stay resident "
+                         "after admission before it is released with status "
+                         "'deadline' (robustness layer, DESIGN.md §13; "
+                         "implies --ragged)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority of every EVEN-indexed request (odd stay "
+                         "0): higher admits first and, on the paged "
+                         "scheduler, preempts strictly-lower lanes under "
+                         "pool pressure (implies --ragged)")
+    ap.add_argument("--numeric-guard", default=None,
+                    choices=["off", "fail-fast", "quarantine-lane",
+                             "fallback"],
+                    help="per-step isfinite guard on sampling logits: "
+                         "fail-fast raises, quarantine-lane releases the "
+                         "bad lane with partial output, fallback retries "
+                         "the step through the dsbp_ref reference path "
+                         "(DESIGN.md §13)")
     args = ap.parse_args()
+    if args.deadline_steps or args.priority:
+        args.ragged = True  # per-request lifecycle lives in serve()
     if args.spec_k or args.paged:
         args.ragged = True  # both live in the serve() scheduler
 
@@ -104,7 +124,8 @@ def main():
         mesh_axes=mesh_axes or ("data", "model"),
         per_device_batch_size=args.per_device_batch,
         paged=args.paged, kv_block_size=args.kv_block_size,
-        kv_blocks=args.kv_blocks, max_active=args.max_active))
+        kv_blocks=args.kv_blocks, max_active=args.max_active,
+        numeric_guard=args.numeric_guard))
     if args.paged:
         print(f"paged KV: {eng.kv_blocks} blocks x {args.kv_block_size} "
               f"slots, {eng.lanes} lanes, table width {eng._table_width}")
@@ -120,7 +141,12 @@ def main():
     if args.ragged:
         lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
                             2 * args.batch)
-        reqs = [rng.integers(0, cfg.vocab_size, (int(l),)) for l in lens]
+        reqs = [Request(uid=i,
+                        tokens=rng.integers(0, cfg.vocab_size, (int(l),)),
+                        max_new_tokens=args.new_tokens,
+                        priority=args.priority if i % 2 == 0 else 0,
+                        deadline_steps=args.deadline_steps)
+                for i, l in enumerate(lens)]
         t0 = time.monotonic()
         out = eng.serve(reqs, max_new_tokens=args.new_tokens)
         dt = time.monotonic() - t0
@@ -148,6 +174,15 @@ def main():
                   f"{st['chunk_steps']} chunk steps "
                   f"({st['chunked_requests']} chunked requests), "
                   f"{st['stalled_decode_steps']} stalled decode steps")
+        if args.deadline_steps or args.priority or args.numeric_guard:
+            by_state: dict = {}
+            for s in st["request_status"].values():
+                by_state[s] = by_state.get(s, 0) + 1
+            print(f"lifecycle: {by_state} "
+                  f"(deadline_expired {st['deadline_expired']}, "
+                  f"quarantined {st['quarantined']}, "
+                  f"preemptions {st['preemptions']}, "
+                  f"guard_checks {st['guard_checks']})")
         for uid in list(out)[:2]:
             print(f"  req{uid}: {out[uid].tolist()}")
         return

@@ -97,6 +97,16 @@ class BlockAllocator:
     def refcount(self, bid: int) -> int:
         return int(self._ref[bid])
 
+    def refcounts(self) -> np.ndarray:
+        """Copy of the full refcount vector (index = block id) — the
+        invariant checker (serve/faults.py) diffs this against the live
+        holders it can enumerate."""
+        return self._ref.astype(np.int64)
+
+    def free_list(self) -> tuple:
+        """Snapshot of the free list (ids, pop order last)."""
+        return tuple(self._free)
+
     def shared_blocks(self) -> int:
         """Blocks physically shared right now (refcount > 1)."""
         return int(np.sum(self._ref[1:] > 1))
@@ -252,6 +262,11 @@ class PrefixCache:
                 self.alloc.free([bid])
                 return True
         return False
+
+    def block_ids(self) -> list[int]:
+        """Physical ids the cache currently holds a reference on (one per
+        entry — used by the invariant checker)."""
+        return [e.bid for e in self._by_hash.values()]
 
     def drop_all(self) -> None:
         for e in self._by_hash.values():

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import time
 from collections import deque
 
@@ -42,6 +43,12 @@ from repro.models import model as M
 
 __all__ = ["ServeConfig", "Request", "Engine", "pack_weights_int8",
            "packed_nbytes", "sample_tokens"]
+
+# terminal request lifecycle states (DESIGN.md §13); every served uid ends
+# in exactly one of these, reported via last_stats["request_status"]
+REQUEST_STATES = ("ok", "preempted", "cancelled", "deadline", "quarantined")
+
+_GUARD_POLICIES = ("fail-fast", "quarantine", "fallback")
 
 # projection leaf names that carry a DSBP-quantizable GEMM (the sharding
 # contract of models/layers.py keys these same names)
@@ -138,6 +145,26 @@ class ServeConfig:
     # 4 * prefill_bucket; chunked admissions skip prefix sharing.
     chunk_prefill_tokens: int | None = None
     prefix_sharing: bool = True  # hash-chained prefix cache + COW splits
+    # --- robustness layer (DESIGN.md §13) ---
+    # per-step isfinite check on the logits every sampling decision reads,
+    # with a policy for non-finite lanes:
+    #   None / 'off'      — no guard (the fault silently poisons the stream)
+    #   'fail-fast'       — raise serve.faults.NumericFault (whole batch)
+    #   'quarantine'      — release the lane, keep its partial output,
+    #                       status 'quarantined' ('quarantine-lane' alias)
+    #   'fallback'        — retry the step through the dsbp_ref reference
+    #                       path (decode jits keep the pre-step cache:
+    #                       donation is disabled in this mode only), then
+    #                       quarantine if still non-finite.  Incompatible
+    #                       with spec_k (the round commits in-jit).
+    numeric_guard: str | None = None
+    # paged scheduler: preempt a victim lane (recompute-on-resume) instead
+    # of raising BlockError when a reservation / COW split cannot be
+    # satisfied; False restores hard-failure semantics
+    preemption: bool = True
+    # assert serve/faults.check_invariants after every scheduler iteration
+    # (always on while a FaultPlan is active)
+    invariant_checks: bool = False
 
 
 @dataclasses.dataclass
@@ -146,6 +173,26 @@ class Request:
     uid: object
     tokens: np.ndarray           # (L,) prompt token ids
     max_new_tokens: int = 32
+    # higher admits first and is never preempted by a lower value; the
+    # paged scheduler only evicts a victim strictly below the contender
+    priority: int = 0
+    # scheduler iterations the request may stay resident after admission
+    # before it is released with status 'deadline' (None = no deadline).
+    # Counted from FIRST admission — a preempt-resume does not reset it.
+    deadline_steps: int | None = None
+
+
+@dataclasses.dataclass
+class _ServeControl:
+    """Per-serve() robustness bookkeeping shared by both schedulers and
+    every helper they call (one bundle instead of six positional dicts)."""
+    stats: dict
+    out: dict                    # uid -> emitted token list
+    status: dict                 # uid -> lifecycle state (REQUEST_STATES)
+    faults: object | None = None
+    step: int = 0                # scheduler iteration counter
+    admit_step: dict = dataclasses.field(default_factory=dict)
+    preempts: dict = dataclasses.field(default_factory=dict)
 
 
 def pack_weights_int8(params, preset="precise", mesh=None):
@@ -306,6 +353,24 @@ class Engine:
             self.pool_size = self.mesh.size * scfg.per_device_batch_size
         self.pack_report = None
         self.last_stats: dict | None = None
+        # --- robustness layer (DESIGN.md §13) ---
+        self._guard = self._norm_guard(scfg.numeric_guard)
+        if self._guard == "fallback" and scfg.spec_k:
+            raise ValueError(
+                "numeric_guard='fallback' retries a decode step through the "
+                "reference path, but a speculative round commits its tokens "
+                "inside one jit and cannot be re-run — use 'quarantine' or "
+                "'fail-fast' with spec_k")
+        self._cancel_pending: set = set()
+        # one jitted all-finite reduction per guarded step: B bools cross
+        # the host boundary, never the logits
+        self._finite = (jax.jit(lambda lg: jnp.all(
+            jnp.isfinite(lg.astype(jnp.float32)),
+            axis=tuple(range(1, lg.ndim)))) if self._guard else None)
+        self._ref_decode_jit = None        # lazy 'fallback' retry paths
+        self._ref_decode_paged_jit = None
+        self._last_alloc = None            # post-serve conservation checks
+        self._last_prefix = None
         if scfg.pack and preset is not None and not tree_is_packed(params):
             if preset == "policy":
                 raise ValueError(
@@ -339,7 +404,11 @@ class Engine:
             with self._trace_ctx():
                 return M.decode_step(p, tok, cache, pos, cfg)
 
-        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+        # 'fallback' is the ONE mode that cannot donate: the retry re-runs
+        # the step from the pre-step cache, which donation would invalidate
+        self._decode = jax.jit(
+            _decode_fn,
+            donate_argnums=(() if self._guard == "fallback" else (2,)))
         # jitted sharded-in/sharded-out prefill (mesh only: the 1-device
         # engine keeps its eager prefill path unchanged)
         self._prefill = None
@@ -366,7 +435,8 @@ class Engine:
             from repro.spec.decode import build_spec_round  # local: optional
 
             _round = build_spec_round(cfg, scfg.spec_k, scfg.spec_draft_bits,
-                                      scfg.spec_draft_method)
+                                      scfg.spec_draft_method,
+                                      guard=self._guard is not None)
 
             def _spec_fn(p, cache, tok, pos):
                 # the whole round — draft, verify, accept, rollback — traces
@@ -452,7 +522,9 @@ class Engine:
                                        cfg_, max_len, lengths=lens,
                                        write_start=write_start)
 
-        self._decode_paged = jax.jit(_decode_paged_fn, donate_argnums=(2,))
+        self._decode_paged = jax.jit(
+            _decode_paged_fn,
+            donate_argnums=(() if self._guard == "fallback" else (2,)))
         self._verify_paged = jax.jit(_verify_paged_fn)
         self._commit_paged = jax.jit(_commit_paged_fn, donate_argnums=(0,))
         # eager on one device (mirrors the dense admission path); jitted
@@ -465,7 +537,8 @@ class Engine:
 
             _round = build_spec_round_paged(
                 cfg, scfg.spec_k, scfg.spec_draft_bits,
-                scfg.spec_draft_method, max_len)
+                scfg.spec_draft_method, max_len,
+                guard=self._guard is not None)
 
             def _spec_paged_fn(p, cache, table, tok, pos, live):
                 with self._trace_ctx():
@@ -522,6 +595,162 @@ class Engine:
             pool, SH.named(self.mesh,
                            SH.cache_pspecs(pool, self.mesh, batch_size,
                                            paged=paged)))
+
+    # ------------------------------------------------------------------
+    # robustness layer: lifecycle control, numeric guards (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _norm_guard(policy):
+        if policy in (None, "off"):
+            return None
+        if policy == "quarantine-lane":  # the ISSUE/CLI spelling
+            return "quarantine"
+        if policy not in _GUARD_POLICIES:
+            raise ValueError(
+                f"unknown numeric_guard {policy!r}: pick one of "
+                f"{sorted(_GUARD_POLICIES)} (or 'off')")
+        return policy
+
+    def cancel(self, uid) -> None:
+        """Request cancellation of ``uid``, queued or mid-generation: the
+        scheduler frees its slot/lane and blocks at the next iteration
+        boundary, keeps whatever tokens were already emitted, and records
+        status 'cancelled'.  Unknown or already-finished uids are ignored
+        (cancellation is idempotent)."""
+        self._cancel_pending.add(uid)
+
+    @staticmethod
+    def _robust_stats() -> dict:
+        return {"cancelled": 0, "deadline_expired": 0, "quarantined": 0,
+                "numeric_faults": 0, "guard_checks": 0, "fallback_steps": 0,
+                "preemptions": 0, "resumed": 0, "invariant_checks": 0}
+
+    def _build_queue(self, requests, max_new_tokens: int) -> deque:
+        """Validated admission queue: normalized Requests, unique uids,
+        max_len feasibility, stable highest-priority-first order."""
+        reqs = [self._norm_request(r, i, max_new_tokens)
+                for i, r in enumerate(requests)]
+        if len({r.uid for r in reqs}) != len(reqs):
+            raise ValueError("request uids must be unique (results key on uid)")
+        headroom = self.scfg.spec_k
+        for r in reqs:
+            if len(r.tokens) + r.max_new_tokens + headroom > self.scfg.max_len:
+                raise ValueError(
+                    f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
+                    f"{r.max_new_tokens}"
+                    f"{f' + spec_k {headroom}' if headroom else ''}"
+                    f" exceeds max_len {self.scfg.max_len}")
+        return deque(sorted(reqs, key=lambda r: -r.priority))
+
+    def _drain_control(self, ctl: _ServeControl, queue, live) -> None:
+        """Top-of-iteration control sweep: apply pending cancellations
+        (``Engine.cancel`` + the fault plan's schedule), then expire
+        deadlines.  ``live`` maps uid -> (Request, release_fn); release_fn
+        returns the slot/lane AND every block it holds atomically."""
+        cancels = list(self._cancel_pending)
+        self._cancel_pending.clear()
+        if ctl.faults is not None:
+            cancels += list(ctl.faults.cancels_at(ctl.step))
+        for uid in cancels:
+            if uid in live:
+                _, release = live.pop(uid)
+                release()
+                ctl.status[uid] = "cancelled"
+                ctl.stats["cancelled"] += 1
+                ctl.out.setdefault(uid, [])
+            elif any(r.uid == uid for r in queue):
+                rest = [r for r in queue if r.uid != uid]
+                queue.clear()
+                queue.extend(rest)
+                ctl.status[uid] = "cancelled"
+                ctl.stats["cancelled"] += 1
+                ctl.out.setdefault(uid, [])
+        for uid, (r, release) in list(live.items()):
+            if r.deadline_steps is None:
+                continue
+            if ctl.step - ctl.admit_step.get(uid, ctl.step) >= r.deadline_steps:
+                live.pop(uid)
+                release()
+                ctl.status[uid] = "deadline"
+                ctl.stats["deadline_expired"] += 1
+                ctl.out.setdefault(uid, [])
+
+    def _apply_guard(self, logits, occ, uid_of, ctl: _ServeControl, *,
+                     retry: bool = False, inject: bool = True):
+        """Fault injection + numeric guard over one step's sampling logits.
+        ``occ`` are the row/lane ids actually serving; ``uid_of(i)`` names
+        them for diagnostics.  Returns ``(logits, bad_ids)`` — the caller
+        applies its policy action (quarantine / fallback retry) to
+        ``bad_ids``.  'fail-fast' raises here."""
+        faults = ctl.faults
+        if faults is not None and inject:
+            logits = faults.corrupt_logits(logits, occ, retry=retry)
+        if self._guard is None:
+            return logits, []
+        finite = np.asarray(self._finite(jnp.asarray(logits)))
+        ctl.stats["guard_checks"] += 1
+        bad = [i for i in occ if not finite[i]]
+        if bad:
+            ctl.stats["numeric_faults"] += len(bad)
+            if self._guard == "fail-fast":
+                from repro.serve.faults import NumericFault
+
+                raise NumericFault([uid_of(i) for i in bad], ctl.step)
+        return logits, bad
+
+    def _quarantine(self, uid, ctl: _ServeControl, release) -> None:
+        release()
+        ctl.status[uid] = "quarantined"
+        ctl.stats["quarantined"] += 1
+        ctl.out.setdefault(uid, [])
+
+    def _ref_decode(self):
+        """Lazily-jitted dense decode through the reference quant path (the
+        'fallback' guard's retry; never donates — the caller re-feeds the
+        pre-step cache)."""
+        if self._ref_decode_jit is None:
+            rcfg = (self.cfg.replace(quant_method="dsbp_ref")
+                    if self.cfg.quant is not None else self.cfg)
+
+            def _fn(p, tok, cache, pos):
+                with self._trace_ctx():
+                    return M.decode_step(p, tok, cache, pos, rcfg)
+
+            self._ref_decode_jit = jax.jit(_fn)
+        return self._ref_decode_jit
+
+    def _ref_decode_paged(self):
+        if self._ref_decode_paged_jit is None:
+            rcfg = (self.cfg.replace(quant_method="dsbp_ref")
+                    if self.cfg.quant is not None else self.cfg)
+            max_len = self.scfg.max_len
+
+            def _fn(p, tok, cache, table, pos, write_len):
+                with self._trace_ctx():
+                    return M.decode_step_paged(p, tok, cache, table, pos,
+                                               write_len, rcfg, max_len)
+
+            self._ref_decode_paged_jit = jax.jit(_fn)
+        return self._ref_decode_paged_jit
+
+    def _finish(self, ctl: _ServeControl, uid) -> None:
+        """Terminal bookkeeping for a request that completed its stream:
+        'ok', or 'preempted' when it survived >= 1 eviction on the way."""
+        ctl.status[uid] = "preempted" if ctl.preempts.get(uid) else "ok"
+
+    @staticmethod
+    def _requeue(queue, r: Request) -> None:
+        """Re-insert a preempted request respecting priority order, ahead
+        of equal-priority waiters (it was admitted first — resume ASAP
+        minimizes recompute staleness without starving higher priorities)."""
+        idx = 0
+        for idx, q in enumerate(queue):
+            if q.priority <= r.priority:
+                break
+        else:
+            idx = len(queue)
+        queue.insert(idx, r)
 
     # ------------------------------------------------------------------
     # batch API
@@ -610,47 +839,43 @@ class Engine:
     # continuous batching
     # ------------------------------------------------------------------
 
-    def serve(self, requests, max_new_tokens: int = 32):
+    def serve(self, requests, max_new_tokens: int = 32, faults=None):
         """Run a queue of requests through the slot pool; returns
         {uid: np.ndarray(generated token ids)} and records scheduler stats
-        in ``self.last_stats`` (decode_steps, occupancy, admissions, ...).
+        in ``self.last_stats`` (decode_steps, occupancy, admissions,
+        per-request lifecycle states under ``request_status``, ...).
 
         ``requests`` items are :class:`Request` or plain token sequences
-        (uid = queue index, budget = ``max_new_tokens``)."""
+        (uid = queue index, budget = ``max_new_tokens``).  ``faults`` takes
+        a :class:`repro.serve.faults.FaultPlan` — a deterministic schedule
+        of injected allocator failures / NaNs / cancellations (DESIGN.md
+        §13); invariant checks then run after every scheduler iteration."""
         cfg, scfg = self.cfg, self.scfg
         if cfg.frontend in ("audio_codebooks", "vlm_patches"):
             raise NotImplementedError(
                 "serve() schedules plain token prompts; use generate() for "
                 f"the {cfg.frontend} frontend")
         if scfg.paged:
-            return self._serve_paged(requests, max_new_tokens)
-        queue = deque(self._norm_request(r, i, max_new_tokens)
-                      for i, r in enumerate(requests))
+            return self._serve_paged(requests, max_new_tokens, faults)
+        queue = self._build_queue(requests, max_new_tokens)
         nreq = len(queue)
-        if len({r.uid for r in queue}) != nreq:
-            raise ValueError("request uids must be unique (results key on uid)")
-        # a speculative verify pass may write up to spec_k positions past
-        # the last committed token before rolling them back — reserve room
-        headroom = scfg.spec_k
-        for r in queue:
-            if len(r.tokens) + r.max_new_tokens + headroom > scfg.max_len:
-                raise ValueError(
-                    f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
-                    f"{r.max_new_tokens}{f' + spec_k {headroom}' if headroom else ''}"
-                    f" exceeds max_len {scfg.max_len}")
+        if faults is not None:
+            faults.reset()
         B = self.pool_size
         pool = self._shard_cache(M.init_cache(cfg, B, scfg.max_len), B)
         active: list[Request | None] = [None] * B
         tok = np.zeros(B, np.int64)        # last sampled token per slot
         pos = np.zeros(B, np.int32)        # next absolute position per slot
-        out: dict = {}
         rng = jax.random.PRNGKey(scfg.seed)
         stats = {"decode_steps": 0, "occupied_lanes": 0, "admissions": 0,
                  "prefill_tokens": 0, "decode_tokens": 0,
                  # wall time of the decode/speculation phase alone (admission
                  # prefills excluded), so decode throughput is measurable
                  # independently of prefill shapes: decode_tps in last_stats
-                 "decode_time_s": 0.0}
+                 "decode_time_s": 0.0, **self._robust_stats()}
+        ctl = _ServeControl(stats=stats, out={},
+                            status={r.uid: "queued" for r in queue},
+                            faults=faults)
         if self._spec is not None:
             stats.update(
                 spec_rounds=0, draft_tokens=0,
@@ -660,67 +885,134 @@ class Engine:
             )
             slot_accepted = np.zeros(B, np.int64)
             slot_rounds = np.zeros(B, np.int64)
-
-        while queue or any(s is not None for s in active):
-            free = [i for i in range(B) if active[i] is None]
-            if queue and free:
-                pool, rng = self._admit(pool, queue, free, active, tok, pos,
-                                        out, stats, rng)
-            if not any(s is not None for s in active):
-                continue  # every admitted request finished at its 1st token
-            stats["decode_steps"] += 1
-            stats["occupied_lanes"] += sum(s is not None for s in active)
-            t_step = time.perf_counter()
-            if self._spec is not None:
-                pool = self._spec_advance(pool, active, tok, pos, out, stats,
-                                          slot_accepted, slot_rounds)
+        completed = False
+        try:
+            while queue or any(s is not None for s in active):
+                live = {active[i].uid:
+                        (active[i],
+                         functools.partial(active.__setitem__, i, None))
+                        for i in range(B) if active[i] is not None}
+                self._drain_control(ctl, queue, live)
+                free = [i for i in range(B) if active[i] is None]
+                if queue and free:
+                    pool, rng = self._admit(pool, queue, free, active, tok,
+                                            pos, ctl, rng)
+                if not any(s is not None for s in active):
+                    ctl.step += 1
+                    continue  # every admitted request finished at token 1
+                stats["decode_steps"] += 1
+                stats["occupied_lanes"] += sum(s is not None for s in active)
+                t_step = time.perf_counter()
+                if self._spec is not None:
+                    pool = self._spec_advance(pool, active, tok, pos, ctl,
+                                              slot_accepted, slot_rounds)
+                    stats["decode_time_s"] += time.perf_counter() - t_step
+                    ctl.step += 1
+                    continue
+                occ = [i for i in range(B) if active[i] is not None]
+                prev = pool if self._guard == "fallback" else None
+                logits, pool = self._decode(
+                    self.params, {"tokens": jnp.asarray(tok)[:, None]}, pool,
+                    jnp.asarray(pos),
+                )
+                last, bad = self._apply_guard(
+                    logits[:, -1], occ, lambda i: active[i].uid, ctl)
+                if bad and self._guard == "fallback":
+                    # retry the whole step through the reference quant path
+                    # from the (undonated) pre-step cache — a fused-kernel
+                    # fault clears, a persistent one falls to quarantine
+                    stats["fallback_steps"] += 1
+                    logits, pool = self._ref_decode()(
+                        self.params, {"tokens": jnp.asarray(tok)[:, None]},
+                        prev, jnp.asarray(pos))
+                    last, bad = self._apply_guard(
+                        logits[:, -1], occ, lambda i: active[i].uid, ctl,
+                        retry=True)
+                for i in bad:
+                    self._quarantine(
+                        active[i].uid, ctl,
+                        functools.partial(active.__setitem__, i, None))
+                nxt, rng = self._sample_next(jnp.asarray(last), rng)
+                nxt = np.asarray(nxt)  # device sync: step wall cost lands here
                 stats["decode_time_s"] += time.perf_counter() - t_step
-                continue
-            logits, pool = self._decode(
-                self.params, {"tokens": jnp.asarray(tok)[:, None]}, pool,
-                jnp.asarray(pos),
+                for i in range(B):
+                    r = active[i]
+                    if r is None:
+                        continue  # idle lane: output ignored, slot unchanged
+                    pos[i] += 1
+                    t = int(nxt[i])
+                    ctl.out[r.uid].append(t)
+                    tok[i] = t
+                    stats["decode_tokens"] += 1
+                    if self._done(t, ctl.out[r.uid], r):
+                        active[i] = None  # freed; next admission reuses it
+                        self._finish(ctl, r.uid)
+                ctl.step += 1
+            completed = True
+        finally:
+            # last_stats lands even when an exception unwinds mid-loop —
+            # a failed serve still reports what it did ('completed' False)
+            self.last_stats = dict(
+                stats,
+                requests=nreq,
+                completed=completed,
+                request_status=dict(ctl.status),
+                occupancy=stats["occupied_lanes"]
+                / max(stats["decode_steps"] * B, 1),
+                decode_tps=stats["decode_tokens"]
+                / max(stats["decode_time_s"], 1e-9),
             )
-            nxt, rng = self._sample_next(logits[:, -1], rng)
-            nxt = np.asarray(nxt)  # device sync: the step's wall cost lands here
-            stats["decode_time_s"] += time.perf_counter() - t_step
-            for i in range(B):
-                r = active[i]
-                if r is None:
-                    continue  # idle lane: output ignored, slot unchanged
-                pos[i] += 1
-                t = int(nxt[i])
-                out[r.uid].append(t)
-                tok[i] = t
-                stats["decode_tokens"] += 1
-                if self._done(t, out[r.uid], r):
-                    active[i] = None  # slot freed; next admission reuses it
-        self.last_stats = dict(
-            stats,
-            requests=nreq,
-            occupancy=stats["occupied_lanes"] / max(stats["decode_steps"] * B, 1),
-            decode_tps=stats["decode_tokens"] / max(stats["decode_time_s"],
-                                                    1e-9),
-        )
-        if self._spec is not None:
-            self.last_stats["accepted_hist"] = stats["accepted_hist"].tolist()
-            self.last_stats["mean_accepted"] = (
-                float(np.dot(stats["accepted_hist"],
-                             np.arange(scfg.spec_k + 2)))
-                / max(int(stats["accepted_hist"].sum()), 1))
-            self.last_stats["slot_mean_accepted"] = [
-                float(a) / max(int(n), 1)
-                for a, n in zip(slot_accepted, slot_rounds)]
-        return {uid: np.asarray(toks, np.int64) for uid, toks in out.items()}
+            if self._spec is not None:
+                self.last_stats["accepted_hist"] = (
+                    stats["accepted_hist"].tolist())
+                self.last_stats["mean_accepted"] = (
+                    float(np.dot(stats["accepted_hist"],
+                                 np.arange(scfg.spec_k + 2)))
+                    / max(int(stats["accepted_hist"].sum()), 1))
+                self.last_stats["slot_mean_accepted"] = [
+                    float(a) / max(int(n), 1)
+                    for a, n in zip(slot_accepted, slot_rounds)]
+        for uid in ctl.status:  # every uid reports, however it ended
+            ctl.out.setdefault(uid, [])
+        return {uid: np.asarray(toks, np.int64)
+                for uid, toks in ctl.out.items()}
 
-    def _spec_advance(self, pool, active, tok, pos, out, stats,
-                      slot_accepted, slot_rounds):
+    def _spec_advance(self, pool, active, tok, pos, ctl, slot_accepted,
+                      slot_rounds):
         """One speculation round for the whole pool: draft -> verify ->
         accept -> rollback inside the jitted ``self._spec``, then commit the
         accepted greedy tokens per occupied slot (every committed token is
         the target model's own argmax — the non-speculative stream)."""
-        target, keep, pool = self._spec(
+        stats = ctl.stats
+        occ = [i for i, s in enumerate(active) if s is not None]
+        res = self._spec(
             self.params, pool, jnp.asarray(tok), jnp.asarray(pos))
+        if self._guard is not None:
+            target, keep, pool, finite = res
+            finite = np.asarray(finite)
+        else:
+            target, keep, pool = res
+            finite = None
         target, keep = np.asarray(target), np.asarray(keep)
+        if ctl.faults is not None:
+            if finite is not None:
+                finite = ctl.faults.corrupt_finite(finite, occ)
+            keep = ctl.faults.clip_spec_keep(keep)
+        if finite is not None:
+            # guard the round BEFORE committing: a non-finite verify pass
+            # quarantines its lane with the pre-round output intact
+            stats["guard_checks"] += 1
+            bad = [i for i in occ if not finite[i]]
+            if bad:
+                stats["numeric_faults"] += len(bad)
+                if self._guard == "fail-fast":
+                    from repro.serve.faults import NumericFault
+
+                    raise NumericFault([active[i].uid for i in bad], ctl.step)
+                for i in bad:
+                    self._quarantine(
+                        active[i].uid, ctl,
+                        functools.partial(active.__setitem__, i, None))
         stats["spec_rounds"] += 1
         stats["draft_tokens"] += self.scfg.spec_k * sum(
             s is not None for s in active)
@@ -736,21 +1028,23 @@ class Engine:
             committed = 0
             for j in range(kp):
                 t = int(target[i, j])
-                out[r.uid].append(t)
+                ctl.out[r.uid].append(t)
                 committed += 1
                 stats["decode_tokens"] += 1
-                if self._done(t, out[r.uid], r):
+                if self._done(t, ctl.out[r.uid], r):
                     active[i] = None  # tokens past EOS/budget are dropped
+                    self._finish(ctl, r.uid)
                     break
             pos[i] += committed
             tok[i] = int(target[i, committed - 1])
         return pool
 
-    def _admit(self, pool, queue, free, active, tok, pos, out, stats, rng):
+    def _admit(self, pool, queue, free, active, tok, pos, ctl, rng):
         """Admit up to len(free) queued requests: one ragged group prefill
         (padded to a bucket multiple, per-row lengths), then copy each row's
         cache into its slot.  Returns (pool, advanced rng)."""
         scfg = self.scfg
+        stats = ctl.stats
         group = [queue.popleft() for _ in range(min(len(free), len(queue)))]
         lens = np.asarray([len(r.tokens) for r in group], np.int32)
         bucket = scfg.prefill_bucket
@@ -766,15 +1060,28 @@ class Engine:
                 self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
                 max_len=scfg.max_len, lengths=lens,
             )
-        first, rng = self._sample_next(logits[:, -1], rng)
+        # admission guard: inject=False — the plan's NaN schedule targets
+        # decode-phase calls only, but REAL non-finite prefill logits must
+        # still never reach sampling ('fallback' degrades to quarantine
+        # here: there is no cheap per-row prefill retry)
+        last, badrows = self._apply_guard(
+            logits[:, -1], list(range(len(group))),
+            lambda j: group[j].uid, ctl, inject=False)
+        first, rng = self._sample_next(jnp.asarray(last), rng)
         first = np.asarray(first)
         stats["admissions"] += len(group)
         stats["prefill_tokens"] += int(lens.sum())
+        badset = set(badrows)
         rows, slots = [], []
         for j, r in enumerate(group):
+            if j in badset:
+                self._quarantine(r.uid, ctl, lambda: None)
+                continue
             t = int(first[j])
-            out[r.uid] = [t]
-            if self._done(t, out[r.uid], r):
+            ctl.out[r.uid] = [t]
+            ctl.admit_step.setdefault(r.uid, ctl.step)
+            if self._done(t, ctl.out[r.uid], r):
+                self._finish(ctl, r.uid)
                 continue  # finished at its first token: slot stays free
             slot = free.pop(0)
             rows.append(j)
@@ -791,33 +1098,50 @@ class Engine:
     # (DESIGN.md §12)
     # ------------------------------------------------------------------
 
-    def _serve_paged(self, requests, max_new_tokens: int = 32):
+    def _serve_paged(self, requests, max_new_tokens: int = 32, faults=None):
         """Paged twin of the dense serve loop: one physical block pool, one
-        int32 block table per lane.  Per iteration: admit (reserve blocks ->
-        grouped short prefill / chunk-lane setup) -> COW-split shared blocks
-        the step writes -> ONE decode step over every decode lane (decode
-        never waits on an in-flight chunked prefill) -> one chunk step.
-        Token-for-token identical to the dense engine (tests/test_paged.py).
+        int32 block table per lane.  Per iteration: drain control events
+        (cancellations, deadlines) -> admit (reserve blocks -> grouped short
+        prefill / chunk-lane setup, preempting a strictly-lower-priority
+        victim when reservation fails) -> COW-split shared blocks the step
+        writes (preempting a victim when the split cannot be satisfied) ->
+        ONE decode step over every decode lane -> one chunk step -> optional
+        invariant check.  Token-for-token identical to the dense engine
+        (tests/test_paged.py); preempt-resumes replay bit-exactly
+        (tests/test_robustness.py).
         """
         from repro.serve import blocks as SB
+        from repro.serve import faults as FA
 
         cfg, scfg = self.cfg, self.scfg
-        queue = deque(self._norm_request(r, i, max_new_tokens)
-                      for i, r in enumerate(requests))
+        queue = self._build_queue(requests, max_new_tokens)
         nreq = len(queue)
-        if len({r.uid for r in queue}) != nreq:
-            raise ValueError("request uids must be unique (results key on uid)")
         headroom = scfg.spec_k
-        for r in queue:
-            if len(r.tokens) + r.max_new_tokens + headroom > scfg.max_len:
-                raise ValueError(
-                    f"request {r.uid!r}: prompt {len(r.tokens)} + budget "
-                    f"{r.max_new_tokens}{f' + spec_k {headroom}' if headroom else ''}"
-                    f" exceeds max_len {scfg.max_len}")
         B, bs = self.lanes, scfg.kv_block_size
-        alloc = SB.BlockAllocator(self.kv_blocks, bs) if self._kv_scs else None
+        if self._kv_scs:
+            # a reservation that exceeds the whole pool can NEVER succeed:
+            # fail fast instead of deadlocking the admission loop
+            for r in queue:
+                span = SB.block_span(
+                    min(len(r.tokens) + r.max_new_tokens + headroom,
+                        self._kv_scs[-1]), bs)
+                if span > self.kv_blocks - 1:
+                    raise SB.BlockError(
+                        f"request {r.uid!r} cannot be admitted even with an "
+                        f"idle pool: its reservation ({span} blocks) exceeds "
+                        f"kv_blocks={self.kv_blocks} ({self.kv_blocks - 1} "
+                        f"usable)")
+        if faults is not None:
+            faults.reset()
+        check = scfg.invariant_checks or faults is not None
+        alloc = None
+        if self._kv_scs:
+            alloc = (faults.allocator(self.kv_blocks, bs)
+                     if faults is not None
+                     else SB.BlockAllocator(self.kv_blocks, bs))
         prefix = (SB.PrefixCache(alloc)
                   if alloc is not None and scfg.prefix_sharing else None)
+        self._last_alloc, self._last_prefix = alloc, prefix
         nb_pool = self.kv_blocks if self._kv_scs else 1
         cache = self._shard_cache(
             M.init_paged_cache(cfg, B, nb_pool, bs), B, paged=True)
@@ -830,7 +1154,6 @@ class Engine:
         lanes: list[dict | None] = [None] * B
         tok = np.zeros(B, np.int64)
         pos = np.zeros(B, np.int32)
-        out: dict = {}
         rng = jax.random.PRNGKey(scfg.seed)
         stats = {"decode_steps": 0, "occupied_lanes": 0, "admissions": 0,
                  "prefill_tokens": 0, "decode_tokens": 0, "decode_time_s": 0.0,
@@ -840,116 +1163,187 @@ class Engine:
                  # by benchmarks/check_paged_gate.py
                  "stalled_decode_steps": 0,
                  "interleaved_decode_steps": 0, "max_concurrent": 0,
-                 "shared_blocks_peak": 0, "admission_blocked": 0}
+                 "shared_blocks_peak": 0, "admission_blocked": 0,
+                 **self._robust_stats()}
+        ctl = _ServeControl(stats=stats, out={},
+                            status={r.uid: "queued" for r in queue},
+                            faults=faults)
         if self._spec_paged is not None:
             stats.update(spec_rounds=0, draft_tokens=0,
                          accepted_hist=np.zeros(scfg.spec_k + 2, np.int64))
-
-        while queue or any(l is not None for l in lanes):
-            qlen_before = len(queue)
-            free = [i for i in range(B) if lanes[i] is None]
-            if queue and free:
-                cache, rng = self._admit_paged(
-                    cache, queue, free, lanes, tables, alloc, prefix,
-                    tok, pos, out, stats, rng)
-            dec = [i for i, l in enumerate(lanes)
-                   if l is not None and l["phase"] == "decode"]
-            chk = [i for i, l in enumerate(lanes)
-                   if l is not None and l["phase"] == "chunk"]
-            if not dec and not chk:
-                if queue and len(queue) == qlen_before:
-                    raise SB.BlockError(
-                        f"request {queue[0].uid!r} cannot be admitted even "
-                        f"with an idle pool: its reservation exceeds "
-                        f"kv_blocks={self.kv_blocks}")
-                continue  # every admitted request finished at its 1st token
-            stats["max_concurrent"] = max(stats["max_concurrent"],
-                                          len(dec) + len(chk))
-            if alloc is not None:
-                stats["shared_blocks_peak"] = max(
-                    stats["shared_blocks_peak"], alloc.shared_blocks())
-            if dec:
-                stats["decode_steps"] += 1
-                stats["occupied_lanes"] += len(dec) + len(chk)
+        idle_spins = 0
+        completed = False
+        try:
+            while queue or any(l is not None for l in lanes):
+                live = {lanes[i]["req"].uid:
+                        (lanes[i]["req"],
+                         functools.partial(self._release_lane, i, lanes,
+                                           tables, alloc))
+                        for i in range(B) if lanes[i] is not None}
+                self._drain_control(ctl, queue, live)
+                free = [i for i in range(B) if lanes[i] is None]
+                if queue and free:
+                    cache, rng = self._admit_paged(
+                        cache, queue, free, lanes, tables, alloc, prefix,
+                        tok, pos, ctl, rng)
+                dec = [i for i, l in enumerate(lanes)
+                       if l is not None and l["phase"] == "decode"]
+                chk = [i for i, l in enumerate(lanes)
+                       if l is not None and l["phase"] == "chunk"]
+                if not dec and not chk:
+                    if queue:
+                        # blocked admission with an idle pool: transient
+                        # under fault injection / prefix evictions, but a
+                        # pathological plan must terminate, not spin
+                        idle_spins += 1
+                        if idle_spins > 4 * self.kv_blocks + 64:
+                            raise SB.BlockError(
+                                f"scheduler made no progress for "
+                                f"{idle_spins} iterations with an idle "
+                                f"pool: request {queue[0].uid!r} cannot "
+                                f"reserve its blocks")
+                    ctl.step += 1
+                    continue  # every admitted request finished at token 1
+                idle_spins = 0
+                stats["max_concurrent"] = max(stats["max_concurrent"],
+                                              len(dec) + len(chk))
+                if alloc is not None:
+                    stats["shared_blocks_peak"] = max(
+                        stats["shared_blocks_peak"], alloc.shared_blocks())
+                if dec:
+                    t_step = time.perf_counter()
+                    # COW before the step: every ring slot this round writes
+                    # (spec rounds write up to spec_k+1) must be exclusively
+                    # owned — shared prefix blocks split here.  Under pool
+                    # pressure this may preempt a victim lane (possibly one
+                    # in dec): re-derive the decode set afterwards.
+                    cache = self._cow_writable(
+                        cache, tables, alloc, prefix,
+                        [(i, int(pos[i]), 1 + headroom) for i in dec], stats,
+                        lanes=lanes, queue=queue, ctl=ctl)
+                    dec = [i for i in dec if lanes[i] is not None]
+                    chk = [i for i in chk if lanes[i] is not None]
+                if dec:
+                    stats["decode_steps"] += 1
+                    stats["occupied_lanes"] += len(dec) + len(chk)
+                    if chk:
+                        stats["interleaved_decode_steps"] += 1
+                    if self._spec_paged is not None:
+                        cache = self._spec_advance_paged(
+                            cache, lanes, tables, alloc, prefix, dec, tok,
+                            pos, ctl)
+                    else:
+                        live_m = np.zeros(B, np.int32)
+                        live_m[dec] = 1  # idle/chunk lanes: write_len 0
+                        step_toks = {"tokens": jnp.asarray(tok)[:, None]}
+                        prev = cache if self._guard == "fallback" else None
+                        logits, cache = self._decode_paged(
+                            self.params, step_toks, cache,
+                            jnp.asarray(tables), jnp.asarray(pos),
+                            jnp.asarray(live_m))
+                        last, bad = self._apply_guard(
+                            logits[:, -1], dec,
+                            lambda i: lanes[i]["req"].uid, ctl)
+                        if bad and self._guard == "fallback":
+                            stats["fallback_steps"] += 1
+                            logits, cache = self._ref_decode_paged()(
+                                self.params, step_toks, prev,
+                                jnp.asarray(tables), jnp.asarray(pos),
+                                jnp.asarray(live_m))
+                            last, bad = self._apply_guard(
+                                logits[:, -1], dec,
+                                lambda i: lanes[i]["req"].uid, ctl,
+                                retry=True)
+                        for i in bad:
+                            self._quarantine(
+                                lanes[i]["req"].uid, ctl,
+                                functools.partial(self._release_lane, i,
+                                                  lanes, tables, alloc))
+                        nxt, rng = self._sample_next(jnp.asarray(last), rng)
+                        nxt = np.asarray(nxt)
+                        for i in dec:
+                            if lanes[i] is None:
+                                continue  # quarantined this step
+                            r = lanes[i]["req"]
+                            pos[i] += 1
+                            t = int(nxt[i])
+                            ctl.out[r.uid].append(t)
+                            tok[i] = t
+                            stats["decode_tokens"] += 1
+                            if self._done(t, ctl.out[r.uid], r):
+                                self._release_lane(i, lanes, tables, alloc)
+                                self._finish(ctl, r.uid)
+                    stats["decode_time_s"] += time.perf_counter() - t_step
                 if chk:
-                    stats["interleaved_decode_steps"] += 1
-                t_step = time.perf_counter()
-                # COW before the step: every ring slot this round writes
-                # (spec rounds write up to spec_k+1) must be exclusively
-                # owned — shared prefix blocks split here
-                cache = self._cow_writable(
-                    cache, tables, alloc, prefix,
-                    [(i, int(pos[i]), 1 + headroom) for i in dec], stats)
-                if self._spec_paged is not None:
-                    cache = self._spec_advance_paged(
-                        cache, lanes, tables, alloc, prefix, dec, tok, pos,
-                        out, stats)
-                else:
-                    live = np.zeros(B, np.int32)
-                    live[dec] = 1  # idle/chunk lanes: write_len 0 freezes
-                    logits, cache = self._decode_paged(
-                        self.params, {"tokens": jnp.asarray(tok)[:, None]},
-                        cache, jnp.asarray(tables), jnp.asarray(pos),
-                        jnp.asarray(live))
-                    nxt, rng = self._sample_next(logits[:, -1], rng)
-                    nxt = np.asarray(nxt)
-                    for i in dec:
-                        r = lanes[i]["req"]
-                        pos[i] += 1
-                        t = int(nxt[i])
-                        out[r.uid].append(t)
-                        tok[i] = t
-                        stats["decode_tokens"] += 1
-                        if self._done(t, out[r.uid], r):
-                            self._release_lane(i, lanes, tables, alloc)
-                stats["decode_time_s"] += time.perf_counter() - t_step
-            if chk:
-                cache, rng = self._chunk_step(
-                    cache, lanes, tables, alloc, prefix, chk, tok, pos, out,
-                    stats, rng)
-        usable = (self.kv_blocks - 1) if alloc is not None else 0
-        self.last_stats = dict(
-            stats,
-            requests=nreq,
-            paged=True,
-            lanes=B,
-            kv_block_size=bs,
-            kv_blocks=self.kv_blocks if alloc is not None else 0,
-            occupancy=stats["occupied_lanes"] / max(stats["decode_steps"] * B,
-                                                    1),
-            decode_tps=stats["decode_tokens"] / max(stats["decode_time_s"],
-                                                    1e-9),
-            block_peak_used=alloc.peak_used if alloc is not None else 0,
-            block_utilization=(alloc.peak_used / usable) if usable else 0.0,
-            block_bytes=blk_bytes,
-            prefix_lookups=prefix.lookups if prefix is not None else 0,
-            prefix_hit_blocks=prefix.hits if prefix is not None else 0,
-            # every prefix hit is one block of KV HBM NOT re-materialized
-            bytes_saved_sharing=(prefix.hits if prefix is not None else 0)
-            * blk_bytes,
-        )
-        if self._spec_paged is not None:
-            self.last_stats["accepted_hist"] = stats["accepted_hist"].tolist()
-            self.last_stats["mean_accepted"] = (
-                float(np.dot(stats["accepted_hist"],
-                             np.arange(scfg.spec_k + 2)))
-                / max(int(stats["accepted_hist"].sum()), 1))
-        if prefix is not None:
-            prefix.drop_all()
-        return {uid: np.asarray(toks, np.int64) for uid, toks in out.items()}
+                    cache, rng = self._chunk_step(
+                        cache, lanes, tables, alloc, prefix, queue, chk,
+                        tok, pos, ctl, rng)
+                if check and alloc is not None:
+                    FA.check_invariants(alloc, tables, lanes, prefix)
+                    stats["invariant_checks"] += 1
+                ctl.step += 1
+            completed = True
+        finally:
+            # conservation on ANY exit: every live lane's block references
+            # return to the pool, the prefix cache releases its own, and
+            # last_stats reports the partial run ('completed' False)
+            for i in range(B):
+                if lanes[i] is not None:
+                    self._release_lane(i, lanes, tables, alloc)
+            if prefix is not None:
+                prefix.drop_all()
+            usable = (self.kv_blocks - 1) if alloc is not None else 0
+            self.last_stats = dict(
+                stats,
+                requests=nreq,
+                paged=True,
+                lanes=B,
+                kv_block_size=bs,
+                kv_blocks=self.kv_blocks if alloc is not None else 0,
+                completed=completed,
+                request_status=dict(ctl.status),
+                occupancy=stats["occupied_lanes"]
+                / max(stats["decode_steps"] * B, 1),
+                decode_tps=stats["decode_tokens"]
+                / max(stats["decode_time_s"], 1e-9),
+                block_peak_used=alloc.peak_used if alloc is not None else 0,
+                block_utilization=(alloc.peak_used / usable) if usable
+                else 0.0,
+                block_bytes=blk_bytes,
+                prefix_lookups=prefix.lookups if prefix is not None else 0,
+                prefix_hit_blocks=prefix.hits if prefix is not None else 0,
+                # every prefix hit is one block of KV HBM NOT re-materialized
+                bytes_saved_sharing=(prefix.hits if prefix is not None
+                                     else 0) * blk_bytes,
+            )
+            if self._spec_paged is not None:
+                self.last_stats["accepted_hist"] = (
+                    stats["accepted_hist"].tolist())
+                self.last_stats["mean_accepted"] = (
+                    float(np.dot(stats["accepted_hist"],
+                                 np.arange(scfg.spec_k + 2)))
+                    / max(int(stats["accepted_hist"].sum()), 1))
+        for uid in ctl.status:  # every uid reports, however it ended
+            ctl.out.setdefault(uid, [])
+        return {uid: np.asarray(toks, np.int64)
+                for uid, toks in ctl.out.items()}
 
-    def _reserve_blocks(self, alloc, prefix, r, headroom, use_prefix=True):
+    def _reserve_blocks(self, alloc, prefix, r, headroom, use_prefix=True,
+                        done: int = 0):
         """Reserve the lane's whole logical span up front: enough blocks for
-        min(prompt + budget + headroom, s_c_max) ring slots, minus prefix
-        hits.  Returns (block_ids, n_hit_blocks) or None when the pool
-        cannot cover it even after evicting cache-only prefix blocks —
-        admission then waits (FIFO, no preemption)."""
+        min(prompt + remaining budget + headroom, s_c_max) ring slots, minus
+        prefix hits.  ``done`` is how many tokens the request already
+        emitted (a preempt-resume carries them inside ``r.tokens``, so only
+        the REMAINING budget needs new room).  Returns (block_ids,
+        n_hit_blocks) or None when the pool cannot cover it even after
+        evicting cache-only prefix blocks — admission then waits or
+        preempts (``_admit_paged``)."""
         from repro.serve import blocks as SB
 
         if alloc is None:
             return [], 0
         bs = self.scfg.kv_block_size
-        total = min(len(r.tokens) + r.max_new_tokens + headroom,
+        total = min(len(r.tokens) + max(r.max_new_tokens - done, 1) + headroom,
                     self._kv_scs[-1])
         span = SB.block_span(total, bs)
         hits = []
@@ -964,38 +1358,71 @@ class Engine:
             if hits:
                 alloc.free(hits)
             return None
-        return hits + alloc.alloc(need), len(hits)
+        try:
+            fresh = alloc.alloc(need)
+        except SB.BlockError:
+            # a fault-injected refusal (or a race with eviction accounting)
+            # must leave the reservation atomic: hand the hits back and wait
+            if hits:
+                alloc.free(hits)
+            return None
+        return hits + fresh, len(hits)
 
     def _admit_paged(self, cache, queue, free, lanes, tables, alloc, prefix,
-                     tok, pos, out, stats, rng):
+                     tok, pos, ctl, rng):
         """Admit queued requests into free lanes.  Short prompts run one
         grouped ``prefill_paged`` (per-row write_start skips re-writing
         prefix-hit blocks); prompts past the chunk threshold become 'chunk'
-        lanes that prefill incrementally between decode steps.  FIFO: a
-        request that cannot reserve its blocks parks the queue (no
-        skip-ahead, so admission order == arrival order)."""
+        lanes that prefill incrementally between decode steps.  Priority
+        order with FIFO among equals: a request that cannot reserve its
+        blocks parks the queue UNLESS a strictly-lower-priority victim lane
+        exists — then the victim is preempted (recompute-on-resume) and
+        admission retries.  A resumed request (its uid already has output)
+        re-prefills prompt+emitted and APPENDS from there — bit-exact
+        continuation by the prefill/decode parity contract."""
         scfg = self.scfg
+        stats, out = ctl.stats, ctl.out
         headroom = scfg.spec_k
         group, chunk_new = [], []
         while queue and free:
             r = queue[0]
+            done = len(out.get(r.uid, []))
             chunked = len(r.tokens) > self._chunk_threshold
             res = self._reserve_blocks(alloc, prefix, r, headroom,
-                                       use_prefix=not chunked)
+                                       use_prefix=not chunked, done=done)
             if res is None:
+                victim = (self._pick_victim(lanes, tables)
+                          if scfg.preemption else None)
+                if (victim is not None
+                        and lanes[victim]["req"].priority < r.priority):
+                    self._preempt_lane(victim, lanes, tables, alloc, prefix,
+                                       queue, ctl)
+                    free.append(victim)
+                    continue  # retry the reservation with the freed blocks
                 stats["admission_blocked"] += 1
                 break
             queue.popleft()
             bids, n_hit = res
             lane = free.pop(0)
+            ctl.admit_step.setdefault(r.uid, ctl.step)
+            if done:
+                stats["resumed"] += 1
             tables[lane, :] = 0
             tables[lane, : len(bids)] = bids
+            # 'done0' = output length at THIS admission: a later preemption
+            # re-queues tokens = r.tokens + out[uid][done0:] (r.tokens
+            # already carries anything emitted before an earlier resume)
             if chunked:
-                lanes[lane] = {"req": r, "phase": "chunk", "done": 0}
+                lanes[lane] = {"req": r, "phase": "chunk", "done": 0,
+                               "done0": done}
                 chunk_new.append(lane)
                 stats["chunked_requests"] += 1
                 stats["admissions"] += 1
                 continue
+            # own the row from reservation on — an exception between here
+            # and the prefill landing must release these blocks (the serve
+            # loop's finally sweeps every non-None lane)
+            lanes[lane] = {"req": r, "phase": "prefill", "done0": done}
             # register at RESERVATION time: within one grouped prefill every
             # pool write lands before any lane's first pool read, so later
             # group members (same iteration!) already share these entries
@@ -1020,26 +1447,80 @@ class Engine:
                 self.params, jnp.asarray(toks), cache,
                 jnp.asarray(tables[[ln for ln, _, _ in group]]),
                 jnp.asarray(lens), jnp.asarray(starts))
-            first, rng = self._sample_next(logits[:, -1], rng)
+            last, badrows = self._apply_guard(
+                logits[:, -1], list(range(len(group))),
+                lambda j: group[j][1].uid, ctl, inject=False)
+            first, rng = self._sample_next(jnp.asarray(last), rng)
             first = np.asarray(first)
             stats["admissions"] += len(group)
             stats["prefill_tokens"] += int(lens.sum())
+            badset = set(badrows)
             rows, slots = [], []
             for j, (lane, r, _) in enumerate(group):
+                if j in badset:
+                    self._quarantine(
+                        r.uid, ctl,
+                        functools.partial(self._release_lane, lane, lanes,
+                                          tables, alloc))
+                    continue
                 t = int(first[j])
-                out[r.uid] = [t]
+                prev = out.get(r.uid)
+                if prev is not None:
+                    prev.append(t)  # preempt-resume: continue the stream
+                else:
+                    out[r.uid] = [t]
                 if self._done(t, out[r.uid], r):
                     self._release_lane(lane, lanes, tables, alloc)
+                    self._finish(ctl, r.uid)
                     continue
                 rows.append(j)
                 slots.append(lane)
-                lanes[lane] = {"req": r, "phase": "decode"}
+                lanes[lane] = {"req": r, "phase": "decode",
+                               "done0": lanes[lane]["done0"]}
                 tok[lane] = t
                 pos[lane] = int(lens[j])
             # KV already landed in the shared pools through the block-table
             # scatter; only recurrent lane states need the row insert
             cache = _cache_insert(cache, src, rows, slots, kv_mode="src")
         return cache, rng
+
+    def _pick_victim(self, lanes, tables):
+        """Victim-selection rule (DESIGN.md §13): lowest priority first,
+        then most blocks held (one eviction frees the most pool), then
+        lowest lane id (deterministic).  None when no lane is evictable."""
+        cand = [i for i, l in enumerate(lanes) if l is not None]
+        if not cand:
+            return None
+        return min(cand, key=lambda i: (lanes[i]["req"].priority,
+                                        -int(np.count_nonzero(tables[i])), i))
+
+    def _preempt_lane(self, lane, lanes, tables, alloc, prefix, queue, ctl):
+        """Evict one lane under pool pressure: register its still-valid
+        prefix KV (prompt + emitted[:-1] — the positions actually written)
+        so the resume replays them as prefix hits, release every block
+        reference, and re-queue the request with ``tokens = prompt +
+        emitted`` (recompute-on-resume).  Greedy decode is deterministic
+        and prefill matches decode token-for-token (the §10/§12 parity
+        contract), so the resumed stream continues exactly where the lane
+        stopped."""
+        l = lanes[lane]
+        r = l["req"]
+        done0 = int(l.get("done0", 0))
+        emitted = list(ctl.out.get(r.uid, []))[done0:]
+        if (prefix is not None and l.get("phase") == "decode" and emitted):
+            written = np.concatenate([
+                np.asarray(r.tokens, np.int64),
+                np.asarray(emitted[:-1], np.int64)])
+            if len(written) <= self._share_limit:
+                prefix.register(written, tables[lane])
+        self._release_lane(lane, lanes, tables, alloc)
+        toks = (np.concatenate([np.asarray(r.tokens, np.int64),
+                                np.asarray(emitted, np.int64)])
+                if emitted else np.asarray(r.tokens, np.int64))
+        self._requeue(queue, dataclasses.replace(r, tokens=toks))
+        ctl.preempts[r.uid] = ctl.preempts.get(r.uid, 0) + 1
+        ctl.status[r.uid] = "preempted"
+        ctl.stats["preemptions"] += 1
 
     def _release_lane(self, lane, lanes, tables, alloc):
         """Free one reference on every block the lane's table holds (prefix
@@ -1049,33 +1530,52 @@ class Engine:
             alloc.free(int(b) for b in tables[lane] if b)
         tables[lane, :] = 0
 
-    def _cow_writable(self, cache, tables, alloc, prefix, writes, stats):
+    def _cow_writable(self, cache, tables, alloc, prefix, writes, stats, *,
+                      lanes=None, queue=None, ctl=None):
         """Copy-on-write pre-step: for each (lane, start_pos, n_tokens)
         write this iteration will issue, split every shared block it touches
         (union over the distinct KV ring lengths — SWA wraparound folds high
         positions back into low logical blocks) and device-copy contents in
-        ONE batched call.  Under pool pressure, evicts cache-only prefix
-        blocks and retries."""
+        batched calls.  Under pool pressure, evicts cache-only prefix
+        blocks and retries; with ``lanes``/``queue``/``ctl`` provided (and
+        ``ServeConfig.preemption``) an unsatisfiable split preempts a
+        victim lane instead of raising — the caller must re-derive its
+        decode set afterwards."""
         from repro.serve import blocks as SB
 
         if alloc is None:
             return cache
         bs = self.scfg.kv_block_size
+        allow_preempt = (self.scfg.preemption and lanes is not None
+                         and queue is not None and ctl is not None)
         src_all, dst_all = [], []
+
+        def flush(cache):
+            nonlocal src_all, dst_all
+            if src_all:
+                stats["cow_splits"] += len(src_all)
+                cache = SB.copy_blocks(cache, src_all, dst_all)
+                src_all, dst_all = [], []
+            return cache
+
         for lane, p0, n in writes:
+            if lanes is not None and lanes[lane] is None:
+                continue  # victimized earlier in this very pass
             ent = set()
             for s_c in self._kv_scs:
                 ent.update(SB.blocks_written(p0, n, s_c, bs))
             while True:
                 try:
                     s, d = alloc.ensure_writable(tables[lane], sorted(ent))
+                    src_all += s
+                    dst_all += d
                     break
                 except SB.BlockError:
                     if prefix is not None and prefix.evict_one():
                         continue
-                    # last resort: un-register a to-be-overwritten block the
-                    # cache ALONE shares with this lane (refcount exactly 2)
-                    # — the write invalidates its cached content anyway, and
+                    # next: un-register a to-be-overwritten block the cache
+                    # ALONE shares with this lane (refcount exactly 2) —
+                    # the write invalidates its cached content anyway, and
                     # releasing the cache ref makes it writable in place
                     forgot = False
                     if prefix is not None:
@@ -1084,23 +1584,33 @@ class Engine:
                             if (alloc.refcount(bid) == 2
                                     and prefix.forget(bid)):
                                 forgot = True
-                    if not forgot:
+                    if forgot:
+                        continue
+                    if not allow_preempt:
                         raise
-            src_all += s
-            dst_all += d
-        if src_all:
-            stats["cow_splits"] += len(src_all)
-            cache = SB.copy_blocks(cache, src_all, dst_all)
-        return cache
+                    # graceful degradation: evict a victim lane and retry.
+                    # Flush pending copies FIRST — the victim's fresh COW
+                    # blocks return to the pool, and a deferred copy must
+                    # never land in a block that may be re-allocated.
+                    cache = flush(cache)
+                    victim = self._pick_victim(lanes, tables)
+                    if victim is None:
+                        raise  # nothing left to evict: real exhaustion
+                    self._preempt_lane(victim, lanes, tables, alloc,
+                                       prefix, queue, ctl)
+                    if victim == lane:
+                        break  # the writer itself was evicted: write moot
+        return flush(cache)
 
-    def _chunk_step(self, cache, lanes, tables, alloc, prefix, chk, tok, pos,
-                    out, stats, rng):
+    def _chunk_step(self, cache, lanes, tables, alloc, prefix, queue, chk,
+                    tok, pos, ctl, rng):
         """Advance every chunk lane by one <=chunk_T-token slice through the
         verify path (teacher-forced forward over known prompt tokens) and
         commit keep=n_valid — the SAME cache-write helper spec rollback
         uses.  The final chunk's last logit samples the first token and the
         lane flips to 'decode'."""
         scfg = self.scfg
+        stats, out = ctl.stats, ctl.out
         B, T = self.lanes, self._chunk_T
         toks = np.zeros((B, T), np.int64)
         posv = np.zeros(B, np.int32)
@@ -1119,7 +1629,15 @@ class Engine:
                 fin.append((i, n))
         cache = self._cow_writable(
             cache, tables, alloc, prefix,
-            [(i, int(posv[i]), int(keep[i])) for i in chk], stats)
+            [(i, int(posv[i]), int(keep[i])) for i in chk], stats,
+            lanes=lanes, queue=queue, ctl=ctl)
+        # a COW preemption may have evicted a chunk lane mid-pass: its
+        # zeroed table row would route the write to scratch (harmless),
+        # but freeze it outright and drop it from the finishers
+        for i in chk:
+            if lanes[i] is None:
+                keep[i] = 0
+        fin = [(i, n) for i, n in fin if lanes[i] is not None]
         logits, steps = self._verify_paged(
             self.params, {"tokens": jnp.asarray(toks)}, cache,
             jnp.asarray(tables), jnp.asarray(posv))
@@ -1130,35 +1648,81 @@ class Engine:
         if fin:
             sel = logits[jnp.asarray([i for i, _ in fin]),
                          jnp.asarray([n - 1 for _, n in fin])]
-            first, rng = self._sample_next(sel, rng)
+            sel, badrows = self._apply_guard(
+                sel, list(range(len(fin))),
+                lambda j: lanes[fin[j][0]]["req"].uid, ctl, inject=False)
+            first, rng = self._sample_next(jnp.asarray(sel), rng)
             first = np.asarray(first)
+            badset = set(badrows)
             for j, (i, _) in enumerate(fin):
                 r = lanes[i]["req"]
+                if j in badset:
+                    self._quarantine(
+                        r.uid, ctl,
+                        functools.partial(self._release_lane, i, lanes,
+                                          tables, alloc))
+                    continue
+                done0 = int(lanes[i].get("done0", 0))
                 t = int(first[j])
-                out[r.uid] = [t]
+                prev = out.get(r.uid)
+                if prev is not None:
+                    prev.append(t)  # preempt-resume continues the stream
+                else:
+                    out[r.uid] = [t]
                 # register only now — the blocks filled progressively
                 if prefix is not None and len(r.tokens) <= self._share_limit:
                     prefix.register(r.tokens, tables[i])
                 if self._done(t, out[r.uid], r):
                     self._release_lane(i, lanes, tables, alloc)
+                    self._finish(ctl, r.uid)
                     continue
-                lanes[i] = {"req": r, "phase": "decode"}
+                lanes[i] = {"req": r, "phase": "decode", "done0": done0}
                 tok[i] = t
                 pos[i] = len(r.tokens)
         return cache, rng
 
     def _spec_advance_paged(self, cache, lanes, tables, alloc, prefix, dec,
-                            tok, pos, out, stats):
+                            tok, pos, ctl):
         """One speculation round through the block tables.  The jitted round
         drafts + verifies WITHOUT touching the pool, then commits only the
         accepted prefix (models.rollback_cache_paged — commit-on-accept:
         rejected draft positions never reach a shared block)."""
+        stats, out = ctl.stats, ctl.out
         live = np.zeros(self.lanes, np.int32)
         live[dec] = 1
-        target, keep, cache = self._spec_paged(
+        res = self._spec_paged(
             self.params, cache, jnp.asarray(tables), jnp.asarray(tok),
             jnp.asarray(pos), jnp.asarray(live))
+        if self._guard is not None:
+            target, keep, cache, finite = res
+            finite = np.asarray(finite)
+        else:
+            target, keep, cache = res
+            finite = None
         target, keep = np.asarray(target), np.asarray(keep)
+        if ctl.faults is not None:
+            if finite is not None:
+                finite = ctl.faults.corrupt_finite(finite, dec)
+            # an injected verify mismatch clamps acceptance to 1 — safe:
+            # every committed token is the target's own argmax, so the
+            # stream is unchanged, only throughput drops
+            keep = ctl.faults.clip_spec_keep(keep)
+        if finite is not None:
+            stats["guard_checks"] += 1
+            bad = [i for i in dec if not finite[i]]
+            if bad:
+                stats["numeric_faults"] += len(bad)
+                if self._guard == "fail-fast":
+                    from repro.serve.faults import NumericFault
+
+                    raise NumericFault(
+                        [lanes[i]["req"].uid for i in bad], ctl.step)
+                for i in bad:  # quarantine BEFORE committing their tokens
+                    self._quarantine(
+                        lanes[i]["req"].uid, ctl,
+                        functools.partial(self._release_lane, i, lanes,
+                                          tables, alloc))
+                dec = [i for i in dec if lanes[i] is not None]
         stats["spec_rounds"] += 1
         stats["draft_tokens"] += self.scfg.spec_k * len(dec)
         for i in dec:
@@ -1173,6 +1737,7 @@ class Engine:
                 stats["decode_tokens"] += 1
                 if self._done(t, out[r.uid], r):
                     self._release_lane(i, lanes, tables, alloc)
+                    self._finish(ctl, r.uid)
                     break
             pos[i] += committed
             tok[i] = int(target[i, committed - 1])
@@ -1184,9 +1749,35 @@ class Engine:
 
     @staticmethod
     def _norm_request(r, i: int, max_new: int) -> Request:
-        if isinstance(r, Request):
-            return r
-        return Request(uid=i, tokens=np.asarray(r, np.int64), max_new_tokens=max_new)
+        """Normalize + validate one queue entry.  Bad fields fail HERE with
+        actionable messages instead of as shape errors deep inside prefill
+        (or as silently lost results keyed on an unhashable uid)."""
+        if not isinstance(r, Request):
+            r = Request(uid=i, tokens=np.asarray(r, np.int64),
+                        max_new_tokens=max_new)
+        toks = np.asarray(r.tokens, np.int64)
+        if toks.ndim != 1 or toks.shape[0] == 0:
+            raise ValueError(
+                f"request {r.uid!r}: prompt must be a non-empty 1-D token "
+                f"sequence, got shape {tuple(toks.shape)} — an empty prompt "
+                f"has no logits to sample a first token from")
+        if int(r.max_new_tokens) < 1:
+            raise ValueError(
+                f"request {r.uid!r}: max_new_tokens must be >= 1, got "
+                f"{r.max_new_tokens} (admission samples the first token "
+                f"from the prefill logits, so every request emits >= 1)")
+        try:
+            hash(r.uid)
+        except TypeError:
+            raise ValueError(
+                f"request uid {r.uid!r} is unhashable: results, statuses "
+                f"and cancellation all key on uid — use a str/int/tuple "
+                f"id") from None
+        if r.deadline_steps is not None and int(r.deadline_steps) < 1:
+            raise ValueError(
+                f"request {r.uid!r}: deadline_steps must be >= 1 scheduler "
+                f"iterations (or None), got {r.deadline_steps}")
+        return dataclasses.replace(r, tokens=toks)
 
     def _sample(self, logits, rng):
         return sample_tokens(logits, self.cfg, self.scfg.temperature, rng)

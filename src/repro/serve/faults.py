@@ -1,0 +1,315 @@
+"""Deterministic fault injection + invariants for the serving engine
+(DESIGN.md §13).
+
+Production FP8 serving has three failure families the scheduler must
+degrade through instead of dying: **memory pressure** (block-pool
+exhaustion, COW contention under prefix sharing), **numeric faults**
+(NaN/Inf escaping the low-precision path — the overflow/underflow hazard
+per-format scaling exists to contain), and **control events** (client
+cancellation, deadline expiry).  This module provides:
+
+* :class:`FaultPlan` — a seeded, fully deterministic schedule of injected
+  faults.  The same plan against the same request mix replays the same
+  failures bit-for-bit, so every recovery path is a regression test, not
+  a flake.  Faults are injected at the REAL failure sites: allocator
+  calls raise the real :class:`~repro.serve.blocks.BlockError`, NaNs land
+  in the real logits buffer the guard inspects, cancels go through the
+  real :meth:`Engine.cancel` hook.
+* :class:`NumericFault` — raised by the ``fail-fast`` numeric-guard
+  policy when a non-finite logit survives to sampling.
+* :func:`check_invariants` — allocator/table/prefix conservation: every
+  refcount equals the number of live holders, the free list and the held
+  set partition the pool, and no lane row leaks ids.  The engine asserts
+  this after every scheduler iteration when fault injection is active
+  (``ServeConfig.invariant_checks``), so an injected fault can never
+  silently corrupt bookkeeping.
+
+Injection-point indexing (all 0-based, documented per field):
+
+* ``alloc_failures`` / ``cow_failures`` count calls on the wrapped
+  allocator (:meth:`FaultPlan.allocator`) — ``alloc()`` and
+  ``ensure_writable()`` respectively — across the whole serve call.
+* ``nan_steps`` counts guard-inspected decode-phase calls (one per
+  decode step or speculation round); admission prefills are not
+  injection targets (the guard still checks them for real NaNs).
+* ``cancels`` counts scheduler iterations (the engine drains them at the
+  top of each loop).
+* ``spec_mismatch_rounds`` counts speculation rounds; a hit clamps the
+  accepted length to 1 (total draft mismatch — the worst case the
+  verify step must absorb without changing the token stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serve import blocks as SB
+
+__all__ = ["FaultPlan", "NumericFault", "check_invariants"]
+
+
+class NumericFault(RuntimeError):
+    """A non-finite logit reached sampling under the ``fail-fast`` numeric
+    guard.  Carries the offending request uids and the decode-phase call
+    index so the operator can bisect which container/step produced it."""
+
+    def __init__(self, uids, step: int):
+        self.uids = list(uids)
+        self.step = int(step)
+        super().__init__(
+            f"non-finite logits at decode call {step} for request(s) "
+            f"{self.uids!r} (numeric_guard='fail-fast'; use 'quarantine' or "
+            f"'fallback' to degrade per-lane instead)")
+
+
+class _FaultyAllocator(SB.BlockAllocator):
+    """BlockAllocator that consults a :class:`FaultPlan` before every
+    ``alloc``/``ensure_writable`` — injected failures raise the same
+    :class:`BlockError` real exhaustion raises, BEFORE any state mutates,
+    so recovery exercises the production paths exactly."""
+
+    def __init__(self, plan: "FaultPlan", num_blocks: int, block_size: int):
+        super().__init__(num_blocks, block_size)
+        self._plan = plan
+
+    def alloc(self, n: int = 1):
+        if self._plan._take_alloc_fault():
+            raise SB.BlockError(
+                f"[fault-injected] allocator refused {n} block(s) "
+                f"(plan seed {self._plan.seed})")
+        return super().alloc(n)
+
+    def ensure_writable(self, table, logical_blocks):
+        if self._plan._take_cow_fault():
+            raise SB.BlockError(
+                f"[fault-injected] COW split refused "
+                f"(plan seed {self._plan.seed})")
+        return super().ensure_writable(table, logical_blocks)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic schedule of injected serving faults.
+
+    Construct explicitly for targeted tests, or via :meth:`seeded` for a
+    randomized-but-reproducible mix.  Pass to ``Engine.serve(...,
+    faults=plan)``; the engine calls :meth:`reset` on entry, so one plan
+    object replays identically across serve calls.
+    """
+
+    seed: int = 0
+    # allocator call indices (0-based) whose alloc() raises BlockError
+    alloc_failures: frozenset = frozenset()
+    # ensure_writable() call indices that raise BlockError (COW contention)
+    cow_failures: frozenset = frozenset()
+    # decode-phase call index -> lane ids whose logits become NaN
+    # (an int lane, a tuple of lanes, or "all")
+    nan_steps: dict = dataclasses.field(default_factory=dict)
+    # when True a nan_steps hit also corrupts the 'fallback' policy's
+    # reference-path retry (models a fault upstream of the kernel choice);
+    # default False models a fused-kernel-only fault the ref path clears
+    persistent_nan: bool = False
+    # scheduler iteration -> request uids to cancel at that iteration
+    cancels: dict = dataclasses.field(default_factory=dict)
+    # speculation round indices whose accepted length clamps to 1
+    spec_mismatch_rounds: frozenset = frozenset()
+
+    def __post_init__(self):
+        self.alloc_failures = frozenset(int(i) for i in self.alloc_failures)
+        self.cow_failures = frozenset(int(i) for i in self.cow_failures)
+        self.spec_mismatch_rounds = frozenset(
+            int(i) for i in self.spec_mismatch_rounds)
+        self.reset()
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def seeded(cls, seed: int, *, uids=(), n_alloc: int = 2, n_cow: int = 2,
+               n_nan: int = 1, n_cancel: int = 1, n_spec: int = 0,
+               decode_calls: int = 32, alloc_calls: int = 32,
+               steps: int = 32, lanes: int = 4) -> "FaultPlan":
+        """The standard randomized plan: ``n_alloc`` allocator refusals and
+        ``n_cow`` COW refusals in the first ``alloc_calls`` allocator
+        calls, ``n_nan`` NaN injections over ``decode_calls`` decode calls
+        x ``lanes`` lanes, ``n_cancel`` cancels of ``uids`` members over
+        ``steps`` scheduler iterations, ``n_spec`` spec-mismatch rounds.
+        Same seed -> same plan, field for field."""
+        rng = np.random.default_rng(seed)
+
+        def pick(n, hi):
+            n = min(int(n), int(hi))
+            return frozenset(
+                int(i) for i in rng.choice(hi, size=n, replace=False)) \
+                if n > 0 else frozenset()
+
+        nan_steps = {}
+        for i in sorted(pick(n_nan, decode_calls)):
+            nan_steps[i] = (int(rng.integers(lanes)),)
+        cancels = {}
+        uids = list(uids)
+        if uids and n_cancel > 0:
+            victims = rng.choice(len(uids), size=min(n_cancel, len(uids)),
+                                 replace=False)
+            for v in victims:
+                # cancel late enough that the request usually got admitted
+                cancels.setdefault(
+                    int(rng.integers(1, max(steps, 2))), []).append(uids[v])
+        return cls(seed=seed,
+                   alloc_failures=pick(n_alloc, alloc_calls),
+                   cow_failures=pick(n_cow, alloc_calls),
+                   nan_steps=nan_steps,
+                   cancels={k: tuple(v) for k, v in cancels.items()},
+                   spec_mismatch_rounds=pick(n_spec, decode_calls))
+
+    # ------------------------------------------------------------------
+    # engine hooks (all deterministic, counter-driven)
+    # ------------------------------------------------------------------
+
+    def reset(self) -> None:
+        """Rewind every injection counter (the engine calls this at the
+        top of each serve())."""
+        self._n_alloc = 0
+        self._n_cow = 0
+        self._n_decode = 0
+        self._n_spec = 0
+        self.injected = {"alloc": 0, "cow": 0, "nan": 0, "cancel": 0,
+                         "spec": 0}
+
+    def allocator(self, num_blocks: int, block_size: int) -> SB.BlockAllocator:
+        """A real BlockAllocator whose alloc/ensure_writable consult this
+        plan first — the engine constructs its pool allocator through
+        this when a plan is active."""
+        return _FaultyAllocator(self, num_blocks, block_size)
+
+    def _take_alloc_fault(self) -> bool:
+        i, self._n_alloc = self._n_alloc, self._n_alloc + 1
+        hit = i in self.alloc_failures
+        self.injected["alloc"] += hit
+        return hit
+
+    def _take_cow_fault(self) -> bool:
+        i, self._n_cow = self._n_cow, self._n_cow + 1
+        hit = i in self.cow_failures
+        self.injected["cow"] += hit
+        return hit
+
+    def corrupt_logits(self, last, occupied, *, retry: bool = False):
+        """Inject NaNs into this decode call's last-token logits.  ``last``
+        is (B, V) (or (B, T, V) for a verify pass); ``occupied`` the lane
+        ids actually serving.  ``retry=True`` marks the 'fallback'
+        policy's reference-path re-run: it re-corrupts only when
+        ``persistent_nan``.  Returns (possibly-copied) logits."""
+        if not retry:
+            i, self._n_decode = self._n_decode, self._n_decode + 1
+        else:
+            if not self.persistent_nan:
+                return last
+            i = self._n_decode - 1
+        lanes = self.nan_steps.get(i)
+        if lanes is None:
+            return last
+        if lanes == "all":
+            lanes = list(occupied)
+        elif np.isscalar(lanes):
+            lanes = [int(lanes)]
+        lanes = [l for l in lanes if l in set(occupied)]
+        if not lanes:
+            return last
+        out = np.array(last, np.float32, copy=True)
+        out[np.asarray(lanes, np.int32)] = np.nan
+        self.injected["nan"] += 1
+        return out
+
+    def corrupt_finite(self, finite, occupied):
+        """Speculation-round twin of :meth:`corrupt_logits`: the round's
+        logits never leave the jit, so a NaN injection instead forces the
+        in-jit finiteness verdict to False for the chosen lanes."""
+        i, self._n_decode = self._n_decode, self._n_decode + 1
+        lanes = self.nan_steps.get(i)
+        if lanes is None:
+            return finite
+        if lanes == "all":
+            lanes = list(occupied)
+        elif np.isscalar(lanes):
+            lanes = [int(lanes)]
+        lanes = [l for l in lanes if l in set(occupied)]
+        if not lanes:
+            return finite
+        out = np.array(finite, bool, copy=True)
+        out[np.asarray(lanes, np.int32)] = False
+        self.injected["nan"] += 1
+        return out
+
+    def cancels_at(self, step: int):
+        """Request uids the plan cancels at scheduler iteration ``step``."""
+        uids = self.cancels.get(int(step), ())
+        self.injected["cancel"] += len(tuple(uids))
+        return tuple(uids) if not isinstance(uids, (str, bytes)) else (uids,)
+
+    def clip_spec_keep(self, keep):
+        """Clamp this round's accepted lengths to 1 when the plan schedules
+        a spec-verify mismatch here (keep==0 lanes stay 0: idle)."""
+        i, self._n_spec = self._n_spec, self._n_spec + 1
+        if i not in self.spec_mismatch_rounds:
+            return keep
+        self.injected["spec"] += 1
+        return np.minimum(np.asarray(keep), 1) * (np.asarray(keep) > 0)
+
+
+# ----------------------------------------------------------------------
+# invariants
+# ----------------------------------------------------------------------
+
+def check_invariants(alloc, tables=None, lanes=None, prefix=None,
+                     out=None, uids=None) -> None:
+    """Assert block bookkeeping conservation; raise AssertionError with a
+    precise diff otherwise.
+
+    1. **Refcount conservation** — for every block id b >= 1,
+       ``refcount(b)`` equals the number of live holders: one per live
+       lane table entry pointing at b, plus one if the prefix cache
+       registered it.  (Scratch block 0 is permanently pinned at 1.)
+    2. **Partition** — the free list and the held set are disjoint and
+       together cover the whole pool; the free list has no duplicates.
+    3. **No leaked rows** — a lane whose slot is empty has an all-zero
+       table row (released tables cannot pin blocks).
+    4. optionally **token accounting** — every known request uid has an
+       output entry (``out``/``uids``): no request is silently lost.
+    """
+    n = alloc.num_blocks
+    ref = alloc.refcounts()
+    expect = np.zeros(n, np.int64)
+    expect[SB.SCRATCH_BLOCK] = 1
+    if tables is not None:
+        live = ([l is not None for l in lanes] if lanes is not None
+                else [True] * len(tables))
+        for i, row in enumerate(np.asarray(tables)):
+            if not live[i]:
+                assert not row.any(), (
+                    f"released lane {i} still holds block ids "
+                    f"{row[row != 0].tolist()}")
+                continue
+            for b in row:
+                if b:
+                    expect[int(b)] += 1
+    if prefix is not None:
+        for b in prefix.block_ids():
+            expect[int(b)] += 1
+    mism = np.nonzero(ref != expect)[0]
+    assert mism.size == 0, (
+        f"refcount conservation violated at blocks {mism.tolist()}: "
+        f"refcounts {ref[mism].tolist()} vs live holders "
+        f"{expect[mism].tolist()}")
+    free = list(alloc.free_list())
+    assert len(free) == len(set(free)), f"free list has duplicates: {free}"
+    held = {b for b in range(1, n) if ref[b] > 0}
+    dup = set(free) & held
+    assert not dup, f"blocks both free and referenced: {sorted(dup)}"
+    assert set(free) | held == set(range(1, n)), (
+        f"lost blocks: {sorted(set(range(1, n)) - set(free) - held)}")
+    if out is not None and uids is not None:
+        missing = [u for u in uids if u not in out]
+        assert not missing, f"requests lost without a result: {missing!r}"

@@ -51,7 +51,8 @@ def greedy_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
 
 
 def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
-                     draft_method: str | None = "dsbp_ref"):
+                     draft_method: str | None = "dsbp_ref",
+                     guard: bool = False):
     """Build the round function ``(params, cache, tok, pos) -> (target
     (B, γ+1), keep (B,), new_cache)`` for ``jax.jit`` (donate the cache).
 
@@ -61,6 +62,15 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
     approximation by construction, so it may use the cheapest backend
     available while the verify pass keeps the serving method.  None
     inherits the target's method.
+
+    ``guard=True`` appends a 4th output ``finite (B,) bool`` — per-lane
+    all-finiteness of the VERIFY logits, computed inside the jit (one
+    reduction, no extra transfer beyond B bools).  The serving engine's
+    numeric guard (DESIGN.md §13) quarantines lanes whose mask is False
+    BEFORE their tokens commit: a NaN from a corrupted container or an
+    overflowed low-precision accumulation kills one lane's round, never
+    the batch.  Draft logits are deliberately unguarded — draft output is
+    advisory and verification re-derives every committed token.
     """
     if spec_k < 1:
         raise ValueError(f"spec_k must be >= 1, got {spec_k}")
@@ -92,6 +102,10 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
         keep = greedy_accept(draft, target)
         cache_rb = M.rollback_cache(
             cache, new_cache, rollback, keep, pos, cfg, spec_k + 1)
+        if guard:
+            finite = jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                             axis=(1, 2))
+            return target, keep, cache_rb, finite
         return target, keep, cache_rb
 
     return spec_round
@@ -99,7 +113,7 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
 
 def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
                            draft_method: str | None = "dsbp_ref",
-                           max_len: int = 0):
+                           max_len: int = 0, guard: bool = False):
     """Paged twin of :func:`build_spec_round`: ``(params, cache, table, tok,
     pos, live) -> (target, keep, new_cache)`` where ``cache`` is the block
     pool and ``table (B, W)`` the per-lane block tables.
@@ -113,6 +127,13 @@ def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
     is bit-exact by construction instead of by restoration.  ``live`` masks
     idle/chunk lanes: keep*live == 0 freezes their blocks and recurrent
     state entirely.
+
+    The paged scheduler preempts lanes (DESIGN.md §13): a lane released
+    between rounds simply arrives with ``live == 0`` next round — its
+    zeroed table row only ever routes writes to scratch, so a preemption
+    can never corrupt the pool mid-speculation.  ``guard=True`` appends
+    the per-lane verify-logit finiteness mask as a 4th output, exactly as
+    in :func:`build_spec_round`.
     """
     if spec_k < 1:
         raise ValueError(f"spec_k must be >= 1, got {spec_k}")
@@ -143,6 +164,10 @@ def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
         keep = greedy_accept(draft, target) * live
         new_cache = M.rollback_cache_paged(
             cache, table, steps, keep, pos, cfg, max_len)
+        if guard:
+            finite = jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                             axis=(1, 2))
+            return target, keep, new_cache, finite
         return target, keep, new_cache
 
     return spec_round

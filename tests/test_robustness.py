@@ -1,0 +1,545 @@
+"""Fault-tolerant serving (DESIGN.md §13).
+
+Core contract: under a deterministic :class:`~repro.serve.faults.FaultPlan`
+(pool exhaustion, COW contention, NaN injection, cancellation), the engine
+returns a lifecycle status for EVERY request, preempt-resumed lanes replay
+token-for-token what an unfaulted run emits, numeric faults kill one lane
+(or retry through the reference path) instead of the batch, any exception
+leaves the block allocator conserved, and the invariant checker passes
+after every scheduler iteration.
+"""
+import dataclasses
+from collections import deque
+
+import numpy as np
+import jax
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import smoke_config
+from repro.models import model as M
+from repro.serve import blocks as SB
+from repro.serve import faults as FA
+from repro.serve.engine import Engine, Request, ServeConfig, _ServeControl
+
+
+def _cfg(arch="yi-9b", **kw):
+    return smoke_config(arch).replace(remat=False, **kw)
+
+
+@pytest.fixture(scope="module")
+def fparams():
+    return M.init(jax.random.PRNGKey(0), _cfg())
+
+
+def _reqs(cfg, lens, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=f"r{i}", tokens=rng.integers(0, cfg.vocab_size, (l,)),
+                    max_new_tokens=8, **kw)
+            for i, l in enumerate(lens)]
+
+
+def _paged_scfg(**kw):
+    base = dict(max_len=32, batch_size=4, paged=True, kv_block_size=4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _ok_uids(stats):
+    return {u for u, s in stats["request_status"].items()
+            if s in ("ok", "preempted")}
+
+
+# ---------------------------------------------------------------------------
+# request validation (satellite: fail at admission, not deep inside prefill)
+# ---------------------------------------------------------------------------
+
+def test_norm_request_rejects_empty_prompt():
+    with pytest.raises(ValueError, match="non-empty"):
+        Engine._norm_request(Request(uid="a", tokens=np.zeros((0,), np.int64)),
+                             0, 8)
+
+
+def test_norm_request_rejects_bad_shape():
+    with pytest.raises(ValueError, match="1-D"):
+        Engine._norm_request(np.zeros((2, 3), np.int64), 0, 8)
+
+
+def test_norm_request_rejects_zero_budget():
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Engine._norm_request(
+            Request(uid="a", tokens=np.arange(4), max_new_tokens=0), 0, 8)
+
+
+def test_norm_request_rejects_unhashable_uid():
+    with pytest.raises(ValueError, match="unhashable"):
+        Engine._norm_request(
+            Request(uid=["list", "uid"], tokens=np.arange(4)), 0, 8)
+
+
+def test_norm_request_rejects_bad_deadline():
+    with pytest.raises(ValueError, match="deadline_steps"):
+        Engine._norm_request(
+            Request(uid="a", tokens=np.arange(4), deadline_steps=0), 0, 8)
+
+
+def test_norm_request_does_not_mutate_caller():
+    r = Request(uid="a", tokens=[1, 2, 3])
+    out = Engine._norm_request(r, 0, 8)
+    assert isinstance(out.tokens, np.ndarray) and isinstance(r.tokens, list)
+
+
+def test_unknown_guard_policy_rejected(fparams):
+    with pytest.raises(ValueError, match="numeric_guard"):
+        Engine(fparams, _cfg(), ServeConfig(max_len=32, numeric_guard="bogus"))
+
+
+def test_fallback_guard_incompatible_with_spec(fparams):
+    with pytest.raises(ValueError, match="fallback"):
+        Engine(fparams, _cfg(), ServeConfig(max_len=32, spec_k=2,
+                                            numeric_guard="fallback"))
+
+
+# ---------------------------------------------------------------------------
+# allocator edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def test_allocator_double_free_raises():
+    a = SB.BlockAllocator(4, 2)
+    (b,) = a.alloc(1)
+    a.free([b])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([b])
+
+
+def test_prefix_forget_unknown_block_is_noop():
+    a = SB.BlockAllocator(4, 2)
+    p = SB.PrefixCache(a)
+    assert p.forget(3) is False          # never registered
+    assert p.forget(SB.SCRATCH_BLOCK) is False
+    assert a.free_blocks == 3            # nothing freed by the miss
+
+
+def test_ensure_writable_already_writable_is_noop():
+    a = SB.BlockAllocator(5, 2)
+    table = np.zeros(4, np.int32)
+    table[:2] = a.alloc(2)
+    before = a.refcounts().copy()
+    src, dst = a.ensure_writable(table, [0, 1])
+    assert src == [] and dst == []
+    assert np.array_equal(a.refcounts(), before)
+
+
+def test_ensure_writable_rejects_scratch_entry():
+    a = SB.BlockAllocator(5, 2)
+    table = np.zeros(4, np.int32)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.ensure_writable(table, [0])
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 30)),
+                max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_allocator_random_ops_conserve_refcounts(ops):
+    """Property: ANY alloc/share/free interleaving leaves refcounts equal
+    to a trivial python model's, and free-list ∪ held = pool."""
+    n = 9
+    a = SB.BlockAllocator(n, 4)
+    model = {}   # bid -> refcount
+    held = []    # one handle per outstanding reference
+    for op, arg in ops:
+        if op == 0:
+            want = arg % 4
+            if want > a.free_blocks:
+                with pytest.raises(SB.BlockError):
+                    a.alloc(want)
+            else:
+                for b in a.alloc(want):
+                    model[b] = 1
+                    held.append(b)
+        elif op == 1 and held:
+            b = held[arg % len(held)]
+            a.share(b)
+            model[b] += 1
+            held.append(b)
+        elif op == 2 and held:
+            b = held.pop(arg % len(held))
+            a.free([b])
+            model[b] -= 1
+            if not model[b]:
+                del model[b]
+    ref = a.refcounts()
+    for b in range(1, n):
+        assert ref[b] == model.get(b, 0), (b, ref.tolist(), model)
+    assert a.free_blocks == (n - 1) - len(model)
+    assert set(a.free_list()) | set(model) == set(range(1, n))
+    FA.check_invariants(a)
+
+
+# ---------------------------------------------------------------------------
+# fault plan + invariant checker
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_seeded_is_deterministic():
+    kw = dict(uids=["a", "b", "c"], n_alloc=2, n_cow=2, n_nan=2, n_cancel=2)
+    p1 = FA.FaultPlan.seeded(7, **kw)
+    p2 = FA.FaultPlan.seeded(7, **kw)
+    assert p1.alloc_failures == p2.alloc_failures
+    assert p1.cow_failures == p2.cow_failures
+    assert p1.nan_steps == p2.nan_steps
+    assert p1.cancels == p2.cancels
+    assert FA.FaultPlan.seeded(8, **kw).alloc_failures != p1.alloc_failures \
+        or FA.FaultPlan.seeded(8, **kw).nan_steps != p1.nan_steps
+
+
+def test_invariant_checker_catches_leak_and_loss():
+    a = SB.BlockAllocator(5, 2)
+    a.alloc(2)  # held by nobody the checker can see -> leak
+    with pytest.raises(AssertionError, match="refcount conservation"):
+        FA.check_invariants(a, tables=np.zeros((1, 4), np.int32),
+                            lanes=[None])
+    # a released lane whose row still holds ids is a leak too
+    b = SB.BlockAllocator(5, 2)
+    t = np.zeros((1, 4), np.int32)
+    t[0, 0] = b.alloc(1)[0]
+    with pytest.raises(AssertionError, match="released lane"):
+        FA.check_invariants(b, tables=t, lanes=[None])
+    # missing uid in out
+    c = SB.BlockAllocator(5, 2)
+    with pytest.raises(AssertionError, match="lost"):
+        FA.check_invariants(c, out={"a": []}, uids=["a", "b"])
+
+
+# ---------------------------------------------------------------------------
+# exception hardening (satellite: conservation + last_stats on any exit)
+# ---------------------------------------------------------------------------
+
+def test_exception_mid_loop_conserves_allocator_and_last_stats(fparams):
+    cfg = _cfg()
+    eng = Engine(fparams, cfg, _paged_scfg(numeric_guard="fail-fast"))
+    plan = FA.FaultPlan(nan_steps={1: "all"})
+    with pytest.raises(FA.NumericFault):
+        eng.serve(_reqs(cfg, [5, 9, 7]), faults=plan)
+    st_ = eng.last_stats
+    assert st_ is not None and st_["completed"] is False
+    assert st_["decode_steps"] >= 1  # it really died mid-loop
+    # every block reference returned to the pool on the way out
+    alloc = eng._last_alloc
+    assert alloc is not None and alloc.used_blocks == 0
+    assert alloc.free_blocks == eng.kv_blocks - 1
+    FA.check_invariants(alloc)
+
+
+def test_dense_exception_still_sets_last_stats(fparams):
+    cfg = _cfg()
+    eng = Engine(fparams, cfg,
+                 ServeConfig(max_len=32, batch_size=2,
+                             numeric_guard="fail-fast"))
+    with pytest.raises(FA.NumericFault):
+        eng.serve(_reqs(cfg, [5, 9]), faults=FA.FaultPlan(nan_steps={0: "all"}))
+    assert eng.last_stats is not None
+    assert eng.last_stats["completed"] is False
+    assert eng.last_stats["numeric_faults"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation + deadlines
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_midstream(fparams):
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7, 6])
+    eng = Engine(fparams, cfg, _paged_scfg())
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    # cancel r1 mid-stream (scheduler step 3) and r3 before serve starts
+    eng.cancel("r3")
+    plan = FA.FaultPlan(cancels={3: ("r1",)})
+    out = eng.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    status = eng.last_stats["request_status"]
+    assert status["r1"] == "cancelled" and status["r3"] == "cancelled"
+    assert eng.last_stats["cancelled"] == 2
+    assert eng.last_stats["completed"] is True
+    # cancelled mid-stream: a PREFIX of the unfaulted stream survives
+    assert 0 < len(out["r1"]) < len(base["r1"])
+    assert np.array_equal(out["r1"], base["r1"][: len(out["r1"])])
+    assert len(out["r3"]) == 0  # cancelled while queued: nothing emitted
+    for uid in ("r0", "r2"):    # untouched lanes: full parity
+        assert status[uid] == "ok"
+        assert np.array_equal(out[uid], base[uid])
+    FA.check_invariants(eng._last_alloc)
+
+
+def test_deadline_expiry_frees_lane(fparams):
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid="slow", tokens=rng.integers(0, cfg.vocab_size, (5,)),
+                    max_new_tokens=20, deadline_steps=3),
+            Request(uid="fast", tokens=rng.integers(0, cfg.vocab_size, (7,)),
+                    max_new_tokens=6)]
+    eng = Engine(fparams, cfg, _paged_scfg(invariant_checks=True))
+    out = eng.serve(reqs)
+    status = eng.last_stats["request_status"]
+    assert status["slow"] == "deadline" and status["fast"] == "ok"
+    assert eng.last_stats["deadline_expired"] == 1
+    assert 0 < len(out["slow"]) < 20  # partial output survives
+    assert len(out["fast"]) == 6
+    assert eng.last_stats["invariant_checks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption + bit-exact resume (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_preempt_resume_token_parity(fparams):
+    """A COW split refused by the fault plan preempts a victim lane; the
+    victim re-queues, re-prefills prompt+emitted (prefix hits replay the
+    still-valid KV) and finishes with EXACTLY the unfaulted stream."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7, 6])
+    eng = Engine(fparams, cfg, _paged_scfg())
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    plan = FA.FaultPlan(cow_failures={0, 3})
+    out = eng.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = eng.last_stats
+    assert st_["preemptions"] >= 1
+    assert st_["resumed"] >= 1
+    assert st_["invariant_checks"] > 0  # ran after every iteration
+    assert "preempted" in st_["request_status"].values()
+    for uid in base:  # EVERY stream bit-exact, preempted ones included
+        assert np.array_equal(out[uid], base[uid]), uid
+    assert all(s in ("ok", "preempted")
+               for s in st_["request_status"].values())
+    FA.check_invariants(eng._last_alloc)
+
+
+def test_pool_exhaustion_preempts_instead_of_raising(fparams):
+    """Injected allocator refusals at admission leave requests waiting (not
+    crashed) and the run completes with full parity."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7, 6, 8, 5][:5], seed=3)
+    scfg = _paged_scfg(kv_blocks=13, max_active=3)  # over-subscribed pool
+    eng = Engine(fparams, cfg, scfg)
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    plan = FA.FaultPlan(alloc_failures={0, 2}, cow_failures={1})
+    out = eng.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = eng.last_stats
+    assert st_["completed"] is True
+    for uid in base:
+        assert np.array_equal(out[uid], base[uid]), uid
+    assert set(st_["request_status"].values()) <= {"ok", "preempted"}
+    FA.check_invariants(eng._last_alloc)
+
+
+def test_admission_preemption_strictly_higher_priority(fparams):
+    """White-box: a queued request preempts an active lane ONLY when its
+    priority is strictly higher (the victim-selection rule, DESIGN.md §13).
+    """
+    cfg = _cfg()
+    scfg = _paged_scfg(batch_size=2, kv_blocks=5, max_active=2,
+                       prefix_sharing=False)
+    eng = Engine(fparams, cfg, scfg)
+    rng = np.random.default_rng(0)
+    low = Request(uid="low", tokens=rng.integers(0, cfg.vocab_size, (8,)),
+                  max_new_tokens=8, priority=0)
+    high = Request(uid="high", tokens=rng.integers(0, cfg.vocab_size, (8,)),
+                   max_new_tokens=4, priority=3)
+    alloc = SB.BlockAllocator(eng.kv_blocks, scfg.kv_block_size)
+    cache = M.init_paged_cache(cfg, eng.lanes, eng.kv_blocks,
+                               scfg.kv_block_size)
+    tables = np.zeros((eng.lanes, eng._table_width), np.int32)
+    tables[0, :4] = alloc.alloc(4)          # low owns the whole pool
+    lanes = [{"req": low, "phase": "decode", "done0": 0}, None]
+    stats = {**Engine._robust_stats(), "admissions": 0, "prefill_tokens": 0,
+             "admission_blocked": 0, "chunked_requests": 0}
+    ctl = _ServeControl(stats=stats, out={"low": [3]},
+                        status={"low": "queued", "high": "queued"})
+    tok = np.zeros(eng.lanes, np.int64)
+    pos = np.zeros(eng.lanes, np.int32)
+    pos[0] = 9
+    queue = deque([high])
+    eng._admit_paged(cache, queue, [1], lanes, tables, alloc, None, tok, pos,
+                     ctl, jax.random.PRNGKey(0))
+    assert ctl.status["low"] == "preempted"
+    assert stats["preemptions"] == 1
+    assert any(l is not None and l["req"].uid == "high" for l in lanes)
+    # the victim re-queued with prompt + emitted for bit-exact resume
+    assert queue and queue[0].uid == "low"
+    assert len(queue[0].tokens) == len(low.tokens) + 1
+    FA.check_invariants(alloc, tables, lanes)
+    # equal priority must NOT preempt: same setup, priority 0 contender
+    stats2 = {**Engine._robust_stats(), "admissions": 0, "prefill_tokens": 0,
+              "admission_blocked": 0, "chunked_requests": 0}
+    ctl2 = _ServeControl(stats=stats2, out={"low": [3]},
+                         status={"low": "queued", "eq": "queued"})
+    alloc2 = SB.BlockAllocator(eng.kv_blocks, scfg.kv_block_size)
+    tables2 = np.zeros((eng.lanes, eng._table_width), np.int32)
+    tables2[0, :4] = alloc2.alloc(4)
+    lanes2 = [{"req": low, "phase": "decode", "done0": 0}, None]
+    eq = dataclasses.replace(high, uid="eq", priority=0)
+    eng._admit_paged(cache, deque([eq]), [1], lanes2, tables2, alloc2, None,
+                     tok, pos, ctl2, jax.random.PRNGKey(0))
+    assert stats2["preemptions"] == 0 and stats2["admission_blocked"] == 1
+    assert lanes2[0] is not None and lanes2[0]["req"].uid == "low"
+
+
+# ---------------------------------------------------------------------------
+# numeric guards
+# ---------------------------------------------------------------------------
+
+def test_guard_quarantine_kills_one_lane_not_the_batch(fparams):
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7, 6])
+    eng = Engine(fparams, cfg, _paged_scfg())
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    engq = Engine(fparams, cfg, _paged_scfg(numeric_guard="quarantine"))
+    plan = FA.FaultPlan(nan_steps={1: (0,)})  # lane 0 = first admitted = r0
+    out = engq.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = engq.last_stats
+    assert st_["request_status"]["r0"] == "quarantined"
+    assert st_["quarantined"] == 1 and st_["numeric_faults"] >= 1
+    # partial output is a prefix of the healthy stream
+    assert 0 < len(out["r0"]) < len(base["r0"])
+    assert np.array_equal(out["r0"], base["r0"][: len(out["r0"])])
+    for uid in ("r1", "r2", "r3"):  # the rest of the batch is untouched
+        assert st_["request_status"][uid] == "ok"
+        assert np.array_equal(out[uid], base[uid])
+    FA.check_invariants(engq._last_alloc)
+
+
+def test_guard_fail_fast_raises_with_uids(fparams):
+    cfg = _cfg()
+    eng = Engine(fparams, cfg, _paged_scfg(numeric_guard="fail-fast"))
+    with pytest.raises(FA.NumericFault) as ei:
+        eng.serve(_reqs(cfg, [5, 9]), faults=FA.FaultPlan(nan_steps={0: (1,)}))
+    assert ei.value.uids == ["r1"]
+
+
+def test_guard_fallback_recovers_transient_fault(fparams):
+    """A NaN the reference-path retry clears costs one fallback step and
+    changes NOTHING: every stream matches the unfaulted run, all 'ok'."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7])
+    eng = Engine(fparams, cfg, _paged_scfg())
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    engf = Engine(fparams, cfg, _paged_scfg(numeric_guard="fallback"))
+    plan = FA.FaultPlan(nan_steps={1: (0,)})  # transient: retry is clean
+    out = engf.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = engf.last_stats
+    assert st_["fallback_steps"] == 1 and st_["quarantined"] == 0
+    assert set(st_["request_status"].values()) == {"ok"}
+    for uid in base:
+        assert np.array_equal(out[uid], base[uid]), uid
+
+
+def test_guard_fallback_persistent_fault_quarantines(fparams):
+    cfg = _cfg()
+    engf = Engine(fparams, _cfg(), _paged_scfg(numeric_guard="fallback"))
+    plan = FA.FaultPlan(nan_steps={1: (0,)}, persistent_nan=True)
+    engf.serve(_reqs(_cfg(), [5, 9]), faults=plan)
+    st_ = engf.last_stats
+    assert st_["fallback_steps"] == 1
+    assert st_["request_status"]["r0"] == "quarantined"
+    assert st_["request_status"]["r1"] == "ok"
+
+
+def test_dense_guard_quarantine_parity(fparams):
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7])
+    eng = Engine(fparams, cfg, ServeConfig(max_len=32, batch_size=3))
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    engq = Engine(fparams, cfg,
+                  ServeConfig(max_len=32, batch_size=3,
+                              numeric_guard="quarantine"))
+    out = engq.serve([dataclasses.replace(r) for r in reqs],
+                     faults=FA.FaultPlan(nan_steps={2: (1,)}))
+    st_ = engq.last_stats
+    assert st_["request_status"]["r1"] == "quarantined"
+    assert np.array_equal(out["r1"], base["r1"][: len(out["r1"])])
+    for uid in ("r0", "r2"):
+        assert np.array_equal(out[uid], base[uid])
+
+
+def test_guard_off_costs_nothing(fparams):
+    """numeric_guard=None runs zero guard checks (the fault-free fast path
+    the <=3% overhead gate protects)."""
+    cfg = _cfg()
+    eng = Engine(fparams, cfg, _paged_scfg())
+    eng.serve(_reqs(cfg, [5, 9]))
+    assert eng.last_stats["guard_checks"] == 0
+    assert eng._finite is None
+
+
+# ---------------------------------------------------------------------------
+# speculation under faults
+# ---------------------------------------------------------------------------
+
+def test_spec_mismatch_clip_keeps_token_parity(fparams):
+    """A forced total draft mismatch (keep clamped to 1) only slows the
+    round — committed tokens are the target's own argmax either way."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9])
+    base = Engine(fparams, cfg, ServeConfig(max_len=48, batch_size=2))
+    b = base.serve([dataclasses.replace(r) for r in reqs])
+    spec = Engine(fparams, cfg,
+                  ServeConfig(max_len=48, batch_size=2, spec_k=2))
+    plan = FA.FaultPlan(spec_mismatch_rounds={0, 1, 2})
+    out = spec.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    assert plan.injected["spec"] >= 1
+    for uid in b:
+        assert np.array_equal(out[uid], b[uid]), uid
+
+
+def test_spec_guard_quarantines_before_commit(fparams):
+    """A non-finite verify pass quarantines its lane BEFORE any of the
+    round's tokens commit — the surviving output is a clean prefix."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9])
+    base = Engine(fparams, cfg, ServeConfig(max_len=48, batch_size=2))
+    b = base.serve([dataclasses.replace(r) for r in reqs])
+    spec = Engine(fparams, cfg,
+                  ServeConfig(max_len=48, batch_size=2, spec_k=2,
+                              numeric_guard="quarantine"))
+    plan = FA.FaultPlan(nan_steps={1: (0,)})
+    out = spec.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = spec.last_stats
+    assert st_["request_status"]["r0"] == "quarantined"
+    assert np.array_equal(out["r0"], b["r0"][: len(out["r0"])])
+    assert st_["request_status"]["r1"] == "ok"
+    assert np.array_equal(out["r1"], b["r1"])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the standard seeded scenario
+# ---------------------------------------------------------------------------
+
+def test_seeded_fault_mix_zero_lost_requests(fparams):
+    """The ISSUE's acceptance scenario: an over-subscribed mix under a
+    seeded plan (pool exhaustion + COW contention + NaN + mid-stream
+    cancel) completes with a status for EVERY request, zero lost requests,
+    bit-exact streams for every non-cancelled/non-quarantined uid, and the
+    invariant checker green after every iteration."""
+    cfg = _cfg()
+    reqs = _reqs(cfg, [5, 9, 7, 6, 8, 10], seed=11)
+    uids = [r.uid for r in reqs]
+    scfg = _paged_scfg(kv_blocks=17, max_active=4,
+                       numeric_guard="quarantine")
+    eng = Engine(fparams, cfg, scfg)
+    base = eng.serve([dataclasses.replace(r) for r in reqs])
+    plan = FA.FaultPlan.seeded(5, uids=uids, n_alloc=2, n_cow=2, n_nan=1,
+                               n_cancel=1, decode_calls=12, alloc_calls=10,
+                               steps=8, lanes=4)
+    out = eng.serve([dataclasses.replace(r) for r in reqs], faults=plan)
+    st_ = eng.last_stats
+    assert st_["completed"] is True
+    status = st_["request_status"]
+    assert set(status) == set(uids)                     # a status for EVERY uid
+    assert all(s in ("ok", "preempted", "cancelled", "deadline",
+                     "quarantined") for s in status.values())
+    assert set(out) == set(uids)                        # zero lost requests
+    assert st_["invariant_checks"] > 0
+    for uid in _ok_uids(st_):                           # bit-exact survivors
+        assert np.array_equal(out[uid], base[uid]), uid
+    for uid in uids:                                    # prefix property even
+        n = len(out[uid])                               # for degraded lanes
+        assert np.array_equal(out[uid], base[uid][:n]), uid
+    FA.check_invariants(eng._last_alloc, out=out, uids=uids)
