@@ -1,0 +1,160 @@
+"""KV-cache quantization benchmark (DESIGN.md §14).
+
+Dense-float vs packed-kv8 serving on the yi smoke model with trained-like
+projection weights:
+
+* decode throughput and KV HBM bytes/token, dense AND paged engines, at
+  two pool context lengths — the headline is the measured bytes ratio
+  (float f32 K/V vs int8 mantissas + one f32 scale per d_head group),
+  which must clear 3x at the 8-bit preset;
+* token parity of the packed engines against the dense float stream on
+  the benchmark requests (the kv8 preset is the token-parity point);
+* eval accuracy through a CACHE-SENSITIVE twin of the harness protocol:
+  ``Engine.score_continuations`` runs one cacheless ``M.forward``, so it
+  cannot see KV quantization at all — here each continuation is scored
+  teacher-forced through prefill + per-token decode steps, reading K/V
+  back from the (float or packed) cache, and the decided-item accuracy
+  (eval.harness gold labels) is compared float-cache vs kv8-cache.
+
+``check_kvq_gate.py`` asserts the headline on the derived string:
+>= 3x KV-bytes reduction on both engines and no eval-accuracy loss.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.eval import harness
+from repro.models import model as M
+from repro.serve.engine import Engine, ServeConfig
+
+from .common import llama_like_model_params
+
+__all__ = ["bench_kvq_serving"]
+
+ARCH = "yi-9b"
+N_ITEMS = 32
+CONTEXTS = (32, 64)
+NEW_TOKENS = 6
+
+
+def _cached_continuation_scores(params, cfg, seqs, plens, kv):
+    """Continuation log-prob sums computed THROUGH the KV cache: prefill
+    the context, then teacher-force the continuation one decode step at a
+    time — every step's attention reads the (possibly packed) cache, so
+    the score moves when the cache representation does."""
+    seqs = [np.asarray(s, np.int64) for s in seqs]
+    lens = np.asarray([len(s) for s in seqs], np.int32)
+    plens = np.asarray(plens, np.int32)
+    B, L = len(seqs), int(lens.max())
+    n_steps = L - int(plens.min())
+    toks = np.zeros((B, L), np.int64)
+    for i, s in enumerate(seqs):
+        toks[i, : lens[i]] = s
+
+    @jax.jit
+    def run(params, toks, plens, slens):
+        logits, cache, pos = M.prefill(
+            params, {"tokens": toks}, cfg, max_len=L, lengths=plens, kv=kv)
+        logp0 = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), -1)
+        first = jnp.take_along_axis(
+            toks, jnp.minimum(plens, slens - 1)[:, None].astype(jnp.int64),
+            axis=1)[:, 0]
+        total = jnp.take_along_axis(logp0, first[:, None], axis=1)[:, 0]
+
+        def body(carry, t):
+            total, cache, pos = carry
+            cur = jnp.take_along_axis(
+                toks, jnp.clip(pos, 0, L - 1)[:, None].astype(jnp.int64),
+                axis=1)
+            lg, cache = M.decode_step(params, {"tokens": cur}, cache, pos, cfg)
+            lp = jax.nn.log_softmax(lg[:, -1].astype(jnp.float32), -1)
+            nxt = jnp.take_along_axis(
+                toks, jnp.clip(pos + 1, 0, L - 1)[:, None].astype(jnp.int64),
+                axis=1)[:, 0]
+            step_lp = jnp.take_along_axis(lp, nxt[:, None], axis=1)[:, 0]
+            live = (pos + 1 < slens)
+            total = total + jnp.where(live, step_lp, 0.0)
+            return (total, cache, pos + 1), None
+
+        (total, _, _), _ = jax.lax.scan(body, (total, cache, pos),
+                                        jnp.arange(n_steps))
+        return total
+
+    return np.asarray(run(params, jnp.asarray(toks), jnp.asarray(plens),
+                          jnp.asarray(lens)))
+
+
+def _cached_accuracy(params, cfg, tasks, golds, kv, batch_items=32):
+    accs = []
+    for task, gold in zip(tasks, golds):
+        seqs, plens = [], []
+        for item in task.items:
+            for s, p in item.sequences():
+                seqs.append(s)
+                plens.append(p)
+        nc = task.n_choices
+        out = np.empty(len(seqs), np.float32)
+        step = max(batch_items, 1) * nc
+        for i in range(0, len(seqs), step):
+            out[i:i + step] = _cached_continuation_scores(
+                params, cfg, seqs[i:i + step], plens[i:i + step], kv)
+        scores = out.reshape(-1, nc)
+        accs.append(float(np.mean(scores.argmax(1) == np.asarray(gold))))
+    return accs
+
+
+def bench_kvq_serving():
+    cfg = smoke_config(ARCH).replace(dtype="float32", remat=False)
+    params = llama_like_model_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(0, cfg.vocab_size, (int(l),))
+            for l in rng.integers(8, 17, 4)]
+
+    def serve(paged, kv, max_len):
+        pg = dict(paged=True, kv_block_size=4) if paged else {}
+        eng = Engine(params, cfg, ServeConfig(
+            batch_size=4, max_len=max_len, prefill_bucket=8, kv_quant=kv,
+            **pg))
+        t0 = time.monotonic()
+        out = eng.serve(reqs, max_new_tokens=NEW_TOKENS)
+        dt = time.monotonic() - t0
+        st = eng.last_stats
+        toks = st["decode_tokens"] / max(st["decode_time_s"], 1e-9)
+        return out, st["kv_bytes_per_token"], toks, dt
+
+    rows = {}
+    for ctx in CONTEXTS:
+        ref, bpt_f, tps_f, _ = serve(False, None, ctx)
+        for paged in (False, True):
+            out, bpt_q, tps_q, _ = serve(paged, "kv8", ctx)
+            parity = int(all(np.array_equal(ref[k], out[k]) for k in ref))
+            key = ("paged" if paged else "dense", ctx)
+            rows[key] = (bpt_f / bpt_q, parity, tps_q)
+    us = 1e6 / max(rows[("dense", CONTEXTS[0])][2], 1e-9)
+
+    # cache-sensitive eval accuracy, float vs packed kv8
+    tasks, golds = harness.decided_tasks(params, cfg, N_ITEMS)
+    acc_f = _cached_accuracy(params, cfg, tasks, golds, kv=None)
+    acc_q = _cached_accuracy(params, cfg, tasks, golds, kv="kv8")
+
+    ratio_dense = min(rows[("dense", c)][0] for c in CONTEXTS)
+    ratio_paged = min(rows[("paged", c)][0] for c in CONTEXTS)
+    parity = int(all(r[1] for r in rows.values()))
+    derived = (
+        f"kv_ratio_dense={ratio_dense:.2f} kv_ratio_paged={ratio_paged:.2f} "
+        f"parity={parity} "
+        f"acc_float={acc_f[0]:.3f}/{acc_f[1]:.3f} "
+        f"acc_kv8={acc_q[0]:.3f}/{acc_q[1]:.3f} "
+        f"tok_s_kv8={rows[('dense', CONTEXTS[0])][2]:.1f} "
+        f"items={len(tasks[0].items)}+{len(tasks[1].items)}")
+    return us, derived
+
+
+if __name__ == "__main__":
+    us, derived = bench_kvq_serving()
+    print(f"serving_kv_quant,{us:.1f},{derived}")

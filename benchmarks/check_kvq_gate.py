@@ -1,0 +1,35 @@
+"""CI gate over BENCH_kvq.json (DESIGN.md §14): the packed KV cache must
+(1) cut measured KV HBM bytes/token by >= 3x at the 8-bit preset on BOTH
+the dense and paged engines, (2) keep token parity with the dense float
+stream on the benchmark requests, and (3) lose NO eval accuracy on the
+cache-sensitive decided-item suite (kv8 accuracy >= float-cache accuracy
+per task).  Usage:
+  python benchmarks/check_kvq_gate.py BENCH_kvq.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "serving_kv_quant")
+    assert "error" not in row, row
+    d = row.get("derived", "")
+    m = re.search(
+        r"kv_ratio_dense=([0-9.]+) kv_ratio_paged=([0-9.]+) parity=(\d) "
+        r"acc_float=([0-9.]+)/([0-9.]+) acc_kv8=([0-9.]+)/([0-9.]+)", d)
+    assert m, d
+    rd, rp, parity, af0, af1, aq0, aq1 = m.groups()
+    assert float(rd) >= 3.0, f"dense KV bytes reduction below 3x: {d}"
+    assert float(rp) >= 3.0, f"paged KV bytes reduction below 3x: {d}"
+    assert parity == "1", f"packed serving lost token parity: {d}"
+    assert float(aq0) >= float(af0) and float(aq1) >= float(af1), (
+        f"kv8 cache lost eval accuracy vs the float cache: {d}")
+    print("KV-quant gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_kvq.json")

@@ -12,8 +12,8 @@ import json
 import sys
 import traceback
 
-from . import (bench_kernels, bench_paged, bench_paper, bench_policy,
-               bench_robustness, bench_serving, bench_spec)
+from . import (bench_kernels, bench_kvq, bench_paged, bench_paper,
+               bench_policy, bench_robustness, bench_serving, bench_spec)
 
 BENCHES = [
     ("fig6_bitwidth_accuracy", bench_paper.bench_fig6_bitwidth_accuracy),
@@ -31,6 +31,7 @@ BENCHES = [
     ("serving_ragged_continuous_batching", bench_serving.bench_serving_ragged),
     ("serving_speculative_decode", bench_spec.bench_spec_decode),
     ("serving_paged_kv", bench_paged.bench_paged_serving),
+    ("serving_kv_quant", bench_kvq.bench_kvq_serving),
     ("serving_robustness", bench_robustness.bench_robustness),
     ("policy_vs_fixed", bench_policy.bench_policy_vs_fixed),
 ]

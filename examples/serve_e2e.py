@@ -20,7 +20,19 @@ run concurrently on the KV HBM budget of --batch dense slots — prefix
 blocks are physically shared (refcount > 1, copy-on-write on divergence)
 and the token streams still match the dense packed engine exactly.
 
-A sixth scenario stress-tests the robustness layer (DESIGN.md §13): the
+A sixth scenario serves the ragged mix with a DSBP-QUANTIZED KV CACHE
+(DESIGN.md §14): K/V quantize at cache-write time into int8 aligned
+mantissas + pow2 group scales (``kv_quant='kv8'``), attention consumes
+the packed blocks without materializing a float cache, and the measured
+``kv_bytes_per_token`` must come in >= 3x below the float cache.  The
+exactness contract is dense-kv8 == paged-kv8 token-for-token (same
+numerics, two schedulers); agreement with the float cache is reported
+like the float-vs-DSBP weight agreement above (kv8 rounding, like
+weight rounding, may legitimately move argmax on random smoke weights —
+the pinned-seed parity suite lives in tests/test_kvq.py and the CI
+gate).
+
+A seventh scenario stress-tests the robustness layer (DESIGN.md §13): the
 same mix plus a long low-priority request on an OVER-SUBSCRIBED block
 pool, under a seeded fault plan (allocator refusals, COW contention, a
 NaN injection, a mid-stream cancel) with ``numeric_guard='quarantine'``.
@@ -162,6 +174,31 @@ def main():
     if not (stp["max_concurrent"] > args.batch
             and stp["shared_blocks_peak"] > 0):
         raise SystemExit("prefix sharing failed to over-subscribe the pool")
+
+    # ---- packed KV cache: quantize at write, serve without dequant ------
+    eng_kvq = Engine(eng_packed.params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, kv_quant="kv8"))
+    eng_kvq_pg = Engine(eng_packed.params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, paged=True, kv_block_size=8,
+        kv_quant="kv8"))
+    out_k, dt_k, _ = _timed_serve(eng_kvq, prompts, args.new_tokens)
+    stk = eng_kvq.last_stats
+    out_kp = eng_kvq_pg.serve(prompts, max_new_tokens=args.new_tokens)
+    stkp = eng_kvq_pg.last_stats
+    kv_exact = all(np.array_equal(out_k[i], out_kp[i]) for i in out_k)
+    kv_agree = np.mean([float((out_p[i] == out_k[i]).mean()) for i in out_p])
+    kv_ratio = st["kv_bytes_per_token"] / stk["kv_bytes_per_token"]
+    print(f"packed KV cache (kv8, DESIGN.md §14): "
+          f"{st['kv_bytes_per_token']:.0f} -> "
+          f"{stk['kv_bytes_per_token']:.0f} KV bytes/token "
+          f"({kv_ratio:.2f}x smaller), packed dense={stk['kv_packed']} "
+          f"paged={stkp['kv_packed']}")
+    print(f"  dense-kv8 == paged-kv8 (token-for-token): {kv_exact}")
+    print(f"  float-cache vs kv8-cache token agreement: {kv_agree*100:.1f}%")
+    if not kv_exact:
+        raise SystemExit("paged packed-KV serving diverged from dense")
+    if not (stk["kv_packed"] and stkp["kv_packed"] and kv_ratio >= 3.0):
+        raise SystemExit("packed KV cache saved fewer than 3x bytes/token")
 
     # ---- robustness: seeded faults on an over-subscribed paged pool -----
     mix = [Request(uid=f"r{i}",

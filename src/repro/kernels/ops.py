@@ -42,7 +42,9 @@ __all__ = [
     "dsbp_matmul_fused_ste",
     "fp8_quant_align",
     "flash_attention",
+    "packed_flash_attention",
     "count_weight_transposes",
+    "count_kv_dequants",
 ]
 
 
@@ -346,3 +348,78 @@ def flash_attention(q, k, v, *, causal=True, window=None, interpret=None,
     f = jax.vmap(jax.vmap(one, in_axes=(0, None, None)), in_axes=(0, 0, 0))
     out = jax.vmap(f, in_axes=(0, 0, 0))(qg, k, v)
     return out.reshape(b, hq, sq, d)
+
+
+def packed_flash_attention(q, k, v, *, causal=True, window=None,
+                           interpret=None, bq=128, bkv=128):
+    """GQA flash attention over a PACKED KV cache (DESIGN.md §14).
+
+    ``q``: (B, Hq, Sq, D); ``k``/``v``: :class:`repro.kvq.PackedKVBlock`
+    with qm (B, Hkv, S, D) int8 and scale (B, Hkv, S, 1) f32.  The kernel
+    consumes mantissas + scales directly — the int8 widening and the pow2
+    scale folds happen in VMEM, so the traced computation contains ZERO
+    int8->float converts outside the pallas_call
+    (:func:`count_kv_dequants` == 0) and the KV HBM traffic is the packed
+    bytes.  Bit-identical to :func:`flash_attention` over
+    ``k.dequantize()``/``v.dequantize()`` (tests/test_kvq.py)."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, sq, d = q.shape
+    hkv = k.qm.shape[1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, sq, d)
+
+    def one(qh, kqm, ks, vqm, vs):
+        return _fa.packed_flash_attention_kernel_call(
+            qh, kqm, ks, vqm, vs, causal=causal, window=window, bq=bq,
+            bkv=bkv, interpret=interpret,
+        )
+
+    f = jax.vmap(jax.vmap(one, in_axes=(0, None, None, None, None)),
+                 in_axes=(0, 0, 0, 0, 0))
+    out = jax.vmap(f, in_axes=(0, 0, 0, 0, 0))(
+        qg, k.qm, k.scale, v.qm, v.scale)
+    return out.reshape(b, hq, sq, d)
+
+
+def count_kv_dequants(fn, *args, min_size: int) -> int:
+    """int8 -> float ``convert_element_type`` primitives over arrays of
+    >= min_size elements in ``fn``'s traced computation, NOT counting the
+    bodies of pallas_call kernels.
+
+    This is the checkable form of the dequantize-free KV contract
+    (DESIGN.md §14): a packed attention step must never materialize a
+    KV-sized float copy of the cache in HBM — the widening belongs INSIDE
+    the kernel, on the VMEM block the DMA just landed, which is exactly
+    why pallas_call bodies are excluded.  The dequantize-oracle path
+    (``PackedKVBlock.dequantize`` then float attention) counts >= 1 here;
+    the packed kernel path counts 0 (asserted in tests/test_kvq.py).
+    """
+    from jax.extend.core import ClosedJaxpr, Jaxpr
+
+    stack = [jax.make_jaxpr(fn)(*args).jaxpr]
+    count = 0
+
+    def push(v):
+        if isinstance(v, ClosedJaxpr):
+            stack.append(v.jaxpr)
+        elif isinstance(v, Jaxpr):
+            stack.append(v)
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                push(item)
+
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue  # in-VMEM widening inside the kernel is the point
+            if (eqn.primitive.name == "convert_element_type"
+                    and eqn.invars[0].aval.dtype == jnp.int8
+                    and jnp.issubdtype(eqn.outvars[0].aval.dtype,
+                                       jnp.floating)
+                    and eqn.invars[0].aval.size >= min_size):
+                count += 1
+            for p in eqn.params.values():
+                push(p)
+    return count

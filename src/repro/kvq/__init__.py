@@ -1,0 +1,29 @@
+"""DSBP-quantized KV cache subsystem (DESIGN.md §14).
+
+Mirrors what ``core/packed.py`` did for weights: :class:`PackedKVBlock`
+makes the quantized KV cache a first-class pytree representation — int8
+aligned mantissas + per-(token, head) power-of-two group scales — written
+at cache-write time and consumed without a dequantization pass.
+"""
+from .packed_kv import (KV_MAX_BITS, KV_MIN_BITS, KV_PRESETS, KVQuantConfig,
+                        PackedKVBlock, init_packed_kv, is_kv_leaf_path,
+                        kv_cache_nbytes, kv_narrow_view, kv_policy_cfg,
+                        quantize_kv, quantize_like, resolve_kv_spec,
+                        tree_has_packed_kv)
+
+__all__ = [
+    "KVQuantConfig",
+    "KV_MAX_BITS",
+    "KV_MIN_BITS",
+    "KV_PRESETS",
+    "PackedKVBlock",
+    "init_packed_kv",
+    "is_kv_leaf_path",
+    "kv_cache_nbytes",
+    "kv_narrow_view",
+    "kv_policy_cfg",
+    "quantize_kv",
+    "quantize_like",
+    "resolve_kv_spec",
+    "tree_has_packed_kv",
+]

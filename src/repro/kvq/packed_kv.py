@@ -1,0 +1,310 @@
+"""Packed DSBP KV-cache representation (DESIGN.md §14).
+
+The weight path quantizes offline into :class:`~repro.core.packed.
+PackedDSBPWeight`; the KV cache is the on-the-fly twin: K/V vectors are
+quantized **at cache-write time** with the paper's aligned-mantissa
+machinery and stored as
+
+  qm     int8  (..., S, D)   aligned mantissas, sign applied — same axes
+                             as the float leaf they replace (dense caches
+                             (B, Hkv, S_c, D), paged pools (NB, Hkv, bs, D),
+                             stacked unit caches with a leading R axis)
+  scale  f32   (..., S, 1)   per-(token, head) power-of-two group scale
+
+with static metadata ``(bits, fmt)``.  The quantization group is the whole
+``d_head`` vector of one token in one KV head (the attention GEMMs reduce
+over exactly that axis), so ``n_g = 1`` and the group scale collapses to a
+single trailing-1 column — every mask / gather / scatter index in the
+cache write paths broadcasts over BOTH children unchanged, which is what
+lets ``models/blocks.py`` treat a cache leaf as an opaque pytree.
+
+``bits`` counts the TOTAL aligned width (sign + magnitude), so the widest
+preset ``bits=8`` stores 7 magnitude bits + sign — exactly int8, mirroring
+the macro's widest weight width.  The group scale is
+``2**(E_max - (B-1)) / tscale`` with both factors powers of two, so folding
+it into the attention GEMMs after the integer contraction is EXACT (the
+same argument as DESIGN.md §8): packed-compute equals
+dequantize-then-compute bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import GetAttrKey
+
+from repro.core.dsbp import MAX_SHIFT, align_group, group_shifts
+from repro.core.formats import decompose, exp2i, get_format, per_tensor_scale
+from repro.core.packed import key_entry_str
+
+__all__ = [
+    "KVQuantConfig",
+    "KV_PRESETS",
+    "PackedKVBlock",
+    "init_packed_kv",
+    "is_kv_leaf_path",
+    "kv_cache_nbytes",
+    "kv_narrow_view",
+    "kv_policy_cfg",
+    "quantize_kv",
+    "quantize_like",
+    "resolve_kv_spec",
+    "tree_has_packed_kv",
+]
+
+# int8 storage: 1 sign bit + up to 7 magnitude bits.
+KV_MIN_BITS, KV_MAX_BITS = 2, 8
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantConfig:
+    """One KV-cache quantization spec (static aux data of the containers).
+
+    ``bits``: total aligned width incl. the sign bit, in [2, 8] (int8
+    storage).  ``fmt``: the FP decompose format whose exponent/mantissa
+    fields feed the alignment — ``e5m7`` (the macro's widest input
+    decompose) keeps the most mantissa before alignment and is the basis of
+    the token-parity preset.
+    """
+
+    bits: int = 8
+    fmt: str = "e5m7"
+
+    def __post_init__(self):
+        if not KV_MIN_BITS <= int(self.bits) <= KV_MAX_BITS:
+            raise ValueError(
+                f"kv bits must be in [{KV_MIN_BITS}, {KV_MAX_BITS}] "
+                f"(sign + 1..7 aligned magnitude bits, int8 storage); "
+                f"got {self.bits}")
+        get_format(self.fmt)  # raises on unknown format names
+
+
+KV_PRESETS: dict[str, KVQuantConfig] = {
+    # full-width: 7 magnitude bits + sign = exactly int8 (token parity)
+    "kv8": KVQuantConfig(bits=8, fmt="e5m7"),
+    "kv6": KVQuantConfig(bits=6, fmt="e5m7"),
+    "kv4": KVQuantConfig(bits=4, fmt="e4m3"),
+}
+
+
+def resolve_kv_spec(spec):
+    """Normalize a user-facing KV-quant spec to a :class:`KVQuantConfig`.
+
+    Accepts None (float cache), a preset name from :data:`KV_PRESETS`, an
+    int bitwidth, or an existing config.  Raises ``ValueError`` with the
+    valid domain spelled out (the serve launcher surfaces these verbatim).
+    """
+    if spec is None or isinstance(spec, KVQuantConfig):
+        return spec
+    if isinstance(spec, bool):
+        return KV_PRESETS["kv8"] if spec else None
+    if isinstance(spec, int):
+        return KVQuantConfig(bits=spec)
+    if isinstance(spec, str):
+        if spec in KV_PRESETS:
+            return KV_PRESETS[spec]
+        raise ValueError(
+            f"unknown kv_quant preset {spec!r}; valid presets: "
+            f"{sorted(KV_PRESETS)} (or an int bitwidth in "
+            f"[{KV_MIN_BITS}, {KV_MAX_BITS}])")
+    raise TypeError(f"kv_quant spec must be None, str, int or KVQuantConfig; "
+                    f"got {type(spec).__name__}")
+
+
+def kv_policy_cfg(kv, name: str):
+    """Per-cache-entry config: ``kv`` is a single spec applied everywhere,
+    or a mapping of cache-entry names (``units.{i}`` / ``tail.{i}``, plus a
+    ``default``) to specs — the shape :class:`repro.policy.policy.
+    DSBPPolicy` emits as ``kv_layers``/``kv_default``."""
+    if kv is None:
+        return None
+    if isinstance(kv, Mapping):
+        return resolve_kv_spec(kv.get(name, kv.get("default")))
+    return resolve_kv_spec(kv)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class PackedKVBlock:
+    """Quantized KV-cache leaf: aligned int8 mantissas + pow2 group scales.
+
+    A pytree node, so it flows through ``jax.jit`` / ``lax.scan`` (stacked
+    unit caches) / ``jax.vmap`` (per-unit fills) / donated buffers /
+    sharding constraints exactly like the float array it replaces.  The
+    children share every leading axis (``scale`` ends in 1 where ``qm``
+    ends in D), so cache write paths ``jax.tree.map`` one masked gather /
+    scatter over both.
+    """
+
+    __slots__ = ("qm", "scale", "bits", "fmt")
+
+    def __init__(self, qm, scale, *, bits: int, fmt: str):
+        self.qm = qm
+        self.scale = scale
+        self.bits = bits
+        self.fmt = fmt
+
+    # ---- pytree protocol ----
+
+    def tree_flatten_with_keys(self):
+        children = [(GetAttrKey("qm"), self.qm), (GetAttrKey("scale"), self.scale)]
+        return children, (self.bits, self.fmt)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        qm, scale = children
+        return cls(qm, scale, bits=aux[0], fmt=aux[1])
+
+    # ---- array-like surface the cache write/read paths use ----
+
+    @property
+    def shape(self):
+        return getattr(self.qm, "shape", ())
+
+    @property
+    def ndim(self):
+        return getattr(self.qm, "ndim", 0)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize for l in (self.qm, self.scale))
+
+    @property
+    def cfg(self) -> KVQuantConfig:
+        return KVQuantConfig(bits=self.bits, fmt=self.fmt)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Dense float view — reference path only; the serving attention
+        folds ``scale`` into its GEMMs instead (bit-identical)."""
+        return self.qm.astype(dtype) * self.scale.astype(dtype)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"PackedKVBlock(bits={self.bits}, fmt={self.fmt!r}, "
+                f"qm={getattr(self.qm, 'shape', None)})")
+
+
+def init_packed_kv(shape, cfg: KVQuantConfig) -> PackedKVBlock:
+    """Zero-initialized packed cache leaf for a float leaf of ``shape``
+    (..., S, D).  Zero scales dequantize to exact zeros, matching the float
+    cache's zero init; consumers mask unwritten slots anyway."""
+    return PackedKVBlock(
+        jnp.zeros(shape, jnp.int8),
+        jnp.zeros((*shape[:-1], 1), jnp.float32),
+        bits=cfg.bits, fmt=cfg.fmt)
+
+
+def quantize_kv(x: jax.Array, cfg: KVQuantConfig) -> PackedKVBlock:
+    """Quantize fresh K/V ``x (..., D)`` at cache-write time.
+
+    The DSBP input pipeline with the group = the whole head vector: FP
+    decompose under a per-tensor pow2 scale, per-(token, head) max-exponent
+    shifts, then alignment to ``bits-1`` magnitude bits sharing the group
+    scale ``2**(E_max-(B-1))``.  The stored scale folds the tensor scale
+    back in (a pow2 quotient — exact), so ``qm * scale`` approximates ``x``
+    with per-element error <= 2**(e_max - (bits-1)) and no global scale
+    state survives the write.
+    """
+    f = get_format(cfg.fmt)
+    b_mag = cfg.bits - 1
+    tscale = per_tensor_scale(x, f)
+    fields = decompose(x.astype(jnp.float32) * tscale, f)
+    # group axis = the whole trailing D: insert n_g = 1
+    sign = fields["sign"][..., None, :]
+    e_unb = fields["e_unb"][..., None, :]
+    m_int = fields["m_int"][..., None, :]
+    shift, e_max, _ = group_shifts(e_unb, m_int)
+    b_arr = jnp.full(e_max.shape, b_mag, jnp.int32)
+    a, scale = align_group(sign, e_unb, m_int, f.mbits, shift, e_max, b_arr)
+    return PackedKVBlock(
+        a[..., 0, :].astype(jnp.int8),
+        (scale / tscale).astype(jnp.float32),  # (..., 1): pow2/pow2, exact
+        bits=cfg.bits, fmt=cfg.fmt)
+
+
+def quantize_like(cache_leaf, fresh):
+    """Quantize fresh K/V to match a cache leaf's representation.
+
+    THE write-path contract: every cache write (`fill_kv_cache`,
+    `write_kv_blocks`, decode slot-set, verify) calls this first, then
+    ``jax.tree.map``s its masked write over (cache_leaf, result) — one code
+    path for float and packed caches.  Float leaf -> dtype cast (the old
+    behavior); packed leaf -> :func:`quantize_kv` at the leaf's spec;
+    already-packed fresh values (a spec round's deferred steps) pass
+    through untouched so commit == the verify pass's exact quantization.
+    """
+    if isinstance(cache_leaf, PackedKVBlock):
+        if isinstance(fresh, PackedKVBlock):
+            if (fresh.bits, fresh.fmt) != (cache_leaf.bits, cache_leaf.fmt):
+                raise ValueError(
+                    f"packed KV spec mismatch: cache ({cache_leaf.bits}b, "
+                    f"{cache_leaf.fmt}) vs fresh ({fresh.bits}b, {fresh.fmt})")
+            return fresh
+        return quantize_kv(fresh, cache_leaf.cfg)
+    if isinstance(fresh, PackedKVBlock):  # pragma: no cover - misuse guard
+        raise TypeError("packed K/V written into a float cache leaf")
+    return fresh.astype(cache_leaf.dtype)
+
+
+def kv_narrow_view(tree, draft_bits: int):
+    """Narrow-KV draft view: every :class:`PackedKVBlock` leaf of ``tree``
+    keeps only the top ``draft_bits - 1`` magnitude bits (DESIGN.md §10's
+    MSB-slice idea applied to the cache).
+
+    Per leaf, ``qm >> s`` with ``s = bits - draft_bits`` (arithmetic shift
+    == floor division for the 2's-complement mantissas) and
+    ``scale * 2**s`` — the rescale is EXACT (pow2 times pow2), so the only
+    approximation is the dropped mantissa tail, and ``draft_bits == bits``
+    returns the container's exact numerics.  Cheap elementwise int8/f32
+    ops: callers trace it INSIDE the jitted draft step, the view lives in
+    temporaries and never doubles the KV HBM.  Float leaves (recurrent
+    state, unquantized caches) pass through untouched.
+    """
+    if not KV_MIN_BITS <= int(draft_bits) <= KV_MAX_BITS:
+        raise ValueError(
+            f"kv draft bits must be in [{KV_MIN_BITS}, {KV_MAX_BITS}], "
+            f"got {draft_bits}")
+
+    def narrow(leaf):
+        if not isinstance(leaf, PackedKVBlock):
+            return leaf
+        s = max(int(leaf.bits) - int(draft_bits), 0)
+        if s == 0:
+            return leaf
+        return PackedKVBlock(
+            jnp.right_shift(leaf.qm, jnp.int8(s)),
+            leaf.scale * exp2i(jnp.int32(s)),
+            bits=int(draft_bits), fmt=leaf.fmt)
+
+    return jax.tree.map(narrow, tree,
+                        is_leaf=lambda x: isinstance(x, PackedKVBlock))
+
+
+def is_kv_leaf_path(path) -> bool:
+    """True for the pytree key-path of a KV-cache array leaf — a float
+    ``k``/``v`` leaf, or a ``qm``/``scale`` child of a packed one.  THE
+    shared name dispatch for the engine's cache insert, the block-pool
+    copies, byte accounting, and the mesh cache pspecs."""
+    names = [key_entry_str(p) for p in path]
+    if not names:
+        return False
+    if names[-1] in ("k", "v"):
+        return True
+    return (names[-1] in ("qm", "scale") and len(names) >= 2
+            and names[-2] in ("k", "v"))
+
+
+def kv_cache_nbytes(cache) -> int:
+    """HBM bytes of the KV leaves of a cache tree, from the ACTUAL leaf
+    dtypes (int8 mantissas + f32 scales for packed pools) — recurrent
+    state and any non-KV leaves excluded."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if is_kv_leaf_path(path):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def tree_has_packed_kv(tree) -> bool:
+    is_pk = lambda x: isinstance(x, PackedKVBlock)
+    return any(is_pk(l) for l in jax.tree.leaves(tree, is_leaf=is_pk))

@@ -89,6 +89,20 @@ def main():
                          "0): higher admits first and, on the paged "
                          "scheduler, preempts strictly-lower lanes under "
                          "pool pressure (implies --ragged)")
+    ap.add_argument("--kv-quant", default=None,
+                    help="DSBP-quantized KV cache (DESIGN.md §14): a "
+                         "KV_PRESETS name ('kv8' is the token-parity "
+                         "8-bit preset, 'kv6'/'kv4' trade accuracy for "
+                         "bytes); K/V quantize at cache-write time into "
+                         "int8 aligned mantissas + pow2 group scales")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="uniform KV bitwidth shorthand in [2, 8] "
+                         "(alternative to --kv-quant; set one, not both)")
+    ap.add_argument("--kv-draft-bits", type=int, default=None,
+                    help="with --spec-k and a packed KV cache: draft over "
+                         "an MSB-slice view of the cached mantissas at "
+                         "this width (served tokens unchanged; only "
+                         "acceptance can move)")
     ap.add_argument("--numeric-guard", default=None,
                     choices=["off", "fail-fast", "quarantine-lane",
                              "fallback"],
@@ -125,7 +139,20 @@ def main():
         per_device_batch_size=args.per_device_batch,
         paged=args.paged, kv_block_size=args.kv_block_size,
         kv_blocks=args.kv_blocks, max_active=args.max_active,
+        kv_quant=args.kv_quant, kv_bits=args.kv_bits,
+        kv_draft_bits=args.kv_draft_bits,
         numeric_guard=args.numeric_guard))
+    if eng.kv_spec is not None:
+        # pool-size report from the ACTUAL cache leaf dtypes (int8
+        # mantissas + f32 scales), not the float layout it replaces
+        from repro.kvq import kv_cache_nbytes
+
+        pool = M.init_cache(cfg, args.batch, max_len)
+        packed_pool = M.init_cache(cfg, args.batch, max_len, kv=eng.kv_spec)
+        fb, qb = kv_cache_nbytes(pool), kv_cache_nbytes(packed_pool)
+        print(f"packed KV cache ({eng.kv_spec}): {fb/1e6:.2f} -> "
+              f"{qb/1e6:.2f} MB for {args.batch} x {max_len} slots "
+              f"({fb/max(qb, 1):.2f}x)")
     if args.paged:
         print(f"paged KV: {eng.kv_blocks} blocks x {args.kv_block_size} "
               f"slots, {eng.lanes} lanes, table width {eng._table_width}")
@@ -155,7 +182,9 @@ def main():
         print(f"served {st['requests']} ragged requests (lens {lens.tolist()}) "
               f"in {dt:.2f}s ({tps:.1f} tok/s, "
               f"occupancy {st['occupancy']*100:.0f}%, "
-              f"{st['decode_steps']} pool steps)")
+              f"{st['decode_steps']} pool steps, "
+              f"{st['kv_bytes_per_token']:.0f} KV B/token"
+              f"{' packed' if st['kv_packed'] else ''})")
         if args.spec_k:
             per_slot = ("" if args.paged else
                         f", per-slot "

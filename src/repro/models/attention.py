@@ -17,10 +17,50 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kvq import PackedKVBlock
+
 __all__ = ["blockwise_attention", "decode_attention", "verify_attention",
-           "gather_kv_view"]
+           "gather_kv_view", "qk_logits", "pv_out"]
 
 NEG_INF = -1e30
+
+
+def _scale_row(kv: PackedKVBlock, ndim: int) -> jax.Array:
+    """The per-(token, head) pow2 group scale as a (B, Hkv, 1..., S) factor
+    broadcastable against an ndim-dimensional logits/probs tensor whose last
+    axis is the key axis."""
+    s = kv.scale[..., 0]  # (B, Hkv, S)
+    return s.reshape(s.shape[0], s.shape[1], *([1] * (ndim - 3)), s.shape[2])
+
+
+def qk_logits(eq: str, qg: jax.Array, kv) -> jax.Array:
+    """QK^T logits with a possibly-packed K operand (DESIGN.md §14).
+
+    Packed K folds its group scale AFTER the dot: the scale is constant
+    along the reduced D axis, and multiplying the f32 dot result by a power
+    of two is exact, so this equals dequantize-then-dot bit for bit.  The
+    float path is byte-identical to the pre-packed code (einsum in the
+    operand dtype, then cast).
+    """
+    if isinstance(kv, PackedKVBlock):
+        lg = jnp.einsum(eq, qg.astype(jnp.float32),
+                        kv.qm.astype(jnp.float32))
+        return lg * _scale_row(kv, lg.ndim)
+    return jnp.einsum(eq, qg, kv).astype(jnp.float32)
+
+
+def pv_out(eq: str, p: jax.Array, kv) -> jax.Array:
+    """P·V with a possibly-packed V operand (DESIGN.md §14).
+
+    Packed V folds its group scale INTO the probabilities: the scale varies
+    along the reduced key axis, so it must scale each term — and because a
+    pow2 multiply of each f32 product is exact and the summation order is
+    unchanged, this equals dequantize-then-dot bit for bit.
+    """
+    if isinstance(kv, PackedKVBlock):
+        return jnp.einsum(eq, p * _scale_row(kv, p.ndim),
+                          kv.qm.astype(jnp.float32))
+    return jnp.einsum(eq, p, kv.astype(jnp.float32))
 
 
 def gather_kv_view(pool: jax.Array, table: jax.Array, s_c: int) -> jax.Array:
@@ -164,15 +204,15 @@ def verify_attention(
     if window:
         valid_old &= p_old[:, None, :] > qpos[:, :, None] - window
         valid_new = valid_new & (j[None, None, :] > j[None, :, None] - window)
-    lg_old = jnp.einsum("bhrtd,bhkd->bhrtk", qg, k_cache).astype(jnp.float32)
-    lg_new = jnp.einsum("bhrtd,bhkd->bhrtk", qg, k_new).astype(jnp.float32)
+    lg_old = qk_logits("bhrtd,bhkd->bhrtk", qg, k_cache)
+    lg_new = qk_logits("bhrtd,bhkd->bhrtk", qg, k_new)
     lg_old = jnp.where(valid_old[:, None, None], lg_old, NEG_INF)
     lg_new = jnp.where(
         jnp.broadcast_to(valid_new, (b, t, t))[:, None, None], lg_new, NEG_INF
     )
     p = jax.nn.softmax(jnp.concatenate([lg_old, lg_new], axis=-1), axis=-1)
-    out = jnp.einsum("bhrtk,bhkd->bhrtd", p[..., :s], v_cache.astype(jnp.float32))
-    out += jnp.einsum("bhrtk,bhkd->bhrtd", p[..., s:], v_new.astype(jnp.float32))
+    out = pv_out("bhrtk,bhkd->bhrtd", p[..., :s], v_cache)
+    out += pv_out("bhrtk,bhkd->bhrtd", p[..., s:], v_new)
     return out.reshape(b, hq, t, d).astype(q.dtype)
 
 
@@ -188,7 +228,7 @@ def decode_attention(
     hkv, s = k_cache.shape[1], k_cache.shape[2]
     rep = hq // hkv
     qg = (q * d**-0.5).reshape(b, hkv, rep, d)
-    logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
+    logits = qk_logits("bhrd,bhkd->bhrk", qg, k_cache)
     kpos = jnp.arange(s)
     pos = jnp.asarray(pos)
     posb = jnp.broadcast_to(pos, (b,))  # ragged slots advance independently
@@ -197,5 +237,5 @@ def decode_attention(
         valid &= kpos[None, :] >= (posb - window)[:, None]
     logits = jnp.where(valid[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
+    out = pv_out("bhrk,bhkd->bhrd", p, v_cache)
     return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -7,13 +7,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kvq import init_packed_kv, quantize_like
 from repro.parallel.context import anchor_batch, gather_unit_params
 
 from . import moe as moe_mod
 from . import recurrent as rec
 from . import ssd as ssd_mod
 from .attention import (blockwise_attention, decode_attention, gather_kv_view,
-                        verify_attention)
+                        pv_out, qk_logits, verify_attention)
 from .layers import Quant, dense, init_dense, init_norm, rms_norm, rope
 
 __all__ = [
@@ -170,11 +171,19 @@ def cache_len(cfg, kind, max_len: int) -> int:
     return max_len
 
 
-def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype):
+def _kv_entry(shp, dtype, kv):
+    """One {'k','v'} cache container: float arrays, or packed DSBP blocks
+    when a resolved ``kv`` spec (:class:`repro.kvq.KVQuantConfig`) is set."""
+    if kv is not None:
+        return {"k": init_packed_kv(shp, kv), "v": init_packed_kv(shp, kv)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype, kv=None):
     if kind in ("attn_full", "attn_local"):
         s = cache_len(cfg, kind, max_len)
         shp = (batch, cfg.n_kv_heads, s, cfg.d_head)
-        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        return _kv_entry(shp, dtype, kv)
     if kind == "rglru":
         return rec.init_rglru_state(batch, cfg, dtype)
     if kind == "ssd":
@@ -183,14 +192,14 @@ def init_layer_cache(cfg, kind, batch: int, max_len: int, dtype):
 
 
 def init_layer_cache_paged(cfg, kind, batch: int, num_blocks: int,
-                           block_size: int, dtype):
+                           block_size: int, dtype, kv=None):
     """Paged twin of :func:`init_layer_cache`: attention layers store K/V
     in a shared physical block pool (NB, Hkv, bs, D) — no batch axis; lanes
     address it through per-request block tables.  Recurrent kinds keep
     their dense per-lane state (nothing pageable about an O(1) state)."""
     if kind in ("attn_full", "attn_local"):
         shp = (num_blocks, cfg.n_kv_heads, block_size, cfg.d_head)
-        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        return _kv_entry(shp, dtype, kv)
     return init_layer_cache(cfg, kind, batch, 1, dtype)
 
 
@@ -222,9 +231,18 @@ def fill_kv_cache(cache, k, v, lengths):
     src, ok = _fill_slot_sources(lengths, b, s)
     ok = ok[:, None, :, None]
     idx = jnp.clip(src, 0, l - 1)[:, None, :, None]   # (B, 1, S_c, 1)
-    ck = jnp.take_along_axis(k, idx, axis=2).astype(cache["k"].dtype)
-    cv = jnp.take_along_axis(v, idx, axis=2).astype(cache["v"].dtype)
-    return {"k": jnp.where(ok, ck, cache["k"]), "v": jnp.where(ok, cv, cache["v"])}
+
+    def wr(entry, fresh):
+        # quantize ONCE at the write (repro.kvq write-path contract), then
+        # one masked slot-gather per leaf — idx/ok broadcast over both the
+        # mantissa (.., D) and scale (.., 1) trailing widths.
+        fresh = quantize_like(entry, fresh)
+        return jax.tree.map(
+            lambda cl, fl: jnp.where(
+                ok, jnp.take_along_axis(fl, idx, axis=2).astype(cl.dtype), cl),
+            entry, fresh)
+
+    return {"k": wr(cache["k"], k), "v": wr(cache["v"], v)}
 
 
 def _scatter_pool(pool_leaf, table, slots, vals, mask):
@@ -269,10 +287,17 @@ def write_kv_blocks(pool, table, k, v, pos, write_len, s_c: int,
     if write_start is not None:
         mask &= abs_pos >= jnp.asarray(write_start, jnp.int32)[:, None]
     slots = abs_pos % s_c
-    return {
-        "k": _scatter_pool(pool["k"], table, slots, k.transpose(0, 2, 1, 3), mask),
-        "v": _scatter_pool(pool["v"], table, slots, v.transpose(0, 2, 1, 3), mask),
-    }
+
+    def wr(entry, fresh):
+        # fresh may already be packed (spec commit-on-accept replays the
+        # verify pass's exact quantization) — quantize_like passes it through.
+        fresh = quantize_like(entry, fresh)
+        return jax.tree.map(
+            lambda pl, fl: _scatter_pool(pl, table, slots,
+                                         fl.transpose(0, 2, 1, 3), mask),
+            entry, fresh)
+
+    return {"k": wr(pool["k"], k), "v": wr(pool["v"], v)}
 
 
 def fill_kv_cache_paged(pool, table, k, v, lengths, s_c: int,
@@ -289,16 +314,32 @@ def fill_kv_cache_paged(pool, table, k, v, lengths, s_c: int,
     if write_start is not None:  # shared-prefix positions stay unwritten
         ok &= src >= jnp.asarray(write_start, jnp.int32)[:, None]
     idx = jnp.clip(src, 0, l - 1)[:, None, :, None]
-    ck = jnp.take_along_axis(k, idx, axis=2)      # (B, H, S_c, D)
-    cv = jnp.take_along_axis(v, idx, axis=2)
     slots = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
-    return {
-        "k": _scatter_pool(pool["k"], table, slots, ck.transpose(0, 2, 1, 3), ok),
-        "v": _scatter_pool(pool["v"], table, slots, cv.transpose(0, 2, 1, 3), ok),
-    }
+
+    def wr(entry, fresh):
+        # quantize BEFORE the slot gather: quantization is per-(token, head)
+        # independent, so gather-then-quantize == quantize-then-gather and
+        # the written content is exactly what the dense fill writes.
+        fresh = quantize_like(entry, fresh)
+        return jax.tree.map(
+            lambda pl, fl: _scatter_pool(
+                pl, table, slots,
+                jnp.take_along_axis(fl, idx, axis=2).transpose(0, 2, 1, 3),
+                ok),
+            entry, fresh)
+
+    return {"k": wr(pool["k"], k), "v": wr(pool["v"], v)}
 
 
 # ---------------- decode ----------------
+
+def _gather_kv_entry(pool_entry, table, s_c: int):
+    """Per-leaf :func:`gather_kv_view`: a packed pool entry gathers its
+    mantissa and scale children through the same block table (the gather
+    body only reads the shared leading axes), returning a dense per-lane
+    :class:`~repro.kvq.PackedKVBlock` view for the attention math."""
+    return jax.tree.map(lambda a: gather_kv_view(a, table, s_c), pool_entry)
+
 
 def _attn_decode(params, x, cfg, kind, quant, cache, pos):
     """x: (B, 1, d); cache k/v: (B, Hkv, S_c, D); pos: () or (B,) int32
@@ -311,8 +352,18 @@ def _attn_decode(params, x, cfg, kind, quant, cache, pos):
     s_c = cache["k"].shape[2]
     slot = posb % s_c  # (B,) per-slot ring position
     bidx = jnp.arange(b)
-    ck = cache["k"].at[bidx, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+
+    def wr(entry, fresh):
+        # quantize the fresh token at the write (repro.kvq contract); the
+        # slot-set broadcasts over both mantissa and scale trailing widths.
+        fresh = quantize_like(entry, fresh)
+        return jax.tree.map(
+            lambda cl, fl: cl.at[bidx, :, slot].set(
+                fl[:, :, 0].astype(cl.dtype)),
+            entry, fresh)
+
+    ck = wr(cache["k"], k)
+    cv = wr(cache["v"], v)
     if kind == "attn_local" and cfg.window and s_c < 2**31:
         # ring cache: entry r holds absolute position p_r = pos - ((pos - r) mod S_c)
         r = jnp.arange(s_c)
@@ -331,10 +382,10 @@ def _ring_decode_attention(q, k_cache, v_cache, valid):
     hkv, s = k_cache.shape[1], k_cache.shape[2]
     rep = hq // hkv
     qg = (q * d**-0.5).reshape(b, hkv, rep, d)
-    logits = jnp.einsum("bhrd,bhkd->bhrk", qg, k_cache).astype(jnp.float32)
+    logits = qk_logits("bhrd,bhkd->bhrk", qg, k_cache)
     logits = jnp.where(valid[:, None, None], logits, -1e30)  # valid: (B, S_c)
     p = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bhrk,bhkd->bhrd", p, v_cache.astype(jnp.float32))
+    o = pv_out("bhrk,bhkd->bhrd", p, v_cache)
     return o.reshape(b, hq, 1, d).astype(q.dtype)
 
 
@@ -351,8 +402,8 @@ def _attn_decode_paged(params, x, cfg, kind, quant, pool, table, posb,
     y = rms_norm(params["norm1"], x, cfg.norm_eps)
     q, k, v = _qkv(params["attn"], y, cfg, quant, posb[:, None])
     pool = write_kv_blocks(pool, table, k, v, posb, write_len, s_c)
-    ck = gather_kv_view(pool["k"], table, s_c)
-    cv = gather_kv_view(pool["v"], table, s_c)
+    ck = _gather_kv_entry(pool["k"], table, s_c)
+    cv = _gather_kv_entry(pool["v"], table, s_c)
     if kind == "attn_local" and cfg.window and s_c < 2**31:
         r = jnp.arange(s_c)
         p_r = posb[:, None] - ((posb[:, None] - r[None, :]) % s_c)  # (B, S_c)
@@ -375,17 +426,25 @@ def _attn_verify(params, x, cfg, kind, quant, cache, posb):
     y = rms_norm(params["norm1"], x, cfg.norm_eps)
     q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
     window = cfg.window if kind == "attn_local" else 0
-    o = verify_attention(q, k, v, cache["k"], cache["v"], posb, window=window)
+    # quantize-first: the fresh K/V attend in their CACHED representation,
+    # so a T-token verify equals T chained decode steps token for token
+    # (each decode step also attends its own just-quantized entry).
+    kq = quantize_like(cache["k"], k)
+    vq = quantize_like(cache["v"], v)
+    o = verify_attention(q, kq, vq, cache["k"], cache["v"], posb, window=window)
     o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
     x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
     s_c = cache["k"].shape[2]
     slots = positions % s_c  # distinct while T <= S_c (engine contract)
     bidx = jnp.arange(b)[:, None]
-    ck = cache["k"].at[bidx, :, slots].set(
-        k.transpose(0, 2, 1, 3).astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, :, slots].set(
-        v.transpose(0, 2, 1, 3).astype(cache["v"].dtype))
-    return x, {"k": ck, "v": cv}
+
+    def wr(entry, fresh):
+        return jax.tree.map(
+            lambda cl, fl: cl.at[bidx, :, slots].set(
+                fl.transpose(0, 2, 1, 3).astype(cl.dtype)),
+            entry, fresh)
+
+    return x, {"k": wr(cache["k"], kq), "v": wr(cache["v"], vq)}
 
 
 def layer_verify(params, x, cfg, kind, cache, pos, quant=None):
@@ -432,12 +491,17 @@ def _attn_verify_paged(params, x, cfg, kind, quant, pool, table, posb,
     y = rms_norm(params["norm1"], x, cfg.norm_eps)
     q, k, v = _qkv(params["attn"], y, cfg, quant, positions)
     window = cfg.window if kind == "attn_local" else 0
-    ck = gather_kv_view(pool["k"], table, s_c)
-    cv = gather_kv_view(pool["v"], table, s_c)
-    o = verify_attention(q, k, v, ck, cv, posb, window=window)
+    ck = _gather_kv_entry(pool["k"], table, s_c)
+    cv = _gather_kv_entry(pool["v"], table, s_c)
+    # quantize-first (see _attn_verify); returning the PACKED fresh K/V as
+    # steps makes commit-on-accept replay this pass's exact quantization
+    # (write_kv_blocks passes already-packed values through untouched).
+    kq = quantize_like(pool["k"], k)
+    vq = quantize_like(pool["v"], v)
+    o = verify_attention(q, kq, vq, ck, cv, posb, window=window)
     o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
     x = x + dense(params["attn"]["wo"], o.astype(x.dtype), quant, name="wo")
-    return x, {"k": k, "v": v}
+    return x, {"k": kq, "v": vq}
 
 
 def layer_verify_paged(params, x, cfg, kind, cache, table, pos, quant=None,
@@ -487,9 +551,13 @@ def rollback_kv_cache(old, new, keep, pos, n_new):
     slots = (posb[:, None] + jnp.arange(n_new)[None, :]) % s  # (B, n_new)
     kept = jnp.arange(n_new)[None, :] < keep[:, None]
     mask = jnp.zeros((b, s), bool).at[jnp.arange(b)[:, None], slots].max(kept)
-    m = mask[:, None, :, None]
-    return {"k": jnp.where(m, new["k"], old["k"]),
-            "v": jnp.where(m, new["v"], old["v"])}
+    m = mask[:, None, :, None]  # broadcasts over mantissa AND scale widths
+
+    def mix(entry_new, entry_old):
+        return jax.tree.map(lambda n, o: jnp.where(m, n, o),
+                            entry_new, entry_old)
+
+    return {"k": mix(new["k"], old["k"]), "v": mix(new["v"], old["v"])}
 
 
 def rollback_kv_cache_paged(pool, table, k_new, v_new, keep, pos, s_c: int):

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ArchConfig
+from repro.kvq import kv_policy_cfg
 
 from . import blocks
 from .layers import Quant, init_norm, rms_norm
@@ -178,17 +179,26 @@ def loss_fn(params, batch: dict, cfg: ArchConfig):
 
 # ---------------- caches / serving ----------------
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, kv=None):
+    """``kv``: optional KV-quant spec (preset name / bits / KVQuantConfig,
+    or a per-entry mapping keyed ``units.{li}`` / ``tail.{i}`` with a
+    ``default`` — the shape a DSBPPolicy's kv_layers takes).  Per-entry
+    granularity is the finest the stacked-unit layout admits: the caches of
+    one pattern position are stacked into ONE container, whose static aux
+    (bits) must be uniform across units."""
     dt = _dtype(cfg)
     unit_caches = []
-    for kind in cfg.pattern:
+    for li, kind in enumerate(cfg.pattern):
+        ckv = kv_policy_cfg(kv, f"units.{li}")
         per_unit = [
-            blocks.init_layer_cache(cfg, kind, batch, max_len, dt)
+            blocks.init_layer_cache(cfg, kind, batch, max_len, dt, kv=ckv)
             for _ in range(cfg.n_units)
         ]
         unit_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
     tail_caches = [
-        blocks.init_layer_cache(cfg, kind, batch, max_len, dt) for kind in cfg.tail
+        blocks.init_layer_cache(cfg, kind, batch, max_len, dt,
+                                kv=kv_policy_cfg(kv, f"tail.{i}"))
+        for i, kind in enumerate(cfg.tail)
     ]
     return {"units": unit_caches, "tail": tail_caches}
 
@@ -229,7 +239,8 @@ def _prefill_trunk(params, batch: dict, cfg: ArchConfig, lengths=None):
     return logits, unit_auxs, tail_auxs, (length if lengths is None else lengths)
 
 
-def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
+def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None,
+            kv=None):
     """Run the prompt; returns (last-valid-position logits, cache, lengths).
 
     ``lengths`` — optional (B,) int32 of valid prompt lengths for a
@@ -243,7 +254,7 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
     """
     logits, unit_auxs, tail_auxs, fill_len = _prefill_trunk(
         params, batch, cfg, lengths)
-    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len, kv=kv)
 
     def pack(kind, c, aux):
         if blocks.KIND_HAS_KV[kind]:
@@ -273,7 +284,7 @@ def prefill(params, batch: dict, cfg: ArchConfig, max_len: int, lengths=None):
 # ---------------- paged cache (DESIGN.md §12) ----------------
 
 def init_paged_cache(cfg: ArchConfig, batch: int, num_blocks: int,
-                     block_size: int):
+                     block_size: int, kv=None):
     """Block-pool cache tree: same {"units", "tail"} structure as
     :func:`init_cache`, but KV leaves are physical block pools
     ((R,) NB, Hkv, bs, D) shared by every lane, addressed through per-lane
@@ -283,17 +294,19 @@ def init_paged_cache(cfg: ArchConfig, batch: int, num_blocks: int,
     host-side accounting (serve/blocks.BlockAllocator) is per-table-entry."""
     dt = _dtype(cfg)
     unit_caches = []
-    for kind in cfg.pattern:
+    for li, kind in enumerate(cfg.pattern):
+        ckv = kv_policy_cfg(kv, f"units.{li}")
         per_unit = [
             blocks.init_layer_cache_paged(cfg, kind, batch, num_blocks,
-                                          block_size, dt)
+                                          block_size, dt, kv=ckv)
             for _ in range(cfg.n_units)
         ]
         unit_caches.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_unit))
     tail_caches = [
         blocks.init_layer_cache_paged(cfg, kind, batch, num_blocks,
-                                      block_size, dt)
-        for kind in cfg.tail
+                                      block_size, dt,
+                                      kv=kv_policy_cfg(kv, f"tail.{i}"))
+        for i, kind in enumerate(cfg.tail)
     ]
     return {"units": unit_caches, "tail": tail_caches}
 

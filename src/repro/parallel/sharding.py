@@ -161,11 +161,20 @@ def cache_pspecs(cache, mesh: Mesh, batch_size: int, shard_kv_model: bool = True
     msz = mesh.shape["model"]
 
     def rule(path, leaf):
-        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        names = [str(getattr(p, "key", getattr(p, "idx",
+                                               getattr(p, "name", p))))
+                 for p in path]
         stacked = "units" in names
         shape = leaf.shape[1:] if stacked else leaf.shape
         lead = (None,) if stacked else ()
         name = names[-1]
+        # packed KV leaves (repro.kvq.PackedKVBlock) flatten as qm/scale
+        # children of the k/v entry; both share the k/v leading axes (the
+        # scale's trailing axis is 1 and stays unsharded either way), so
+        # they inherit the parent's KV placement rule verbatim
+        if name in ("qm", "scale") and len(names) >= 2 and names[-2] in (
+                "k", "v"):
+            name = names[-2]
         if paged and name in ("k", "v") and len(shape) == 4:
             blk_ax = ba if shape[0] % bsz == 0 else None
             head_ax = "model" if (shard_kv_model and shape[1] % msz == 0) else None

@@ -17,6 +17,8 @@ servable artifact:
   spec_bits.py  — per-layer draft-bitwidth pricing for self-speculative
                   decoding (ServeConfig.spec_draft_bits artifacts,
                   DESIGN.md §10)
+  kv_bits.py    — per-entry KV-cache bitwidth pricing from one-pass shift
+                  statistics (DSBPPolicy.kv_layers artifacts, DESIGN.md §14)
 """
 from .policy import DSBPPolicy
 from .calibrate import (
@@ -26,6 +28,7 @@ from .calibrate import (
     synthetic_calibration_batches,
 )
 from .cost import assignment_cost, candidate_ladder, predict_layer_bits
+from .kv_bits import KVEntryStats, collect_kv_stats, kv_dropped_bits, price_kv_bits
 from .search import autotune
 from .spec_bits import price_draft_bits
 
@@ -40,4 +43,8 @@ __all__ = [
     "predict_layer_bits",
     "autotune",
     "price_draft_bits",
+    "KVEntryStats",
+    "collect_kv_stats",
+    "kv_dropped_bits",
+    "price_kv_bits",
 ]

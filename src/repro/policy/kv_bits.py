@@ -1,0 +1,181 @@
+"""Per-entry KV-cache bitwidth pricing (DESIGN.md §14).
+
+The packed KV cache (:mod:`repro.kvq`) quantizes K/V at write time with
+the paper's aligned-mantissa machinery; how many aligned bits one cache
+entry needs is governed by the SAME statistic that prices weights in
+:mod:`repro.policy.spec_bits` — the distribution of per-element alignment
+shifts inside each quantization group (here the whole ``d_head`` vector of
+one token in one KV head).  An element shifted by ``s`` under a
+``mbits``-bit probe decompose has ``s + mbits + 1`` significant positions;
+an aligned width of ``bits`` keeps ``bits - 1`` magnitude bits, so the
+truncation drops ``max(s + mbits + 2 - bits, 0)`` of them.
+
+:func:`collect_kv_stats` gathers those shift histograms in ONE prefill
+pass per calibration batch — a float cache is materialized, its K/V
+leaves are pushed through the DSBP field extraction, and the histograms
+aggregate per cache-entry name (``units.{pos}`` / ``tail.{i}``, the
+:func:`repro.kvq.kv_policy_cfg` granularity: one stacked container, one
+static spec).  :func:`price_kv_bits` then mirrors
+:func:`~repro.policy.spec_bits.price_draft_bits`: entries where coarse
+storage destroys the most mantissa in the bytes that matter keep the fine
+preset until a KV-HBM budget is spent, the rest store coarse.  The result
+plugs straight into :meth:`repro.policy.policy.DSBPPolicy.with_kv` /
+``ServeConfig.kv_quant``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsbp import MAX_SHIFT, group_shifts
+from repro.core.formats import decompose, get_format, per_tensor_scale
+from repro.kvq import KVQuantConfig, is_kv_leaf_path, resolve_kv_spec
+from repro.models import model as M
+
+__all__ = ["KVEntryStats", "collect_kv_stats", "kv_dropped_bits",
+           "price_kv_bits"]
+
+
+@dataclasses.dataclass
+class KVEntryStats:
+    """Shift statistics of one cache entry's K/V vectors."""
+
+    name: str                # cache-entry key: "units.{pos}" / "tail.{i}"
+    mbits: int               # probe format mantissa bits (shift basis)
+    shift_hist: np.ndarray   # (MAX_SHIFT+1,) per-element shifts (nz only)
+    nz: int                  # nonzero elements observed
+    total: int               # elements observed
+    groups: int              # (token, head) vectors observed
+    bytes_per_token: float   # float K+V cache bytes one token costs here
+
+    @property
+    def nz_frac(self) -> float:
+        return self.nz / max(self.total, 1)
+
+
+def collect_kv_stats(params, cfg, batches,
+                     probe: str = "e5m7") -> dict[str, KVEntryStats]:
+    """One-pass KV calibration: prefill each batch into a FLOAT cache and
+    histogram the alignment shifts of every K/V leaf, keyed by cache-entry
+    name.  ``probe`` is the decompose format whose fields feed the shift
+    extraction (``e5m7`` matches the widest KV preset).  Entries without
+    attention KV (recurrent / SSD layers) simply never appear.
+    """
+    if cfg.frontend != "none":
+        raise NotImplementedError(
+            f"KV calibration drives plain token batches; "
+            f"frontend={cfg.frontend!r}")
+    f = get_format(probe)
+    acc: dict[str, dict] = {}
+    for b in batches:
+        toks = jnp.asarray(b)
+        bsz, seq = int(toks.shape[0]), int(toks.shape[1])
+        # max_len == seq: every ring slot holds a real token, so the leaf
+        # statistics are over written positions only (no zero-fill skew)
+        _, cache, _ = M.prefill(params, {"tokens": toks}, cfg, max_len=seq)
+        for fam in ("units", "tail"):
+            for i, entry in enumerate(cache[fam]):
+                name = f"{fam}.{i}"
+                for path, leaf in jax.tree_util.tree_flatten_with_path(entry)[0]:
+                    if not is_kv_leaf_path(path):
+                        continue
+                    x = jnp.reshape(jnp.asarray(leaf, jnp.float32),
+                                    (-1, leaf.shape[-1]))
+                    tscale = per_tensor_scale(x, f)
+                    fields = decompose(x * tscale, f)
+                    shift, _, nz = group_shifts(fields["e_unb"][..., None, :],
+                                                fields["m_int"][..., None, :])
+                    shift, nz = np.asarray(shift), np.asarray(nz)
+                    ent = acc.setdefault(name, {
+                        "shift_hist": np.zeros(MAX_SHIFT + 1, np.int64),
+                        "nz": 0, "total": 0, "groups": 0, "bpt": 0.0,
+                        "bpt_batch": None,
+                    })
+                    ent["shift_hist"] += np.bincount(
+                        shift[nz].ravel(),
+                        minlength=MAX_SHIFT + 1)[: MAX_SHIFT + 1]
+                    ent["nz"] += int(nz.sum())
+                    ent["total"] += int(nz.size)
+                    ent["groups"] += int(x.shape[0])
+                    if ent["bpt_batch"] is not b:  # once per batch, per entry
+                        ent["bpt_batch"] = b
+                        ent["bpt"] = 0.0
+                    ent["bpt"] += leaf.size * leaf.dtype.itemsize / (bsz * seq)
+    return {
+        name: KVEntryStats(
+            name=name, mbits=f.mbits, shift_hist=ent["shift_hist"],
+            nz=ent["nz"], total=ent["total"], groups=ent["groups"],
+            bytes_per_token=float(ent["bpt"]))
+        for name, ent in acc.items()
+    }
+
+
+def kv_dropped_bits(stats: KVEntryStats, spec) -> float:
+    """Mean mantissa bits an aligned ``spec.bits`` store drops per nonzero
+    element of this entry, off the shift histogram (relative pricing
+    metric — the probe's mantissa width is the basis, so comparisons are
+    across entries and widths, not an absolute error bound)."""
+    spec = resolve_kv_spec(spec)
+    s = np.arange(stats.shift_hist.size, dtype=np.float64)
+    dropped = np.maximum(s + (stats.mbits + 2) - spec.bits, 0.0)
+    h = stats.shift_hist.astype(np.float64)
+    return float((dropped * h).sum() / max(h.sum(), 1.0))
+
+
+def price_kv_bits(stats: dict[str, KVEntryStats], *, fine="kv8",
+                  coarse="kv4", budget_frac_fine: float = 0.5):
+    """Per-entry KV specs from the collected statistics.
+
+    Entries are ranked by ``byte_share × dropped-bits-at-coarse`` (where
+    coarse storage destroys the most mantissa in the KV bytes that
+    matter); the top ranks store at ``fine`` until their cumulative
+    float-byte share exceeds ``budget_frac_fine``, the rest at ``coarse``.
+    Returns ``(artifact, info)``: ``artifact`` maps entry names to
+    :class:`~repro.kvq.KVQuantConfig` plus a ``"default"`` entry at the
+    coarse spec — the exact mapping shape ``ServeConfig.kv_quant`` and
+    :meth:`DSBPPolicy.with_kv` consume — and ``info`` is JSON-able
+    provenance (scores, assignment by preset-style name, modeled bytes).
+    """
+    fine = resolve_kv_spec(fine)
+    coarse = resolve_kv_spec(coarse)
+    if fine is None or coarse is None or coarse.bits > fine.bits:
+        raise ValueError(
+            f"need concrete specs with coarse.bits <= fine.bits; got "
+            f"fine={fine} coarse={coarse}")
+    if not stats:
+        raise ValueError("no KV entries in the statistics — the model has "
+                         "no attention caches to price")
+    total_bytes = sum(s.bytes_per_token for s in stats.values())
+    share = {n: s.bytes_per_token / max(total_bytes, 1e-12)
+             for n, s in stats.items()}
+    scores = {n: share[n] * kv_dropped_bits(s, coarse)
+              for n, s in stats.items()}
+    order = sorted(stats, key=lambda n: -scores[n])
+    artifact: dict[str, KVQuantConfig] = {}
+    fine_share = 0.0
+    for name in order:
+        if scores[name] > 0 and fine_share + share[name] <= budget_frac_fine:
+            artifact[name] = fine
+            fine_share += share[name]
+        else:
+            artifact[name] = coarse
+    assignment = {n: f"kv{artifact[n].bits}/{artifact[n].fmt}" for n in order}
+    # modeled packed bytes/token: bits/8 of the float-width int8 mantissas
+    # plus one f32 scale per d_head group is dominated by the mantissa
+    # term; report the mantissa ratio (the gate measures the real thing)
+    avg_bits = sum(share[n] * artifact[n].bits for n in order)
+    info = {
+        "fine": f"kv{fine.bits}/{fine.fmt}",
+        "coarse": f"kv{coarse.bits}/{coarse.fmt}",
+        "budget_frac_fine": budget_frac_fine,
+        "fine_byte_share": fine_share,
+        "avg_kv_bits_byte_weighted": avg_bits,
+        "scores": {n: round(scores[n], 6) for n in order},
+        "assignment": assignment,
+    }
+    artifact = dict(artifact)
+    artifact["default"] = coarse
+    return artifact, info

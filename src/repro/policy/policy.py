@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.dsbp import DSBPConfig
 from repro.core.quantized import PRESETS, QuantizedMatmulConfig
+from repro.kvq import KVQuantConfig, resolve_kv_spec
 
 __all__ = ["DSBPPolicy", "POLICY_LEAF"]
 
@@ -46,6 +47,14 @@ def _cfg_from_dict(d: dict) -> QuantizedMatmulConfig:
     )
 
 
+def _kv_to_dict(cfg: KVQuantConfig | None):
+    return None if cfg is None else {"bits": cfg.bits, "fmt": cfg.fmt}
+
+
+def _kv_from_dict(d) -> KVQuantConfig | None:
+    return None if d is None else KVQuantConfig(bits=d["bits"], fmt=d["fmt"])
+
+
 @dataclasses.dataclass
 class DSBPPolicy:
     """Per-layer-path quantization assignment + provenance metadata.
@@ -53,11 +62,21 @@ class DSBPPolicy:
     ``layers`` maps projection path keys to full configs; ``default`` (a
     config or a PRESETS name) covers quantizable projections the mapping
     does not name; ``meta`` is free-form JSON-able provenance.
+
+    ``kv_layers`` / ``kv_default`` are the KV-cache side of the joint
+    artifact (DESIGN.md §14): cache-entry names (``units.{pos}`` /
+    ``tail.{i}`` — the :func:`repro.kvq.kv_policy_cfg` keys, one per
+    stacked container) mapped to :class:`~repro.kvq.KVQuantConfig` specs
+    (or KV_PRESETS names / int bitwidths / None for a float entry).  The
+    serving engine accepts the whole policy as ``ServeConfig.kv_quant``
+    and reads exactly these two fields.
     """
 
     layers: dict[str, QuantizedMatmulConfig] = dataclasses.field(default_factory=dict)
     default: QuantizedMatmulConfig | None = None
     meta: dict = dataclasses.field(default_factory=dict)
+    kv_layers: dict[str, KVQuantConfig | None] = dataclasses.field(default_factory=dict)
+    kv_default: KVQuantConfig | None = None
 
     def __post_init__(self):
         if isinstance(self.default, str):
@@ -66,6 +85,10 @@ class DSBPPolicy:
             k: (PRESETS[v] if isinstance(v, str) else v)
             for k, v in self.layers.items()
         }
+        self.kv_default = resolve_kv_spec(self.kv_default)
+        self.kv_layers = {
+            k: resolve_kv_spec(v) for k, v in self.kv_layers.items()
+        }
 
     # ---- lookup ----
 
@@ -73,10 +96,29 @@ class DSBPPolicy:
         """Config for one projection path; ``default`` when unnamed."""
         return self.layers.get(path_key, self.default)
 
+    def kv_spec_for(self, entry: str) -> KVQuantConfig | None:
+        """KV spec for one cache entry (``units.{pos}`` / ``tail.{i}``);
+        ``kv_default`` when unnamed."""
+        return self.kv_layers.get(entry, self.kv_default)
+
     def replace_layer(self, path_key: str, cfg: QuantizedMatmulConfig) -> "DSBPPolicy":
         layers = dict(self.layers)
         layers[path_key] = cfg
-        return DSBPPolicy(layers=layers, default=self.default, meta=dict(self.meta))
+        return DSBPPolicy(layers=layers, default=self.default, meta=dict(self.meta),
+                          kv_layers=dict(self.kv_layers), kv_default=self.kv_default)
+
+    def with_kv(self, kv_layers, kv_default=None,
+                meta_update: dict | None = None) -> "DSBPPolicy":
+        """Joint weight+KV policy: same weight assignment, KV side replaced.
+        ``kv_layers`` may carry a ``"default"`` key (the artifact shape
+        :func:`repro.policy.kv_bits.price_kv_bits` returns); it is split
+        out into ``kv_default``."""
+        kv_layers = dict(kv_layers)
+        kv_default = kv_layers.pop("default", kv_default)
+        meta = dict(self.meta)
+        meta.update(meta_update or {})
+        return DSBPPolicy(layers=dict(self.layers), default=self.default,
+                          meta=meta, kv_layers=kv_layers, kv_default=kv_default)
 
     @classmethod
     def uniform(cls, cfg: QuantizedMatmulConfig | str,
@@ -90,10 +132,16 @@ class DSBPPolicy:
     # ---- serialization ----
 
     def to_json(self) -> str:
+        # version stays 1: the KV keys are additive, and from_json reads
+        # them with .get() defaults, so v1 blobs written before the KV
+        # extension round-trip as weight-only policies.
         return json.dumps({
             "version": 1,
             "layers": {k: _cfg_to_dict(v) for k, v in sorted(self.layers.items())},
             "default": None if self.default is None else _cfg_to_dict(self.default),
+            "kv_layers": {k: _kv_to_dict(v)
+                          for k, v in sorted(self.kv_layers.items())},
+            "kv_default": _kv_to_dict(self.kv_default),
             "meta": self.meta,
         }, sort_keys=True)
 
@@ -104,6 +152,9 @@ class DSBPPolicy:
             layers={k: _cfg_from_dict(v) for k, v in d["layers"].items()},
             default=None if d["default"] is None else _cfg_from_dict(d["default"]),
             meta=d.get("meta", {}),
+            kv_layers={k: _kv_from_dict(v)
+                       for k, v in d.get("kv_layers", {}).items()},
+            kv_default=_kv_from_dict(d.get("kv_default")),
         )
 
     def to_tree(self) -> dict:
@@ -131,7 +182,7 @@ class DSBPPolicy:
     # ---- introspection ----
 
     def summary(self) -> str:
-        """One line per layer: path, mode, (k, b_in/b_w)."""
+        """One line per layer: path, mode, (k, b_in/b_w); KV entries after."""
         lines = []
         for key in sorted(self.layers):
             c = self.layers[key]
@@ -140,6 +191,10 @@ class DSBPPolicy:
                 f"{key:40s} {c.mode:8s} k={ic.k:g} "
                 f"b_fix={ic.b_fix}/{wc.b_fix} fmt={ic.fmt}/{wc.fmt}"
             )
+        for key in sorted(self.kv_layers):
+            c = self.kv_layers[key]
+            desc = "float" if c is None else f"kv{c.bits} fmt={c.fmt}"
+            lines.append(f"{'kv:' + key:40s} {desc}")
         return "\n".join(lines)
 
     def __len__(self) -> int:

@@ -32,6 +32,7 @@ from repro.serve.engine import Engine, ServeConfig, pack_weights_int8
 
 from .calibrate import CalibrationReport
 from .cost import assignment_cost, candidate_ladder, resolve_cfg
+from .kv_bits import price_kv_bits
 from .policy import DSBPPolicy
 
 __all__ = ["autotune"]
@@ -58,7 +59,9 @@ def _raw_leaves_by_path(params) -> dict:
 def autotune(params, cfg, report: CalibrationReport, tasks,
              *, ladder=None, max_drop: float = 0.0, max_len: int = 256,
              min_accuracy=None, quant_method: str | None = None,
-             batch_items: int = 16, log=None) -> DSBPPolicy:
+             batch_items: int = 16, kv_stats=None, kv_fine="kv8",
+             kv_coarse="kv4", kv_budget_frac_fine: float = 0.5,
+             log=None) -> DSBPPolicy:
     """Greedy accuracy-constrained per-layer search; returns the policy.
 
     ``params`` is the RAW float tree (gold labels need it); ``report`` a
@@ -70,6 +73,14 @@ def autotune(params, cfg, report: CalibrationReport, tasks,
     accuracies to certify the result against it.  ``quant_method`` pins the
     serving method for the trial engines (None = the serving default,
     dsbp_fused).
+
+    ``kv_stats`` (a :func:`~repro.policy.kv_bits.collect_kv_stats` result,
+    optional) extends the returned artifact into a JOINT weight+KV policy:
+    per-entry KV bitwidths are priced from the same one-pass calibration
+    statistics (:func:`~repro.policy.kv_bits.price_kv_bits` under the
+    ``kv_fine`` / ``kv_coarse`` / ``kv_budget_frac_fine`` knobs) and land
+    in ``policy.kv_layers`` / ``policy.kv_default`` — the fields
+    ``ServeConfig.kv_quant`` reads when handed the policy directly.
     """
     log = log or (lambda *_: None)
     ladder = list(ladder or candidate_ladder())
@@ -160,4 +171,12 @@ def autotune(params, cfg, report: CalibrationReport, tasks,
             "trace": trace,
         },
     )
+    if kv_stats:
+        kv_artifact, kv_info = price_kv_bits(
+            kv_stats, fine=kv_fine, coarse=kv_coarse,
+            budget_frac_fine=kv_budget_frac_fine)
+        policy = policy.with_kv(kv_artifact,
+                                meta_update={"kv_pricing": kv_info})
+        log(f"kv pricing: {kv_info['assignment']} "
+            f"(fine byte share {kv_info['fine_byte_share']:.2f})")
     return policy

@@ -278,17 +278,26 @@ def copy_blocks(pool, src, dst):
     """Device-side COW copy: ``pool`` KV leaves get blocks ``src`` copied
     onto blocks ``dst`` (both 1-D int sequences).  Unit-stacked leaves
     carry the block axis at position 1; tail leaves at 0.  Non-KV leaves
-    (lane states, ndim < 4) pass through untouched."""
+    (lane states, ndim < 4) pass through untouched.
+
+    KV leaves are named via :func:`repro.kvq.is_kv_leaf_path`: float
+    ``k``/``v`` arrays AND the ``qm``/``scale`` children of packed blocks
+    (repro.kvq.PackedKVBlock) — the scale's trailing-1 axis rides the same
+    block-axis copy, so a COW split of a quantized pool moves both
+    children coherently."""
+    from repro.kvq import is_kv_leaf_path
+
     if not len(src):
         return pool
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
 
     def cp(path, leaf):
-        name = str(getattr(path[-1], "key", ""))
-        if name not in ("k", "v"):
+        if not is_kv_leaf_path(path):
             return leaf
-        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        names = [str(getattr(p, "key", getattr(p, "idx",
+                                               getattr(p, "name", p))))
+                 for p in path]
         if "units" in names:  # (R, NB, H, bs, D)
             return leaf.at[:, dst].set(leaf[:, src])
         return leaf.at[dst].set(leaf[src])  # (NB, H, bs, D)

@@ -39,6 +39,7 @@ from repro.configs import ArchConfig
 from repro.core.packed import (key_entry_str, pack_weights_sharded,
                                packed_nbytes, tree_is_packed)
 from repro.core.quantized import PRESETS, pack_weights
+from repro.kvq import is_kv_leaf_path, kv_cache_nbytes, tree_has_packed_kv
 from repro.models import model as M
 
 __all__ = ["ServeConfig", "Request", "Engine", "pack_weights_int8",
@@ -102,6 +103,23 @@ class ServeConfig:
     # approximation by construction — verification pins the numerics — so
     # it may run the cheapest backend available.
     spec_draft_method: str | None = "dsbp_ref"
+    # --- DSBP-quantized KV cache (DESIGN.md §14) ---
+    # packed KV representation every cache write quantizes into: a preset
+    # name ('kv8'/'kv6'/'kv4'), an int total bitwidth in [2, 8], a
+    # repro.kvq.KVQuantConfig, True (the full-width 'kv8' preset), or a
+    # per-entry mapping {'units.<i>': spec, 'tail.<i>': spec,
+    # 'default': spec} — the shape policy.autotune emits as
+    # DSBPPolicy.kv_layers.  A DSBPPolicy carrying kv_layers is accepted
+    # directly.  None (default) serves the float cache unchanged.
+    kv_quant: object = None
+    # uniform total-bits shorthand for kv_quant (mutually exclusive)
+    kv_bits: int | None = None
+    # speculative rounds draft on an even narrower MSB-slice view of the
+    # packed cache (repro.kvq.kv_narrow_view); verification and
+    # commit-on-accept keep the full serving width, so served tokens never
+    # change — only acceptance can.  Requires kv_quant; None drafts on the
+    # serving-width cache.
+    kv_draft_bits: int | None = None
     # --- multi-device serving (DESIGN.md §11) ---
     # mesh_shape (e.g. (2, 4)) turns the engine multi-device: weights pack
     # straight into per-shard kernel layouts, projections run the fused
@@ -294,8 +312,13 @@ def _cache_insert(pool, src, rows, slots, kv_mode: str = "scatter"):
     slots = jnp.asarray(slots, jnp.int32)
 
     def ins(path, p, s):
-        names = [str(getattr(e, "key", getattr(e, "idx", e))) for e in path]
-        if kv_mode != "scatter" and names[-1] in ("k", "v"):
+        names = [key_entry_str(e) for e in path]
+        # KV leaves are float k/v arrays or the qm/scale children of packed
+        # ones (repro.kvq.is_kv_leaf_path — inlined on names we already have)
+        is_kv = names[-1] in ("k", "v") or (
+            names[-1] in ("qm", "scale")
+            and len(names) >= 2 and names[-2] in ("k", "v"))
+        if kv_mode != "scatter" and is_kv:
             return s if kv_mode == "src" else p
         if "units" in names:  # stacked (R, B, ...): batch is axis 1
             return p.at[:, slots].set(s[:, rows].astype(p.dtype))
@@ -353,6 +376,11 @@ class Engine:
             self.pool_size = self.mesh.size * scfg.per_device_batch_size
         self.pack_report = None
         self.last_stats: dict | None = None
+        # --- DSBP-quantized KV cache (DESIGN.md §14) ---
+        # resolved once: None, a KVQuantConfig, or a per-entry mapping —
+        # threaded into EVERY cache construction site (prefill, dense pool,
+        # paged pool, chunk-lane reset) so all trees share one structure
+        self.kv_spec = self._norm_kv(scfg)
         # --- robustness layer (DESIGN.md §13) ---
         self._guard = self._norm_guard(scfg.numeric_guard)
         if self._guard == "fallback" and scfg.spec_k:
@@ -416,7 +444,8 @@ class Engine:
             def _prefill_fn(p, toks, lens):
                 with self._trace_ctx():
                     return M.prefill(p, {"tokens": toks}, cfg,
-                                     max_len=scfg.max_len, lengths=lens)
+                                     max_len=scfg.max_len, lengths=lens,
+                                     kv=self.kv_spec)
 
             self._prefill = jax.jit(_prefill_fn)
         self._spec = None
@@ -436,7 +465,8 @@ class Engine:
 
             _round = build_spec_round(cfg, scfg.spec_k, scfg.spec_draft_bits,
                                       scfg.spec_draft_method,
-                                      guard=self._guard is not None)
+                                      guard=self._guard is not None,
+                                      kv_draft_bits=scfg.kv_draft_bits)
 
             def _spec_fn(p, cache, tok, pos):
                 # the whole round — draft, verify, accept, rollback — traces
@@ -452,6 +482,7 @@ class Engine:
                 "spec_k": scfg.spec_k,
                 "draft_bits": scfg.spec_draft_bits,
                 "draft_method": scfg.spec_draft_method,
+                "kv_draft_bits": scfg.kv_draft_bits,
                 "extra_weight_nbytes": 0,
             }
         if scfg.paged:
@@ -538,7 +569,8 @@ class Engine:
             _round = build_spec_round_paged(
                 cfg, scfg.spec_k, scfg.spec_draft_bits,
                 scfg.spec_draft_method, max_len,
-                guard=self._guard is not None)
+                guard=self._guard is not None,
+                kv_draft_bits=scfg.kv_draft_bits)
 
             def _spec_paged_fn(p, cache, table, tok, pos, live):
                 with self._trace_ctx():
@@ -611,6 +643,47 @@ class Engine:
                 f"unknown numeric_guard {policy!r}: pick one of "
                 f"{sorted(_GUARD_POLICIES)} (or 'off')")
         return policy
+
+    @staticmethod
+    def _norm_kv(scfg: ServeConfig):
+        """Resolve ``kv_quant``/``kv_bits`` to None, a KVQuantConfig, or a
+        per-entry mapping of resolved configs; validate ``kv_draft_bits``.
+        Spec errors surface at construction, never mid-serve."""
+        from collections.abc import Mapping
+
+        from repro.kvq import KV_MAX_BITS, KV_MIN_BITS, resolve_kv_spec
+
+        kv = scfg.kv_quant
+        if scfg.kv_bits is not None:
+            if kv is not None:
+                raise ValueError(
+                    "kv_bits is a uniform shorthand for kv_quant: set one, "
+                    "not both")
+            kv = int(scfg.kv_bits)
+        # a DSBPPolicy with KV pricing: use its per-entry mapping (plus
+        # kv_default for entries the mapping does not name); a policy
+        # without a KV side serves a float cache
+        if hasattr(kv, "kv_layers"):
+            pol = kv
+            kv = dict(getattr(pol, "kv_layers", None) or {})
+            kv.setdefault("default", getattr(pol, "kv_default", None))
+            if not any(v is not None for v in kv.values()):
+                kv = None
+        if isinstance(kv, Mapping):
+            kv = {str(k): resolve_kv_spec(v) for k, v in kv.items()}
+        else:
+            kv = resolve_kv_spec(kv)
+        if scfg.kv_draft_bits is not None:
+            if kv is None:
+                raise ValueError(
+                    "kv_draft_bits needs a packed KV cache: set kv_quant "
+                    "(or kv_bits) as well")
+            db = int(scfg.kv_draft_bits)
+            if not KV_MIN_BITS <= db <= KV_MAX_BITS:
+                raise ValueError(
+                    f"kv_draft_bits must be in [{KV_MIN_BITS}, "
+                    f"{KV_MAX_BITS}], got {db}")
+        return kv
 
     def cancel(self, uid) -> None:
         """Request cancellation of ``uid``, queued or mid-generation: the
@@ -771,7 +844,8 @@ class Engine:
                 lengths = lengths + batch["image_embeds"].shape[1]
         with self._trace_ctx():
             logits, cache, length = M.prefill(
-                self.params, batch, cfg, max_len=scfg.max_len, lengths=lengths
+                self.params, batch, cfg, max_len=scfg.max_len,
+                lengths=lengths, kv=self.kv_spec,
             )
         b = logits.shape[0]
         pos = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
@@ -862,7 +936,11 @@ class Engine:
         if faults is not None:
             faults.reset()
         B = self.pool_size
-        pool = self._shard_cache(M.init_cache(cfg, B, scfg.max_len), B)
+        pool = self._shard_cache(
+            M.init_cache(cfg, B, scfg.max_len, kv=self.kv_spec), B)
+        # KV HBM one slot's token pins (stats): actual leaf dtypes — int8
+        # mantissas + f32 scales under kv_quant, the model dtype otherwise
+        kv_bpt = kv_cache_nbytes(pool) / max(B * scfg.max_len, 1)
         active: list[Request | None] = [None] * B
         tok = np.zeros(B, np.int64)        # last sampled token per slot
         pos = np.zeros(B, np.int32)        # next absolute position per slot
@@ -961,6 +1039,8 @@ class Engine:
                 / max(stats["decode_steps"] * B, 1),
                 decode_tps=stats["decode_tokens"]
                 / max(stats["decode_time_s"], 1e-9),
+                kv_bytes_per_token=kv_bpt,
+                kv_packed=tree_has_packed_kv(pool),
             )
             if self._spec is not None:
                 self.last_stats["accepted_hist"] = (
@@ -1058,7 +1138,7 @@ class Engine:
         else:
             logits, cache, _ = M.prefill(
                 self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
-                max_len=scfg.max_len, lengths=lens,
+                max_len=scfg.max_len, lengths=lens, kv=self.kv_spec,
             )
         # admission guard: inject=False — the plan's NaN schedule targets
         # decode-phase calls only, but REAL non-finite prefill logits must
@@ -1144,12 +1224,16 @@ class Engine:
         self._last_alloc, self._last_prefix = alloc, prefix
         nb_pool = self.kv_blocks if self._kv_scs else 1
         cache = self._shard_cache(
-            M.init_paged_cache(cfg, B, nb_pool, bs), B, paged=True)
-        # bytes one table entry pins across every KV layer's pool (stats)
+            M.init_paged_cache(cfg, B, nb_pool, bs, kv=self.kv_spec), B,
+            paged=True)
+        # bytes one table entry pins across every KV layer's pool (stats) —
+        # summed from the ACTUAL cache leaves (is_kv_leaf_path walks float
+        # k/v arrays AND the qm/scale children of packed ones), so the
+        # report reflects int8+f32 packed bytes, not the model dtype
         blk_bytes = 0
         for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
-            if str(getattr(path[-1], "key", "")) in ("k", "v"):
-                blk_bytes += leaf.nbytes // nb_pool
+            if is_kv_leaf_path(path):
+                blk_bytes += (leaf.size * leaf.dtype.itemsize) // nb_pool
         tables = np.zeros((B, self._table_width), np.int32)
         lanes: list[dict | None] = [None] * B
         tok = np.zeros(B, np.int64)
@@ -1315,6 +1399,8 @@ class Engine:
                 # every prefix hit is one block of KV HBM NOT re-materialized
                 bytes_saved_sharing=(prefix.hits if prefix is not None
                                      else 0) * blk_bytes,
+                kv_bytes_per_token=blk_bytes / max(bs, 1),
+                kv_packed=tree_has_packed_kv(cache),
             )
             if self._spec_paged is not None:
                 self.last_stats["accepted_hist"] = (
@@ -1433,7 +1519,9 @@ class Engine:
             # chunk lanes start from pristine recurrent state; their KV
             # arrives chunk by chunk through the block table
             cache = _cache_insert(
-                cache, M.init_paged_cache(self.cfg, 1, 1, scfg.kv_block_size),
+                cache,
+                M.init_paged_cache(self.cfg, 1, 1, scfg.kv_block_size,
+                                   kv=self.kv_spec),
                 [0] * len(chunk_new), chunk_new, kv_mode="pool")
         if group:
             lens = np.asarray([len(r.tokens) for _, r, _ in group], np.int32)

@@ -30,6 +30,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kvq import kv_narrow_view
 from repro.models import model as M
 
 from .draft import DEFAULT_DRAFT_BITS, draft_params
@@ -52,7 +53,7 @@ def greedy_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
 
 def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
                      draft_method: str | None = "dsbp_ref",
-                     guard: bool = False):
+                     guard: bool = False, kv_draft_bits: int | None = None):
     """Build the round function ``(params, cache, tok, pos) -> (target
     (B, γ+1), keep (B,), new_cache)`` for ``jax.jit`` (donate the cache).
 
@@ -71,6 +72,13 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
     overflowed low-precision accumulation kills one lane's round, never
     the batch.  Draft logits are deliberately unguarded — draft output is
     advisory and verification re-derives every committed token.
+
+    ``kv_draft_bits`` narrows the DRAFT's view of a packed KV cache
+    (:func:`repro.kvq.kv_narrow_view` — the §10 MSB-slice idea applied to
+    the cache): drafting attends over right-shifted mantissas while the
+    verify pass and the committed cache writes keep the full serving
+    width, so served tokens never change — only acceptance can.  Traced
+    inside the round: the view is step-local, zero persistent KV HBM.
     """
     if spec_k < 1:
         raise ValueError(f"spec_k must be >= 1, got {spec_k}")
@@ -86,6 +94,8 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
 
         dp = draft_params(params, draft_bits)  # traced: no persistent HBM
         dcache, t = cache, tok
+        if kv_draft_bits is not None:
+            dcache = kv_narrow_view(cache, kv_draft_bits)
         drafts = []
         for j in range(spec_k):
             lg, dcache = M.decode_step(
@@ -113,7 +123,8 @@ def build_spec_round(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
 
 def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
                            draft_method: str | None = "dsbp_ref",
-                           max_len: int = 0, guard: bool = False):
+                           max_len: int = 0, guard: bool = False,
+                           kv_draft_bits: int | None = None):
     """Paged twin of :func:`build_spec_round`: ``(params, cache, table, tok,
     pos, live) -> (target, keep, new_cache)`` where ``cache`` is the block
     pool and ``table (B, W)`` the per-lane block tables.
@@ -147,6 +158,8 @@ def build_spec_round_paged(cfg, spec_k: int, draft_bits=DEFAULT_DRAFT_BITS,
         dp = draft_params(params, draft_bits)
         dcache, t = cache, tok  # value semantics under jit: the draft's
         # pool writes land in a scratch copy the round discards
+        if kv_draft_bits is not None:
+            dcache = kv_narrow_view(cache, kv_draft_bits)
         drafts = []
         for j in range(spec_k):
             lg, dcache = M.decode_step_paged(
