@@ -1,0 +1,51 @@
+"""CI gate over BENCH_obs.json (DESIGN.md §15): observability must be
+(1) nearly free — the recorder stays within 3% of the unobserved
+decode-step wall time (best of repeated interleaved min-of-reps pairs, so
+host-timer noise cannot fail a recorder that costs ~us on ~ms steps);
+(2) lossless — the standard seeded fault mix replayed with tracing on
+closes a complete span tree for every request, terminal statuses match
+``request_status``, and zero trace events are dropped; and (3) closed-loop
+— the guard telemetry it accumulates reprices at least one policy layer
+into an artifact that loads back through the policy checkpoint path.
+Usage:
+  python benchmarks/check_obs_gate.py BENCH_obs.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+MAX_OVERHEAD_PCT = 3.0
+
+
+def main(path: str) -> None:
+    rows = json.load(open(path))
+    row = next(r for r in rows if r["name"] == "serving_observability")
+    assert "error" not in row, row
+    d = row.get("derived", "")
+    m = re.search(
+        r"overhead_pct=(-?[0-9.]+) events=(\d+) dropped=(\d+) "
+        r"spans_complete=(\d) statuses_match=(\d) guard_trips=(\d+) "
+        r"unattributed=(\d+) widened=(\d+) reprice_loadable=(\d)", d)
+    assert m, d
+    (overhead, events, dropped, spans, statuses, trips, _unattr, widened,
+     loadable) = m.groups()
+    assert float(overhead) <= MAX_OVERHEAD_PCT, (
+        f"recorder costs {overhead}% per decode step "
+        f"(budget {MAX_OVERHEAD_PCT}%): {d}")
+    assert int(events) > 0, f"traced fault mix emitted no events: {d}"
+    assert int(dropped) == 0, f"trace recorder dropped events: {d}"
+    assert spans == "1", f"a request ended with an open span tree: {d}"
+    assert statuses == "1", (
+        f"a span's terminal status diverged from request_status: {d}")
+    assert int(trips) > 0, (
+        f"forced NaN injection produced no guard telemetry: {d}")
+    assert int(widened) >= 1, f"telemetry repriced no policy layer: {d}"
+    assert loadable == "1", (
+        f"repriced policy failed the checkpoint round-trip: {d}")
+    print("observability gate OK:", d)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_obs.json")

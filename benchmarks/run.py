@@ -12,7 +12,7 @@ import json
 import sys
 import traceback
 
-from . import (bench_kernels, bench_kvq, bench_paged, bench_paper,
+from . import (bench_kernels, bench_kvq, bench_obs, bench_paged, bench_paper,
                bench_policy, bench_robustness, bench_serving, bench_spec)
 
 BENCHES = [
@@ -33,6 +33,7 @@ BENCHES = [
     ("serving_paged_kv", bench_paged.bench_paged_serving),
     ("serving_kv_quant", bench_kvq.bench_kvq_serving),
     ("serving_robustness", bench_robustness.bench_robustness),
+    ("serving_observability", bench_obs.bench_obs),
     ("policy_vs_fixed", bench_policy.bench_policy_vs_fixed),
 ]
 

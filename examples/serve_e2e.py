@@ -40,6 +40,12 @@ The run must finish with a lifecycle status for every request, zero lost
 requests, preempted lanes resumed bit-exactly, and the block-conservation
 invariants green after every scheduler iteration.
 
+An eighth scenario replays that fault mix with OBSERVABILITY on
+(DESIGN.md §15, ``observe=True``): every request must close a complete
+span tree whose terminal status matches ``request_status``, the trace
+recorder must drop zero events, and a forced NaN injection must surface
+as non-empty quantization-health guard telemetry.
+
   PYTHONPATH=src python examples/serve_e2e.py --new-tokens 16
 """
 import argparse
@@ -247,6 +253,39 @@ def main():
         raise SystemExit("a faulted stream diverged from the unfaulted run")
     if str_["preemptions"] < 1 or str_["resumed"] < 1:
         raise SystemExit("the fault plan exercised no preempt-resume cycle")
+
+    # ---- observability: the same fault mix, traced end to end ----------
+    eng_obs = Engine(eng_packed.params, cfg_q, ServeConfig(
+        max_len=128, batch_size=args.batch, paged=True, kv_block_size=8,
+        kv_blocks=1 + 2 * len(mix), max_active=args.batch + 2,
+        numeric_guard="quarantine-lane", observe=True))
+    plan_t = FA.FaultPlan.seeded(
+        7, uids=uids, n_alloc=2, n_cow=2, n_nan=1, n_cancel=1,
+        decode_calls=2 * args.new_tokens, alloc_calls=len(mix) * 2,
+        steps=args.new_tokens, lanes=args.batch + 2)
+    # guarantee at least one guard trip so the quant-health pillar fires
+    plan_t.nan_steps = dict(plan_t.nan_steps)
+    plan_t.nan_steps[2] = "all"
+    eng_obs.serve([r for r in mix], faults=plan_t)
+    sto = eng_obs.last_stats
+    spans_ok = eng_obs.obs.complete_spans(sto["request_status"])
+    summ = eng_obs.obs.request_summary()
+    print(f"observability, same mix traced (observe=True): "
+          f"{len(eng_obs.obs.trace.events)} events, "
+          f"{eng_obs.obs.trace.dropped} dropped, "
+          f"{eng_obs.obs.health.total_trips} guard trips "
+          f"({eng_obs.obs.health.unattributed_trips} unattributed)")
+    for uid in sorted(summ, key=str)[:3]:
+        s = summ[uid]
+        ttft = "-" if s["ttft_s"] is None else f"{1e3 * s['ttft_s']:.1f}ms"
+        print(f"  req {uid}: {s['status']} ttft {ttft} {s['tokens']} tok")
+    print(f"  span tree complete + terminal statuses match: {spans_ok}")
+    if not spans_ok:
+        raise SystemExit("a traced request has an incomplete span tree")
+    if eng_obs.obs.health.total_trips < 1:
+        raise SystemExit("forced NaN injection produced no guard telemetry")
+    if eng_obs.obs.trace.dropped:
+        raise SystemExit("the trace recorder dropped events under faults")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ __all__ = [
     "packed_flash_attention",
     "count_weight_transposes",
     "count_kv_dequants",
+    "quant_sat_stats",
 ]
 
 
@@ -423,3 +424,41 @@ def count_kv_dequants(fn, *args, min_size: int) -> int:
             for p in eqn.params.values():
                 push(p)
     return count
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def _sat_counts(x, fmt, tscale):
+    from repro.core.formats import get_format
+
+    f = get_format(fmt)
+    x = x.astype(jnp.float32)
+    finite = jnp.isfinite(x)
+    xz = jnp.where(finite, x, 0.0)
+    ts = jnp.where(tscale > 0, tscale, per_tensor_scale(xz, f))
+    ax = jnp.abs(xz) * ts
+    overflow = jnp.sum((ax > f.max_value) & finite)
+    underflow = jnp.sum((ax > 0) & (ax < 2.0 ** f.emin) & finite)
+    return overflow, underflow, jnp.sum(~finite), ts
+
+
+def quant_sat_stats(x: jax.Array, cfg, tscale: float | None = None) -> dict:
+    """Overflow / underflow / non-finite counts of ``x`` against a target
+    FP format — the quantize-path health statistic of "FP8 Formats for
+    Deep Learning" (PAPERS.md), exported via :mod:`repro.obs.health`.
+
+    ``cfg`` is a :class:`DSBPConfig` (its ``fmt`` is used), an
+    :class:`~repro.core.formats.FPFormat`, or a format name.  With
+    ``tscale=None`` the per-call :func:`per_tensor_scale` is applied — by
+    construction nothing overflows then, so callers tracking distribution
+    SHIFT must pass a frozen scale (obs freezes the first sample's);
+    overflow = ``|x|*tscale`` above the format max, underflow = non-zero
+    magnitudes below the smallest normal ``2**emin``.
+    """
+    fmt = getattr(cfg, "fmt", None)
+    if fmt is None:
+        fmt = cfg if isinstance(cfg, str) else getattr(cfg, "name", str(cfg))
+    ts = jnp.float32(0.0 if tscale is None else tscale)
+    overflow, underflow, nonfinite, used = _sat_counts(jnp.asarray(x), fmt, ts)
+    return {"overflow": int(overflow), "underflow": int(underflow),
+            "nonfinite": int(nonfinite), "total": int(np.size(x)),
+            "tscale": float(used)}

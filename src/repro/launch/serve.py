@@ -103,6 +103,18 @@ def main():
                          "an MSB-slice view of the cached mantissas at "
                          "this width (served tokens unchanged; only "
                          "acceptance can move)")
+    ap.add_argument("--observe", action="store_true",
+                    help="observability layer (DESIGN.md §15): per-request "
+                         "lifecycle spans, a metrics registry and guard "
+                         "telemetry; prints a per-request TTFT/total/tok-s "
+                         "summary (implies --ragged)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the obs registry + health snapshot as JSON "
+                         "after serving (implies --observe)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump the Chrome trace-event timeline after "
+                         "serving — open in Perfetto / chrome://tracing "
+                         "(implies --observe)")
     ap.add_argument("--numeric-guard", default=None,
                     choices=["off", "fail-fast", "quarantine-lane",
                              "fallback"],
@@ -116,6 +128,10 @@ def main():
         args.ragged = True  # per-request lifecycle lives in serve()
     if args.spec_k or args.paged:
         args.ragged = True  # both live in the serve() scheduler
+    if args.metrics_json or args.trace:
+        args.observe = True
+    if args.observe:
+        args.ragged = True  # the recorder hooks live in serve()
 
     cfg = (smoke_config(args.arch) if args.smoke
            else get_config(args.arch).replace(dtype="bfloat16")).replace(remat=False)
@@ -141,7 +157,8 @@ def main():
         kv_blocks=args.kv_blocks, max_active=args.max_active,
         kv_quant=args.kv_quant, kv_bits=args.kv_bits,
         kv_draft_bits=args.kv_draft_bits,
-        numeric_guard=args.numeric_guard))
+        numeric_guard=args.numeric_guard,
+        observe=args.observe))
     if eng.kv_spec is not None:
         # pool-size report from the ACTUAL cache leaf dtypes (int8
         # mantissas + f32 scales), not the float layout it replaces
@@ -212,6 +229,24 @@ def main():
                   f"quarantined {st['quarantined']}, "
                   f"preemptions {st['preemptions']}, "
                   f"guard_checks {st['guard_checks']})")
+        if args.observe:
+            summ = eng.obs.request_summary()
+            for uid in sorted(summ, key=str):
+                s = summ[uid]
+                ttft = (f"{s['ttft_s'] * 1e3:7.1f}ms"
+                        if s["ttft_s"] is not None else "      -")
+                total = (f"{s['total_s'] * 1e3:7.1f}ms"
+                         if s["total_s"] is not None else "      -")
+                print(f"  req{uid}: {str(s['status']):<11} ttft {ttft}  "
+                      f"total {total}  {s['tokens']:>3} tok  "
+                      f"{s['tok_s']:6.1f} tok/s")
+        if args.metrics_json:
+            eng.obs.save_metrics(args.metrics_json)
+            print(f"metrics snapshot -> {args.metrics_json}")
+        if args.trace:
+            eng.obs.save_trace(args.trace)
+            print(f"chrome trace ({len(eng.obs.trace.events)} events) -> "
+                  f"{args.trace} (open in Perfetto / chrome://tracing)")
         for uid in list(out)[:2]:
             print(f"  req{uid}: {out[uid].tolist()}")
         return

@@ -1,0 +1,203 @@
+"""Quantization-health telemetry (DESIGN.md §15).
+
+Three signals, all keyed by cache-entry name (``units.{i}`` / ``tail.{i}``
+— the same granularity :mod:`repro.policy.kv_bits` prices and the path
+prefix :func:`repro.policy.reprice_from_telemetry` widens):
+
+- **Guard-trip attribution.**  When the engine's numeric guard trips,
+  :meth:`QuantHealth.attribute_trip` scans the live KV cache per entry for
+  non-finite leaves — a real numeric fault propagating through layer ``i``
+  poisons that entry's cache writes, so the scan names the culprit.  A
+  trip with a clean cache (e.g. a :class:`~repro.serve.faults.FaultPlan`
+  NaN injected into the *host* logits buffer) counts as ``unattributed``
+  rather than being blamed on an innocent layer.
+- **Saturation drift** in the style of the overflow/underflow statistics
+  of "FP8 Formats for Deep Learning" (Micikevicius et al., PAPERS.md):
+  the first sample freezes a per-entry tensor scale; later samples count
+  values that over/underflow the probe format *under that frozen scale*,
+  so a shifting activation distribution shows up as non-zero counts
+  instead of being silently re-normalized away by per-call scaling.
+- **Shift-histogram drift**: per-entry alignment-shift histograms in the
+  exact :func:`repro.policy.kv_bits.collect_kv_stats` form, compared to
+  the stored calibration stats by total-variation distance
+  (:func:`shift_drift`) — the DSBP-native signal that an entry's pricing
+  assumptions no longer hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsbp import MAX_SHIFT, group_shifts
+from repro.core.formats import decompose, get_format, per_tensor_scale
+
+__all__ = ["EntryHealth", "QuantHealth", "shift_drift"]
+
+
+def shift_drift(hist, baseline) -> float:
+    """Total-variation distance in [0, 1] between two normalized shift
+    histograms; ``baseline`` may be a raw histogram or anything with a
+    ``shift_hist`` attribute (e.g. ``policy.kv_bits.KVEntryStats``)."""
+    h = np.asarray(hist, np.float64)
+    b = np.asarray(getattr(baseline, "shift_hist", baseline), np.float64)
+    n = max(h.size, b.size)
+    h = np.pad(h, (0, n - h.size))
+    b = np.pad(b, (0, n - b.size))
+    h = h / max(h.sum(), 1.0)
+    b = b / max(b.sum(), 1.0)
+    return 0.5 * float(np.abs(h - b).sum())
+
+
+@dataclasses.dataclass
+class EntryHealth:
+    """Accumulated health of one cache entry."""
+
+    name: str
+    guard_trips: int = 0
+    nonfinite: int = 0
+    overflow: int = 0
+    underflow: int = 0
+    total: int = 0          # elements inspected by sample_cache
+    samples: int = 0
+    tscale: float | None = None  # frozen at the first sample
+    shift_hist: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(MAX_SHIFT + 1, np.int64))
+
+    def snapshot(self) -> dict:
+        return {"guard_trips": self.guard_trips,
+                "nonfinite": self.nonfinite,
+                "overflow": self.overflow,
+                "underflow": self.underflow,
+                "total": self.total,
+                "samples": self.samples,
+                "tscale": self.tscale,
+                "shift_hist": self.shift_hist.tolist()}
+
+
+def _cache_entries(cache):
+    """Yield ``(name, entry)`` for every ``units.{i}`` / ``tail.{i}``."""
+    if not cache:
+        return
+    for fam in ("units", "tail"):
+        for i, entry in enumerate(cache.get(fam, ())):
+            yield f"{fam}.{i}", entry
+
+
+class QuantHealth:
+    """Per-entry quantization-health accumulator."""
+
+    def __init__(self, probe: str = "e5m7"):
+        self.probe = probe
+        self.reset()
+
+    def reset(self) -> None:
+        self.entries: dict = {}
+        self.unattributed_trips = 0
+        self.samples = 0
+
+    def entry(self, name: str) -> EntryHealth:
+        e = self.entries.get(name)
+        if e is None:
+            e = self.entries[name] = EntryHealth(name)
+        return e
+
+    # --------------------------- guard trips ---------------------------
+
+    def record_trip(self, name: str, n: int = 1) -> None:
+        self.entry(name).guard_trips += n
+
+    @property
+    def total_trips(self) -> int:
+        return (self.unattributed_trips
+                + sum(e.guard_trips for e in self.entries.values()))
+
+    def trips(self) -> dict:
+        """Non-zero trip counts per entry (the reprice hook's input)."""
+        return {n: e.guard_trips for n, e in self.entries.items()
+                if e.guard_trips}
+
+    def attribute_trip(self, cache, n: int = 1):
+        """Blame a guard trip on the cache entries holding non-finite
+        values; returns the list of culprit names (empty if the fault
+        never reached the cache → counted as unattributed)."""
+        bad = []
+        for name, entry in _cache_entries(cache):
+            nonfinite = 0
+            for leaf in jax.tree_util.tree_leaves(entry):
+                if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+                    nonfinite += int(jnp.sum(~jnp.isfinite(leaf)))
+            if nonfinite:
+                e = self.entry(name)
+                e.guard_trips += n
+                e.nonfinite += nonfinite
+                bad.append(name)
+        if not bad:
+            self.unattributed_trips += n
+        return bad
+
+    # ------------------------ saturation + shifts ------------------------
+
+    def _entry_values(self, entry):
+        """Float K/V tensors of one entry; packed blocks dequantize."""
+        from repro.kvq import PackedKVBlock  # lazy: kvq pulls in kernels
+
+        leaves = jax.tree_util.tree_flatten_with_path(
+            entry, is_leaf=lambda x: isinstance(x, PackedKVBlock))[0]
+        vals = []
+        for path, leaf in leaves:
+            if isinstance(leaf, PackedKVBlock):
+                vals.append(leaf.dequantize())
+            else:
+                names = [str(getattr(p, "key", p)) for p in path]
+                if names and names[-1].strip("'.[]") in ("k", "v"):
+                    vals.append(jnp.asarray(leaf, jnp.float32))
+        return vals
+
+    def sample_cache(self, cache) -> None:
+        """One health sample of the live cache: per-entry saturation
+        counts under the frozen tensor scale plus alignment-shift
+        histograms (``collect_kv_stats`` form)."""
+        from repro.kernels.ops import quant_sat_stats
+
+        f = get_format(self.probe)
+        for name, entry in _cache_entries(cache):
+            vals = self._entry_values(entry)
+            if not vals:
+                continue
+            e = self.entry(name)
+            for x in vals:
+                x = jnp.reshape(x, (-1, x.shape[-1]))
+                if e.tscale is None:
+                    e.tscale = float(per_tensor_scale(x, f))
+                st = quant_sat_stats(x, f, tscale=e.tscale)
+                e.overflow += st["overflow"]
+                e.underflow += st["underflow"]
+                e.nonfinite += st["nonfinite"]
+                e.total += st["total"]
+                xs = jnp.where(jnp.isfinite(x), x, 0.0) * e.tscale
+                fields = decompose(xs, f)
+                shift, _, nz = group_shifts(fields["e_unb"][..., None, :],
+                                            fields["m_int"][..., None, :])
+                shift, nz = np.asarray(shift), np.asarray(nz)
+                e.shift_hist += np.bincount(
+                    shift[nz].ravel(), minlength=MAX_SHIFT + 1)[:MAX_SHIFT + 1]
+            e.samples += 1
+        self.samples += 1
+
+    def drift(self, baseline: dict) -> dict:
+        """Per-entry TV distance vs stored calibration stats (a dict of
+        entry name → ``KVEntryStats`` or raw histogram)."""
+        return {name: shift_drift(e.shift_hist, baseline[name])
+                for name, e in self.entries.items()
+                if name in baseline and e.shift_hist.sum()}
+
+    def snapshot(self) -> dict:
+        return {"probe": self.probe,
+                "samples": self.samples,
+                "unattributed_trips": self.unattributed_trips,
+                "total_trips": self.total_trips,
+                "entries": {n: e.snapshot()
+                            for n, e in sorted(self.entries.items())}}

@@ -19,6 +19,8 @@ servable artifact:
                   DESIGN.md §10)
   kv_bits.py    — per-entry KV-cache bitwidth pricing from one-pass shift
                   statistics (DSBPPolicy.kv_layers artifacts, DESIGN.md §14)
+  reprice.py    — telemetry-driven widening: obs.QuantHealth guard-trip /
+                  drift signals -> a new DSBPPolicy artifact (DESIGN.md §15)
 """
 from .policy import DSBPPolicy
 from .calibrate import (
@@ -29,6 +31,8 @@ from .calibrate import (
 )
 from .cost import assignment_cost, candidate_ladder, predict_layer_bits
 from .kv_bits import KVEntryStats, collect_kv_stats, kv_dropped_bits, price_kv_bits
+from .reprice import (KV_WIDEN_LADDER, WIDEN_LADDER, reprice_from_telemetry,
+                      widen_config)
 from .search import autotune
 from .spec_bits import price_draft_bits
 
@@ -47,4 +51,8 @@ __all__ = [
     "collect_kv_stats",
     "kv_dropped_bits",
     "price_kv_bits",
+    "reprice_from_telemetry",
+    "widen_config",
+    "WIDEN_LADDER",
+    "KV_WIDEN_LADDER",
 ]

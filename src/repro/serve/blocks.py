@@ -111,6 +111,20 @@ class BlockAllocator:
         """Blocks physically shared right now (refcount > 1)."""
         return int(np.sum(self._ref[1:] > 1))
 
+    @property
+    def utilization(self) -> float:
+        """Used fraction of the usable pool (scratch block 0 excluded)."""
+        return self.used_blocks / max(self.num_blocks - 1, 1)
+
+    def stats(self) -> dict:
+        """Point-in-time gauge snapshot (the obs recorder samples this
+        every paged scheduler iteration, DESIGN.md §15)."""
+        return {"used": self.used_blocks,
+                "free": self.free_blocks,
+                "shared": self.shared_blocks(),
+                "peak_used": self.peak_used,
+                "utilization": self.utilization}
+
     # -- alloc / share / free ------------------------------------------
     def alloc(self, n: int = 1) -> list[int]:
         if n > len(self._free):
@@ -267,6 +281,12 @@ class PrefixCache:
         """Physical ids the cache currently holds a reference on (one per
         entry — used by the invariant checker)."""
         return [e.bid for e in self._by_hash.values()]
+
+    @property
+    def hit_rate(self) -> float:
+        """Prefix blocks hit per lookup so far (can exceed 1: one lookup
+        may hit a whole chain of shared blocks)."""
+        return self.hits / max(self.lookups, 1)
 
     def drop_all(self) -> None:
         for e in self._by_hash.values():

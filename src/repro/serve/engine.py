@@ -41,6 +41,7 @@ from repro.core.packed import (key_entry_str, pack_weights_sharded,
 from repro.core.quantized import PRESETS, pack_weights
 from repro.kvq import is_kv_leaf_path, kv_cache_nbytes, tree_has_packed_kv
 from repro.models import model as M
+from repro.obs import ServeRecorder
 
 __all__ = ["ServeConfig", "Request", "Engine", "pack_weights_int8",
            "packed_nbytes", "sample_tokens"]
@@ -183,6 +184,18 @@ class ServeConfig:
     # assert serve/faults.check_invariants after every scheduler iteration
     # (always on while a FaultPlan is active)
     invariant_checks: bool = False
+    # --- observability (DESIGN.md §15) ---
+    # observe=True threads the repro.obs.ServeRecorder through the
+    # scheduler: per-request lifecycle spans (Engine.obs.trace,
+    # Chrome-trace exportable), a metrics registry (Engine.obs.metrics,
+    # JSON/Prometheus snapshots) and quantization-health telemetry
+    # (Engine.obs.health, guard-trip attribution feeding
+    # policy.reprice_from_telemetry).  last_stats is identical either way
+    # — it stays the backwards-compatible snapshot view.
+    observe: bool = False
+    # trace-event capacity; past it events are COUNTED as dropped, never
+    # silently lost (the obs CI gate holds dropped == 0)
+    obs_max_events: int = 200_000
 
 
 @dataclasses.dataclass
@@ -399,6 +412,12 @@ class Engine:
         self._ref_decode_paged_jit = None
         self._last_alloc = None            # post-serve conservation checks
         self._last_prefix = None
+        # --- observability (DESIGN.md §15) ---
+        # one recorder for both schedulers: lifecycle spans, the metrics
+        # registry, and guard-trip health telemetry.  Disabled it is a
+        # bag of no-ops, so every hook below costs one attribute test.
+        self.obs = ServeRecorder(enabled=scfg.observe,
+                                 max_events=scfg.obs_max_events)
         if scfg.pack and preset is not None and not tree_is_packed(params):
             if preset == "policy":
                 raise ValueError(
@@ -732,6 +751,8 @@ class Engine:
                 ctl.status[uid] = "cancelled"
                 ctl.stats["cancelled"] += 1
                 ctl.out.setdefault(uid, [])
+                self.obs.terminal(uid, "cancelled", ctl.step,
+                                  tokens=len(ctl.out[uid]))
             elif any(r.uid == uid for r in queue):
                 rest = [r for r in queue if r.uid != uid]
                 queue.clear()
@@ -739,6 +760,8 @@ class Engine:
                 ctl.status[uid] = "cancelled"
                 ctl.stats["cancelled"] += 1
                 ctl.out.setdefault(uid, [])
+                self.obs.terminal(uid, "cancelled", ctl.step,
+                                  tokens=len(ctl.out[uid]))
         for uid, (r, release) in list(live.items()):
             if r.deadline_steps is None:
                 continue
@@ -748,14 +771,18 @@ class Engine:
                 ctl.status[uid] = "deadline"
                 ctl.stats["deadline_expired"] += 1
                 ctl.out.setdefault(uid, [])
+                self.obs.terminal(uid, "deadline", ctl.step,
+                                  tokens=len(ctl.out[uid]))
 
     def _apply_guard(self, logits, occ, uid_of, ctl: _ServeControl, *,
-                     retry: bool = False, inject: bool = True):
+                     retry: bool = False, inject: bool = True, cache=None):
         """Fault injection + numeric guard over one step's sampling logits.
         ``occ`` are the row/lane ids actually serving; ``uid_of(i)`` names
         them for diagnostics.  Returns ``(logits, bad_ids)`` — the caller
         applies its policy action (quarantine / fallback retry) to
-        ``bad_ids``.  'fail-fast' raises here."""
+        ``bad_ids``.  'fail-fast' raises here.  ``cache`` (the post-step
+        KV tree) lets the recorder attribute the trip to the cache entry a
+        real numeric fault poisoned (DESIGN.md §15)."""
         faults = ctl.faults
         if faults is not None and inject:
             logits = faults.corrupt_logits(logits, occ, retry=retry)
@@ -766,6 +793,10 @@ class Engine:
         bad = [i for i in occ if not finite[i]]
         if bad:
             ctl.stats["numeric_faults"] += len(bad)
+            # telemetry BEFORE the policy action, while the cache still
+            # holds whatever the fault wrote
+            self.obs.guard_trip([uid_of(i) for i in bad], ctl.step,
+                                cache=cache)
             if self._guard == "fail-fast":
                 from repro.serve.faults import NumericFault
 
@@ -777,6 +808,8 @@ class Engine:
         ctl.status[uid] = "quarantined"
         ctl.stats["quarantined"] += 1
         ctl.out.setdefault(uid, [])
+        self.obs.terminal(uid, "quarantined", ctl.step,
+                          tokens=len(ctl.out[uid]))
 
     def _ref_decode(self):
         """Lazily-jitted dense decode through the reference quant path (the
@@ -811,6 +844,8 @@ class Engine:
         """Terminal bookkeeping for a request that completed its stream:
         'ok', or 'preempted' when it survived >= 1 eviction on the way."""
         ctl.status[uid] = "preempted" if ctl.preempts.get(uid) else "ok"
+        self.obs.terminal(uid, ctl.status[uid], ctl.step,
+                          tokens=len(ctl.out.get(uid) or ()))
 
     @staticmethod
     def _requeue(queue, r: Request) -> None:
@@ -933,8 +968,11 @@ class Engine:
             return self._serve_paged(requests, max_new_tokens, faults)
         queue = self._build_queue(requests, max_new_tokens)
         nreq = len(queue)
+        self.obs.serve_start("dense", [(r.uid, len(r.tokens))
+                                       for r in queue])
         if faults is not None:
             faults.reset()
+            faults.observer = self.obs.fault_injected
         B = self.pool_size
         pool = self._shard_cache(
             M.init_cache(cfg, B, scfg.max_len, kv=self.kv_spec), B)
@@ -979,12 +1017,15 @@ class Engine:
                     ctl.step += 1
                     continue  # every admitted request finished at token 1
                 stats["decode_steps"] += 1
-                stats["occupied_lanes"] += sum(s is not None for s in active)
+                n_occ = sum(s is not None for s in active)
+                stats["occupied_lanes"] += n_occ
                 t_step = time.perf_counter()
                 if self._spec is not None:
                     pool = self._spec_advance(pool, active, tok, pos, ctl,
                                               slot_accepted, slot_rounds)
-                    stats["decode_time_s"] += time.perf_counter() - t_step
+                    dt = time.perf_counter() - t_step
+                    stats["decode_time_s"] += dt
+                    self.obs.decode_step(ctl.step, n_occ, dt)
                     ctl.step += 1
                     continue
                 occ = [i for i in range(B) if active[i] is not None]
@@ -994,7 +1035,8 @@ class Engine:
                     jnp.asarray(pos),
                 )
                 last, bad = self._apply_guard(
-                    logits[:, -1], occ, lambda i: active[i].uid, ctl)
+                    logits[:, -1], occ, lambda i: active[i].uid, ctl,
+                    cache=pool)
                 if bad and self._guard == "fallback":
                     # retry the whole step through the reference quant path
                     # from the (undonated) pre-step cache — a fused-kernel
@@ -1005,14 +1047,16 @@ class Engine:
                         prev, jnp.asarray(pos))
                     last, bad = self._apply_guard(
                         logits[:, -1], occ, lambda i: active[i].uid, ctl,
-                        retry=True)
+                        retry=True, cache=pool)
                 for i in bad:
                     self._quarantine(
                         active[i].uid, ctl,
                         functools.partial(active.__setitem__, i, None))
                 nxt, rng = self._sample_next(jnp.asarray(last), rng)
                 nxt = np.asarray(nxt)  # device sync: step wall cost lands here
-                stats["decode_time_s"] += time.perf_counter() - t_step
+                dt = time.perf_counter() - t_step
+                stats["decode_time_s"] += dt
+                self.obs.decode_step(ctl.step, n_occ, dt)
                 for i in range(B):
                     r = active[i]
                     if r is None:
@@ -1043,19 +1087,24 @@ class Engine:
                 kv_packed=tree_has_packed_kv(pool),
             )
             if self._spec is not None:
-                self.last_stats["accepted_hist"] = (
-                    stats["accepted_hist"].tolist())
-                self.last_stats["mean_accepted"] = (
-                    float(np.dot(stats["accepted_hist"],
-                                 np.arange(scfg.spec_k + 2)))
-                    / max(int(stats["accepted_hist"].sum()), 1))
-                self.last_stats["slot_mean_accepted"] = [
-                    float(a) / max(int(n), 1)
-                    for a, n in zip(slot_accepted, slot_rounds)]
+                self._spec_summary(stats, slot_accepted, slot_rounds)
+            self.obs.serve_end(self.last_stats)
         for uid in ctl.status:  # every uid reports, however it ended
             ctl.out.setdefault(uid, [])
         return {uid: np.asarray(toks, np.int64)
                 for uid, toks in ctl.out.items()}
+
+    def _spec_summary(self, stats, slot_accepted=None,
+                      slot_rounds=None) -> None:
+        """Speculation epilogue shared by both schedulers: fold the
+        accepted-length histogram into ``last_stats`` (dense additionally
+        reports per-slot means) and mirror it into the recorder."""
+        from repro.spec.decode import acceptance_summary
+
+        self.last_stats.update(acceptance_summary(
+            stats["accepted_hist"], self.scfg.spec_k,
+            slot_accepted=slot_accepted, slot_rounds=slot_rounds))
+        self.obs.spec_summary(self.last_stats)
 
     def _spec_advance(self, pool, active, tok, pos, ctl, slot_accepted,
                       slot_rounds):
@@ -1085,6 +1134,8 @@ class Engine:
             bad = [i for i in occ if not finite[i]]
             if bad:
                 stats["numeric_faults"] += len(bad)
+                self.obs.guard_trip([active[i].uid for i in bad], ctl.step,
+                                    cache=pool)
                 if self._guard == "fail-fast":
                     from repro.serve.faults import NumericFault
 
@@ -1096,6 +1147,8 @@ class Engine:
         stats["spec_rounds"] += 1
         stats["draft_tokens"] += self.scfg.spec_k * sum(
             s is not None for s in active)
+        self.obs.spec_round(ctl.step, [int(keep[i]) for i, s
+                                       in enumerate(active) if s is not None])
         for i in range(len(active)):
             r = active[i]
             if r is None:
@@ -1127,6 +1180,8 @@ class Engine:
         stats = ctl.stats
         group = [queue.popleft() for _ in range(min(len(free), len(queue)))]
         lens = np.asarray([len(r.tokens) for r in group], np.int32)
+        for j, r in enumerate(group):
+            self.obs.admitted(r.uid, ctl.step, prompt_len=int(lens[j]))
         bucket = scfg.prefill_bucket
         L = max(-(-int(lens.max()) // bucket) * bucket, bucket)
         toks = np.zeros((len(group), L), np.int64)
@@ -1160,6 +1215,7 @@ class Engine:
             t = int(first[j])
             ctl.out[r.uid] = [t]
             ctl.admit_step.setdefault(r.uid, ctl.step)
+            self.obs.first_token(r.uid, ctl.step)
             if self._done(t, ctl.out[r.uid], r):
                 self._finish(ctl, r.uid)
                 continue  # finished at its first token: slot stays free
@@ -1211,8 +1267,11 @@ class Engine:
                         f"idle pool: its reservation ({span} blocks) exceeds "
                         f"kv_blocks={self.kv_blocks} ({self.kv_blocks - 1} "
                         f"usable)")
+        self.obs.serve_start("paged", [(r.uid, len(r.tokens))
+                                       for r in queue])
         if faults is not None:
             faults.reset()
+            faults.observer = self.obs.fault_injected
         check = scfg.invariant_checks or faults is not None
         alloc = None
         if self._kv_scs:
@@ -1294,6 +1353,7 @@ class Engine:
                 if alloc is not None:
                     stats["shared_blocks_peak"] = max(
                         stats["shared_blocks_peak"], alloc.shared_blocks())
+                    self.obs.pool_sample(ctl.step, alloc, prefix)
                 if dec:
                     t_step = time.perf_counter()
                     # COW before the step: every ring slot this round writes
@@ -1327,7 +1387,7 @@ class Engine:
                             jnp.asarray(live_m))
                         last, bad = self._apply_guard(
                             logits[:, -1], dec,
-                            lambda i: lanes[i]["req"].uid, ctl)
+                            lambda i: lanes[i]["req"].uid, ctl, cache=cache)
                         if bad and self._guard == "fallback":
                             stats["fallback_steps"] += 1
                             logits, cache = self._ref_decode_paged()(
@@ -1337,7 +1397,7 @@ class Engine:
                             last, bad = self._apply_guard(
                                 logits[:, -1], dec,
                                 lambda i: lanes[i]["req"].uid, ctl,
-                                retry=True)
+                                retry=True, cache=cache)
                         for i in bad:
                             self._quarantine(
                                 lanes[i]["req"].uid, ctl,
@@ -1357,7 +1417,9 @@ class Engine:
                             if self._done(t, ctl.out[r.uid], r):
                                 self._release_lane(i, lanes, tables, alloc)
                                 self._finish(ctl, r.uid)
-                    stats["decode_time_s"] += time.perf_counter() - t_step
+                    dt = time.perf_counter() - t_step
+                    stats["decode_time_s"] += dt
+                    self.obs.decode_step(ctl.step, len(dec) + len(chk), dt)
                 if chk:
                     cache, rng = self._chunk_step(
                         cache, lanes, tables, alloc, prefix, queue, chk,
@@ -1403,12 +1465,8 @@ class Engine:
                 kv_packed=tree_has_packed_kv(cache),
             )
             if self._spec_paged is not None:
-                self.last_stats["accepted_hist"] = (
-                    stats["accepted_hist"].tolist())
-                self.last_stats["mean_accepted"] = (
-                    float(np.dot(stats["accepted_hist"],
-                                 np.arange(scfg.spec_k + 2)))
-                    / max(int(stats["accepted_hist"].sum()), 1))
+                self._spec_summary(stats)
+            self.obs.serve_end(self.last_stats)
         for uid in ctl.status:  # every uid reports, however it ended
             ctl.out.setdefault(uid, [])
         return {uid: np.asarray(toks, np.int64)
@@ -1491,6 +1549,8 @@ class Engine:
             bids, n_hit = res
             lane = free.pop(0)
             ctl.admit_step.setdefault(r.uid, ctl.step)
+            self.obs.admitted(r.uid, ctl.step, prompt_len=len(r.tokens),
+                              resumed=bool(done), chunked=chunked)
             if done:
                 stats["resumed"] += 1
             tables[lane, :] = 0
@@ -1557,6 +1617,7 @@ class Engine:
                     prev.append(t)  # preempt-resume: continue the stream
                 else:
                     out[r.uid] = [t]
+                self.obs.first_token(r.uid, ctl.step)
                 if self._done(t, out[r.uid], r):
                     self._release_lane(lane, lanes, tables, alloc)
                     self._finish(ctl, r.uid)
@@ -1609,6 +1670,7 @@ class Engine:
         ctl.preempts[r.uid] = ctl.preempts.get(r.uid, 0) + 1
         ctl.status[r.uid] = "preempted"
         ctl.stats["preemptions"] += 1
+        self.obs.preempted(r.uid, ctl.step)
 
     def _release_lane(self, lane, lanes, tables, alloc):
         """Free one reference on every block the lane's table holds (prefix
@@ -1713,6 +1775,7 @@ class Engine:
             posv[i] = start
             keep[i] = n
             l["done"] = start + n
+            self.obs.chunk(r.uid, ctl.step, n, l["done"], len(r.tokens))
             if l["done"] == len(r.tokens):
                 fin.append((i, n))
         cache = self._cow_writable(
@@ -1757,6 +1820,7 @@ class Engine:
                     prev.append(t)  # preempt-resume continues the stream
                 else:
                     out[r.uid] = [t]
+                self.obs.first_token(r.uid, ctl.step)
                 # register only now — the blocks filled progressively
                 if prefix is not None and len(r.tokens) <= self._share_limit:
                     prefix.register(r.tokens, tables[i])
@@ -1800,6 +1864,8 @@ class Engine:
             bad = [i for i in dec if not finite[i]]
             if bad:
                 stats["numeric_faults"] += len(bad)
+                self.obs.guard_trip([lanes[i]["req"].uid for i in bad],
+                                    ctl.step, cache=cache)
                 if self._guard == "fail-fast":
                     from repro.serve.faults import NumericFault
 
@@ -1813,6 +1879,7 @@ class Engine:
                 dec = [i for i in dec if lanes[i] is not None]
         stats["spec_rounds"] += 1
         stats["draft_tokens"] += self.scfg.spec_k * len(dec)
+        self.obs.spec_round(ctl.step, [int(keep[i]) for i in dec])
         for i in dec:
             r = lanes[i]["req"]
             kp = int(keep[i])

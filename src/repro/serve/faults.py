@@ -177,6 +177,14 @@ class FaultPlan:
         self._n_spec = 0
         self.injected = {"alloc": 0, "cow": 0, "nan": 0, "cancel": 0,
                          "spec": 0}
+        # observability hook: called as observer(kind, index) at every
+        # injection the instant it fires (the engine wires this to
+        # obs.ServeRecorder.fault_injected AFTER reset, DESIGN.md §15)
+        self.observer = None
+
+    def _notify(self, kind: str, index: int) -> None:
+        if self.observer is not None:
+            self.observer(kind, int(index))
 
     def allocator(self, num_blocks: int, block_size: int) -> SB.BlockAllocator:
         """A real BlockAllocator whose alloc/ensure_writable consult this
@@ -188,12 +196,16 @@ class FaultPlan:
         i, self._n_alloc = self._n_alloc, self._n_alloc + 1
         hit = i in self.alloc_failures
         self.injected["alloc"] += hit
+        if hit:
+            self._notify("alloc", i)
         return hit
 
     def _take_cow_fault(self) -> bool:
         i, self._n_cow = self._n_cow, self._n_cow + 1
         hit = i in self.cow_failures
         self.injected["cow"] += hit
+        if hit:
+            self._notify("cow", i)
         return hit
 
     def corrupt_logits(self, last, occupied, *, retry: bool = False):
@@ -221,6 +233,7 @@ class FaultPlan:
         out = np.array(last, np.float32, copy=True)
         out[np.asarray(lanes, np.int32)] = np.nan
         self.injected["nan"] += 1
+        self._notify("nan", i)
         return out
 
     def corrupt_finite(self, finite, occupied):
@@ -241,12 +254,15 @@ class FaultPlan:
         out = np.array(finite, bool, copy=True)
         out[np.asarray(lanes, np.int32)] = False
         self.injected["nan"] += 1
+        self._notify("nan", i)
         return out
 
     def cancels_at(self, step: int):
         """Request uids the plan cancels at scheduler iteration ``step``."""
         uids = self.cancels.get(int(step), ())
         self.injected["cancel"] += len(tuple(uids))
+        if uids:
+            self._notify("cancel", step)
         return tuple(uids) if not isinstance(uids, (str, bytes)) else (uids,)
 
     def clip_spec_keep(self, keep):
@@ -256,6 +272,7 @@ class FaultPlan:
         if i not in self.spec_mismatch_rounds:
             return keep
         self.injected["spec"] += 1
+        self._notify("spec", i)
         return np.minimum(np.asarray(keep), 1) * (np.asarray(keep) > 0)
 
 

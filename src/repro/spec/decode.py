@@ -29,13 +29,39 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kvq import kv_narrow_view
 from repro.models import model as M
 
 from .draft import DEFAULT_DRAFT_BITS, draft_params
 
-__all__ = ["greedy_accept", "build_spec_round", "build_spec_round_paged"]
+__all__ = ["greedy_accept", "acceptance_summary", "build_spec_round",
+           "build_spec_round_paged"]
+
+
+def acceptance_summary(accepted_hist, spec_k: int, slot_accepted=None,
+                       slot_rounds=None) -> dict:
+    """Summary stats of one serve call's accepted-length histogram.
+
+    ``accepted_hist[j]`` counts rounds that committed ``j`` tokens
+    (j in [0, spec_k+1]; 0 = idle round).  Returns ``accepted_hist``
+    (as a list) and ``mean_accepted``; with the dense scheduler's
+    per-slot accumulators also ``slot_mean_accepted``.  This is the ONE
+    spec epilogue both schedulers report through
+    (``Engine._spec_summary``) — previously two copy-pasted blocks.
+    """
+    hist = np.asarray(accepted_hist, np.int64)
+    out = {
+        "accepted_hist": hist.tolist(),
+        "mean_accepted": (float(np.dot(hist, np.arange(spec_k + 2)))
+                          / max(int(hist.sum()), 1)),
+    }
+    if slot_accepted is not None and slot_rounds is not None:
+        out["slot_mean_accepted"] = [
+            float(a) / max(int(n), 1)
+            for a, n in zip(slot_accepted, slot_rounds)]
+    return out
 
 
 def greedy_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
